@@ -1,0 +1,125 @@
+"""Paper Fig. 10: preprocessing cost of k concurrent hyperparameter-tuning
+jobs under three deployment modes.
+
+  A — one shared deployment, data sharing ON   (cost ≈ 1x, flat in k)
+  B — one shared deployment, sharing OFF       (contention: time grows)
+  C — k dedicated deployments                  (cost grows linearly in k)
+
+Real tier: actual producer-call counts through the SlidingWindowCache for
+k = 1..16 concurrent jobs (the compute-saving mechanism, measured), plus a
+REAL two-job shared service run.  Sim tier: normalized preprocessing cost
+for the paper's 128-worker deployment across k = {1,2,4,8,16}.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List
+
+import numpy as np
+
+from repro.core import SlidingWindowCache, start_service
+from repro.data import Dataset
+
+from .common import Row, print_rows
+
+
+def real_cache_compute_savings() -> List[Row]:
+    rows: List[Row] = []
+    N = 400
+    for k in (1, 2, 4, 8, 16):
+        calls = [0]
+
+        def producer():
+            for i in range(N):
+                calls[0] += 1
+                yield i
+
+        cache = SlidingWindowCache(producer(), capacity=32)
+        jobs = [f"job{i}" for i in range(k)]
+        for j in jobs:
+            cache.attach(j)
+
+        def run(j):
+            while True:
+                _, end = cache.read(j)
+                if end:
+                    return
+
+        ts = [threading.Thread(target=run, args=(j,)) for j in jobs]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        rows.append(Row(
+            f"real_producer_calls_k{k}", calls[0], "batches", "real",
+            f"mode A: {k} jobs share one computation (no-sharing = {k * N})",
+        ))
+    return rows
+
+
+def real_shared_service_two_jobs() -> List[Row]:
+    rows: List[Row] = []
+    svc = start_service(num_workers=2, cache_capacity=64)
+    try:
+        pipe = Dataset.range(64).map(lambda x: x * 2).batch(8)
+        results = {}
+
+        def consume(i):
+            dds = pipe.distribute(
+                service=svc, processing_mode="off", sharing=True,
+                job_name="sweep",
+            )
+            results[i] = sum(1 for _ in dds)
+
+        ts = [threading.Thread(target=consume, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+        produced = 0
+        for w in svc.orchestrator.live_workers:
+            for c in w._caches.values():
+                produced += c.stats.produced
+        served = sum(results.values())
+        rows.append(Row("real_svc_batches_served", served, "batches", "real",
+                        "2 concurrent jobs, sharing on"))
+        rows.append(Row("real_svc_batches_produced", produced, "batches", "real",
+                        "< served => compute shared across jobs"))
+    finally:
+        svc.orchestrator.stop()
+    return rows
+
+
+def sim_modes() -> List[Row]:
+    """Normalized preprocessing cost vs k (paper Fig. 10).
+
+    Mode A: one deployment, sharing — cost 1x for any k (measured above:
+    producer calls don't scale with k).  Mode B: one deployment, no sharing
+    — k jobs divide 128 workers; the model is input-bound past k=4, so job
+    time (and thus cost) stretches by k/4.  Mode C: k deployments — k× cost.
+    Anchors from the paper: B at k=8 -> 1.75x slower; k=16 -> 3x.
+    """
+    rows: List[Row] = []
+    ks = (1, 2, 4, 8, 16)
+    capacity_jobs = 4  # 128 workers feed up to 4 jobs at full rate (paper)
+    for k in ks:
+        a = 1.0
+        b = k * max(1.0, k / capacity_jobs)  # k jobs × stretched job time
+        b_cost = max(1.0, k / capacity_jobs)  # preprocessing resource-hours
+        c = float(k)
+        rows.append(Row(f"sim_cost_modeA_k{k}", a, "x", "sim", "shared+sharing"))
+        rows.append(Row(f"sim_cost_modeB_k{k}", b_cost, "x", "sim",
+                        f"shared, no sharing; job time x{max(1.0, k/capacity_jobs):.2f} "
+                        "(paper: 1.75x@8, 3x@16)"))
+        rows.append(Row(f"sim_cost_modeC_k{k}", c, "x", "sim", "dedicated deployments"))
+    return rows
+
+
+def main() -> List[Row]:
+    rows = real_cache_compute_savings() + real_shared_service_two_jobs() + sim_modes()
+    print_rows(rows, "Fig10 ephemeral data sharing: cost by deployment mode")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Paper Fig. 8 (a: speedup, b: cost): horizontal scale-out for input-bound
+jobs.
+
+Real tier: measures (on this machine) the per-batch preprocessing cost of a
+vision-style augmentation pipeline and of a service hop (RPC+serialization),
+plus a REAL small-scale colocated-vs-2-worker service run.  Sim tier: the
+validated event model sweeps the paper's worker counts for four M-like
+workloads whose CPU:accelerator cost ratios bracket the paper's M1–M3 +
+ResNet50 mix, reporting speedup and Eq.-1 cost saving.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import CostRates, GCP_RATES, JobResources, cost_saving, start_service
+
+# The paper's production jobs run TPU v4 (≈$3.22/chip-h public on-demand) —
+# accelerator-heavy rates; the open-source anchor is the v2-8 GCP_RATES.
+V4_RATES = CostRates(
+    cpu_per_core_hour=GCP_RATES.cpu_per_core_hour,
+    mem_per_gb_hour=GCP_RATES.mem_per_gb_hour,
+    acc_per_chip_hour=3.22,
+)
+from repro.data import Dataset
+from repro.data.elements import decode_element, encode_element
+
+from .common import Row, SimParams, print_rows, simulate_throughput, time_fn
+
+
+def vision_batch_pipeline(n_images=64, hw=64, batch=8):
+    """Decode + crop + flip + normalize 'images' (synthetic, CPU-costed)."""
+    rng = np.random.default_rng(0)
+    imgs = [rng.integers(0, 256, (hw, hw, 3)).astype(np.uint8) for _ in range(n_images)]
+
+    def augment(i):
+        img = imgs[int(i) % n_images].astype(np.float32)
+        y, x = int(i) % 8, (int(i) * 3) % 8
+        img = img[y : y + hw - 8, x : x + hw - 8]
+        if int(i) % 2:
+            img = img[:, ::-1]
+        return (img / 255.0 - 0.45) / 0.22
+
+    return Dataset.range(n_images).map(augment).batch(batch)
+
+
+def measure_real() -> List[Row]:
+    rows: List[Row] = []
+    ds = vision_batch_pipeline()
+
+    batches = []
+    t_pipe = time_fn(lambda: batches.extend(ds.as_numpy()), repeat=3)
+    n_batches = len(batches) / 3
+    batch_cost = t_pipe / max(1, len(ds.as_numpy()))
+    rows.append(Row("preproc_cost_per_batch", batch_cost, "s", "real",
+                    "vision augment pipeline, batch=8 64px"))
+
+    # serialization + RPC hop cost (the client-side ingest bound)
+    elem = ds.as_numpy()[0]
+    enc = encode_element(elem)
+    t_ser = time_fn(lambda: encode_element(elem), repeat=20)
+    t_de = time_fn(lambda: decode_element(enc), repeat=20)
+    rows.append(Row("serialize_per_batch", t_ser, "s", "real", f"{len(enc)} bytes"))
+    rows.append(Row("deserialize_per_batch", t_de, "s", "real", ""))
+
+    # real colocated vs 2-worker service throughput (1 core: contention-real)
+    t0 = time.perf_counter()
+    local = sum(1 for _ in ds)
+    t_colo = time.perf_counter() - t0
+    svc = start_service(num_workers=2)
+    try:
+        dds = ds.distribute(service=svc, processing_mode="dynamic")
+        t0 = time.perf_counter()
+        remote = sum(1 for _ in dds)
+        t_svc = time.perf_counter() - t0
+    finally:
+        svc.orchestrator.stop()
+    rows.append(Row("colocated_batches_per_s", local / t_colo, "batches/s", "real", ""))
+    rows.append(Row("service2w_batches_per_s", remote / t_svc, "batches/s", "real",
+                    "same machine: upper-bounds service overhead, not speedup"))
+    return rows, batch_cost, t_ser + t_de
+
+
+def sweep_sim(batch_cost: float, rpc: float) -> List[Row]:
+    """Sim tier anchored on the paper's §4.2 workload parameters:
+
+      colocated batches/s and ideal batches/s are the paper's measured
+      values for M1/M2/M3/ResNet50; per-batch CPU cost follows from the
+      colocated rate; the client ingest ceiling uses OUR measured
+      serialization rate scaled to ~1 MB vision batches.  Worker counts and
+      trainer hardware are the paper's (442/421/128/16 workers; 32/8/16/8
+      accelerators).
+    """
+    rows: List[Row] = []
+    per_mb = rpc / 0.3  # measured on a 0.3 MB batch -> s/MB
+    # name: (colo b/s, ideal b/s, workers, trainers, accel/trainer, batch_MB)
+    paper = {
+        "M1": (0.55, 6.47, 442, 4, 8, 4.0),
+        "M2": (4.7, 563.0, 421, 1, 8, 1.0),
+        "M3": (22.2, 64.4, 128, 2, 8, 1.0),
+        "ResNet50": (1.75, 4.5, 16, 1, 8, 12.0),  # 1024x224x224x3 bf16-ish
+    }
+    speedups, savings = [], []
+    for name, (colo_bps, ideal_bps, workers, trainers, acc, mb) in paper.items():
+        p = SimParams(
+            step_time_s=1.0 / ideal_bps,
+            batch_cost_s=1.0 / colo_bps,  # colocated host ≡ 1 "core-set"
+            rpc_overhead_s=per_mb * mb,
+            worker_parallelism=1,
+            local_cores=1,
+        )
+        colo = simulate_throughput(p, num_workers=0)["batches_per_s"]
+        got = simulate_throughput(p, num_workers=workers)["batches_per_s"]
+        speedup = got / colo
+        speedups.append(speedup)
+        dur = 1.0
+        colo_res = JobResources(duration_hours=dur, num_trainers=trainers,
+                                accelerators_per_trainer=acc)
+        dis_res = JobResources(
+            duration_hours=dur / speedup,
+            num_workers=workers,
+            worker_cpu_util_cores=6.0,  # ~75% of an n2-standard-8
+            worker_mem_util_gb=24.0,
+            num_trainers=trainers,
+            accelerators_per_trainer=acc,
+        )
+        rates = GCP_RATES if name == "ResNet50" else V4_RATES
+        saving = cost_saving(colo_res, dis_res, rates)
+        savings.append(saving)
+        ingest_cap = 1.0 / p.rpc_overhead_s
+        note = f"{workers} workers; ingest cap {ingest_cap:.0f} b/s"
+        rows.append(Row(f"speedup_{name}", speedup, "x", "sim", note))
+        rows.append(Row(f"cost_saving_{name}", saving, "x", "sim",
+                        "Eq.1 " + ("v2-8 rates" if name == "ResNet50" else "v4 rates")))
+    rows.append(Row("speedup_avg", float(np.mean(speedups)), "x", "sim",
+                    "paper reports 31.7x avg"))
+    rows.append(Row("cost_saving_avg", float(np.mean(savings)), "x", "sim",
+                    "paper reports 26.2x avg (production rates undisclosed)"))
+    return rows
+
+
+def main() -> List[Row]:
+    real_rows, batch_cost, rpc = measure_real()
+    rows = real_rows + sweep_sim(batch_cost, rpc)
+    print_rows(rows, "Fig8 horizontal scale-out: speedup + cost")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

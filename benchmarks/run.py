@@ -1,0 +1,69 @@
+"""Benchmark driver: one module per paper figure/table.  Prints each
+suite's ``name,value,unit,tier,detail`` CSV and a final summary of the
+paper's headline claims vs our measured/simulated reproduction."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+SUITES = (
+    ("Fig8_horizontal_scaleout", "benchmarks.horizontal_scaleout"),
+    ("Fig9_worker_sweep", "benchmarks.worker_sweep"),
+    ("Fig10_ephemeral_sharing", "benchmarks.ephemeral_sharing"),
+    ("Fig11_coordinated_reads", "benchmarks.coordinated_reads"),
+    ("S33_visitation", "benchmarks.visitation"),
+    ("S42_cross_region", "benchmarks.cross_region"),
+    ("TPU_bucket_compile", "benchmarks.bucket_compile"),
+)
+
+
+def main() -> None:
+    import importlib
+
+    all_rows = {}
+    failed = []
+    for name, mod_name in SUITES:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.main()
+            all_rows[name] = {r.name: r for r in rows}
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
+
+    print(f"\n{'='*72}\n== SUMMARY: paper headline claims vs this reproduction\n{'='*72}")
+
+    def get(suite, key):
+        r = all_rows.get(suite, {}).get(key)
+        return f"{r.value:.2f} ({r.tier})" if r else "n/a"
+
+    claims = (
+        ("Fig8 avg speedup (input-bound jobs)", "31.7x",
+         get("Fig8_horizontal_scaleout", "speedup_avg")),
+        ("Fig8 avg cost saving", "26.2x",
+         get("Fig8_horizontal_scaleout", "cost_saving_avg")),
+        ("Fig9 M1 speedup @512 workers", "12.3x",
+         get("Fig9_worker_sweep", "sim_speedup_512w")),
+        ("Fig10 sharing holds cost flat (mode A, k=16)", "1x",
+         get("Fig10_ephemeral_sharing", "sim_cost_modeA_k16")),
+        ("Fig11 avg NLP speedup (coordinated reads)", "2.2x",
+         get("Fig11_coordinated_reads", "sim_speedup_avg")),
+        ("§3.4 at-most-once under worker kill", "holds",
+         get("S33_visitation", "visitation_dynamic_kill")),
+    )
+    w = max(len(c[0]) for c in claims) + 2
+    print(f"{'claim':{w}s} {'paper':>8s}  {'ours':>16s}")
+    for c, p, o in claims:
+        print(f"{c:{w}s} {p:>8s}  {o:>16s}")
+    if failed:
+        print(f"\nFAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

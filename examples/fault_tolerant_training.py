@@ -1,0 +1,60 @@
+"""Fault-tolerance drill (paper §3.4): kill a data worker AND the
+dispatcher mid-training; training rides through both and data is visited
+at-most-once.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import threading
+
+import numpy as np
+
+from repro.core import LocalOrchestrator
+from repro.data import Dataset
+
+N = 600
+
+
+def main() -> None:
+    orch = LocalOrchestrator(
+        num_workers=3, journal=True, heartbeat_timeout=0.8, gc_interval=0.2
+    )
+    svc = orch.start()
+    seen = []
+    try:
+        ds = Dataset.range(N).batch(2).distribute(
+            service=svc, processing_mode="dynamic"
+        )
+        for i, batch in enumerate(ds):
+            seen.extend(np.asarray(batch).ravel().tolist())
+            if i == 20:
+                victim = orch.kill_worker(0)
+                print(f"step {i}: killed worker {victim.worker_id} (no warning)")
+            if i == 60:
+                # dispatcher outage: clients drain worker buffers, then DYNAMIC
+                # workers stall (no one to hand out shards) — so the restart
+                # must be time-based, exactly like a supervisor would do it
+                print(f"step {i}: killed the DISPATCHER (auto-restart in 1.5s)")
+                orch.kill_dispatcher()
+
+                def _restart():
+                    orch.restart_dispatcher()
+                    print("  supervisor: dispatcher restarted from its journal")
+
+                threading.Timer(1.5, _restart).start()
+            if i == 120:
+                orch.add_worker()
+                print(f"step {i}: scaled out a replacement worker")
+    finally:
+        orch.stop()
+
+    uniq = set(seen)
+    print(f"\nelements received : {len(seen)}")
+    print(f"unique elements   : {len(uniq)}  (duplicates: {len(seen)-len(uniq)})")
+    print(f"elements lost     : {N - len(uniq)} "
+          f"(in-flight shards of the killed worker — at-most-once, §3.4)")
+    assert len(seen) == len(uniq), "at-most-once violated!"
+    print("at-most-once visitation: HOLDS")
+
+
+if __name__ == "__main__":
+    main()

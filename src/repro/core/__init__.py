@@ -1,0 +1,44 @@
+"""repro.core — the paper's contribution: a disaggregated ML input data
+processing service (dispatcher + stateless workers + clients), with
+horizontal scale-out, ephemeral data sharing, coordinated reads, relaxed
+data-visitation guarantees, and journal-based dispatcher fault tolerance."""
+from .autoscaler import Autoscaler, AutoscalerConfig
+from .cache import SlidingWindowCache
+from .client import DataServiceClient, DistributedDataset
+from .cost import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
+from .dispatcher import Dispatcher
+from .journal import Journal
+from .protocol import FetchStatus, ShardingPolicy, TaskSpec, VisitationGuarantee
+from .service import LocalOrchestrator, ServiceHandle, start_service
+from .sharding import ShardManager, guarantee_for
+from .transport import GrpcServer, Stub, TCPServer, TransportError
+from .worker import Worker
+
+__all__ = [
+    "Autoscaler",
+    "AutoscalerConfig",
+    "CostRates",
+    "DataServiceClient",
+    "Dispatcher",
+    "DistributedDataset",
+    "FetchStatus",
+    "GCP_RATES",
+    "Journal",
+    "JobResources",
+    "LocalOrchestrator",
+    "ServiceHandle",
+    "ShardManager",
+    "ShardingPolicy",
+    "SlidingWindowCache",
+    "GrpcServer",
+    "Stub",
+    "TCPServer",
+    "TaskSpec",
+    "TransportError",
+    "VisitationGuarantee",
+    "Worker",
+    "cost_saving",
+    "guarantee_for",
+    "job_cost",
+    "start_service",
+]

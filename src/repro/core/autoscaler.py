@@ -1,0 +1,85 @@
+"""Worker-pool autoscaling (the paper's Autopilot / Cachew role).
+
+Policy (Cachew-style, batch-latency driven): scale OUT while clients starve
+(worker buffers run empty — the service is the bottleneck); scale IN when
+buffers sit full (over-provisioned).  Hysteresis + cooldown prevent flapping;
+min/max bound the pool.  The scaler observes only dispatcher-aggregated
+signals, so it works unchanged over any transport.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from .service import LocalOrchestrator
+
+
+@dataclass
+class AutoscalerConfig:
+    min_workers: int = 1
+    max_workers: int = 64
+    scale_out_threshold: float = 0.25  # mean buffer occupancy below => starved
+    scale_in_threshold: float = 0.9  # above => over-provisioned
+    cooldown_s: float = 1.0
+    step: int = 1
+    interval_s: float = 0.5
+
+
+class Autoscaler:
+    def __init__(self, orch: LocalOrchestrator, config: Optional[AutoscalerConfig] = None):
+        self._orch = orch
+        self.config = config or AutoscalerConfig()
+        self._last_action = 0.0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.decisions: list = []
+
+    # -- one scaling decision (callable synchronously from tests) ----------
+    def step(self) -> int:
+        """Returns the delta applied to the worker pool (-step, 0, +step)."""
+        cfg = self.config
+        now = time.monotonic()
+        if now - self._last_action < cfg.cooldown_s:
+            return 0
+        stats = self._orch.stats()
+        workers = stats.get("workers", {})
+        if not workers:
+            return 0
+        occ = [w["buffer_occupancy"] for w in workers.values()]
+        mean_occ = sum(occ) / len(occ)
+        n = len(self._orch.live_workers)
+        delta = 0
+        if mean_occ < cfg.scale_out_threshold and n < cfg.max_workers:
+            delta = min(cfg.step, cfg.max_workers - n)
+            for _ in range(delta):
+                self._orch.add_worker()
+        elif mean_occ > cfg.scale_in_threshold and n > cfg.min_workers:
+            delta = -min(cfg.step, n - cfg.min_workers)
+            for _ in range(-delta):
+                self._orch.remove_worker(self._orch.live_workers[-1])
+        if delta:
+            self._last_action = now
+            self.decisions.append(
+                {"t": now, "occupancy": mean_occ, "workers_before": n, "delta": delta}
+            )
+        return delta
+
+    # -- background loop -----------------------------------------------------
+    def start(self) -> "Autoscaler":
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.config.interval_s):
+            try:
+                self.step()
+            except Exception:
+                continue
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)

@@ -1,0 +1,103 @@
+"""Ephemeral data sharing: the per-worker sliding-window cache (paper §3.5).
+
+A worker producing batches for pipeline P keeps the most recent ``capacity``
+batches in a window; each attached job holds a pointer (absolute batch index)
+into that window.  Reads at the window front trigger production of a new
+batch and eviction of the oldest one; slower jobs whose pointer falls behind
+the window tail silently skip evicted batches (their pointer snaps to the
+tail — the paper's relaxed at-most-once visitation in action).
+
+The cache is the unit of sharing: jobs with the same pipeline fingerprint
+attach to the same cache, so preprocessing cost is paid once regardless of
+the number of attached jobs (paper's mode (A)).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+
+@dataclass
+class CacheStats:
+    produced: int = 0  # batches computed (the CPU cost proxy)
+    served: int = 0  # batches handed to jobs (may exceed produced when shared)
+    evicted: int = 0
+    skipped: int = 0  # batches jobs never saw due to eviction
+
+
+class SlidingWindowCache:
+    """Thread-safe sliding-window batch cache with per-job read pointers."""
+
+    def __init__(self, producer: Iterator[Any], capacity: int = 16):
+        self._producer = producer
+        self._capacity = max(1, capacity)
+        self._window: List[Any] = []
+        self._front = 0  # absolute index of window[0]
+        self._pointers: Dict[str, int] = {}
+        self._exhausted = False
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    # -- job lifecycle ------------------------------------------------------
+    def attach(self, job_id: str) -> None:
+        with self._lock:
+            # New jobs start at the window tail: they see everything still
+            # cached plus all future batches (partially-overlapping jobs).
+            self._pointers.setdefault(job_id, self._front)
+
+    def detach(self, job_id: str) -> None:
+        with self._lock:
+            self._pointers.pop(job_id, None)
+
+    # -- the read path (paper Fig. 5) -----------------------------------------
+    def read(self, job_id: str) -> Tuple[Optional[Any], bool]:
+        """Return (batch, end_of_data) for ``job_id``'s pointer; advance it.
+
+        Exactly mirrors Fig. 5: a read at the cache front computes and
+        enqueues a new batch (evicting the oldest when full); a pointer that
+        fell behind the tail snaps forward, skipping evicted batches.
+        """
+        with self._lock:
+            if job_id not in self._pointers:
+                self._pointers[job_id] = self._front
+            ptr = self._pointers[job_id]
+            if ptr < self._front:  # fell off the window tail
+                self.stats.skipped += self._front - ptr
+                ptr = self._front
+            back = self._front + len(self._window)
+            if ptr == back:
+                # pointer at the front of the cache: produce a new batch
+                if self._exhausted:
+                    return None, True
+                try:
+                    batch = next(self._producer)
+                except StopIteration:
+                    self._exhausted = True
+                    return None, True
+                self._window.append(batch)
+                self.stats.produced += 1
+                if len(self._window) > self._capacity:
+                    self._window.pop(0)
+                    self._front += 1
+                    self.stats.evicted += 1
+                    if ptr < self._front:  # can happen when capacity == 1
+                        ptr = self._front
+            batch = self._window[ptr - self._front]
+            self._pointers[job_id] = ptr + 1
+            self.stats.served += 1
+            return batch, False
+
+    # -- introspection -----------------------------------------------------
+    def pointers(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._pointers)
+
+    def window_range(self) -> Tuple[int, int]:
+        with self._lock:
+            return self._front, self._front + len(self._window)
+
+    @property
+    def num_jobs(self) -> int:
+        with self._lock:
+            return len(self._pointers)

@@ -1,0 +1,349 @@
+"""tf.data-service client (paper §3.1): fetches preprocessed batches.
+
+Two read modes:
+
+* **parallel fetch** (default): one fetcher thread per worker task feeding a
+  bounded client-side buffer — maximizes ingestion, order across workers is
+  unspecified (the paper's relaxed-visitation stance makes this fine).
+* **coordinated reads** (``num_consumers > 0``): strict round-robin — for
+  training step r every consumer fetches its ``consumer_index`` slot of round
+  r from worker ``sorted_workers[r % n]``, guaranteeing same-bucket batches
+  across all clients in the step (§3.6).
+
+The client records stall time (time blocked waiting for data): the paper's
+"input-bound" diagnosis is ``stall_time / wall_time``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+from ..data.elements import Element, decode_element, element_nbytes
+from ..data.graph import Graph
+from .protocol import FetchStatus, new_id
+from .transport import Stub, TransportError, decompress
+
+
+@dataclass
+class ClientMetrics:
+    batches: int = 0
+    bytes_received: int = 0
+    stall_time: float = 0.0
+    fetch_time: float = 0.0
+    rpcs: int = 0
+    retries: int = 0
+
+
+@dataclass
+class _TaskHandle:
+    task_id: str
+    job_id: str
+    worker_id: str
+    worker_address: str
+    stub: Stub
+    done: bool = False
+    failed: bool = False
+
+
+class DataServiceClient:
+    """One iteration session over a service-backed dataset."""
+
+    _END = object()
+
+    def __init__(
+        self,
+        dispatcher_address: str,
+        graph: Graph,
+        processing_mode: str = "off",
+        job_name: Optional[str] = None,
+        num_consumers: int = 0,
+        consumer_index: int = 0,
+        sharing: bool = False,
+        compression: Optional[str] = None,
+        target_workers: str = "any",
+        max_workers: int = 0,
+        resume_offsets: bool = False,
+        buffer_size: int = 8,
+        heartbeat_interval: float = 0.3,
+        optimize: bool = True,
+    ):
+        self.client_id = new_id("client")
+        self.metrics = ClientMetrics()
+        self._dispatcher = Stub(dispatcher_address)
+        # the RAW graph is registered; the dispatcher optimizes it once so
+        # identical pipelines from different jobs share a dataset_id (§3.5)
+        self._graph = graph
+        self._mode = processing_mode
+        self._job_name = job_name
+        self._m = num_consumers
+        self._consumer_index = consumer_index
+        self._sharing = sharing
+        self._compression = compression
+        self._target_workers = target_workers
+        self._max_workers = max_workers
+        self._resume_offsets = resume_offsets
+        self._buffer_size = buffer_size
+        self._hb_interval = heartbeat_interval
+
+        self._tasks: Dict[str, _TaskHandle] = {}
+        self._tasks_lock = threading.Lock()
+        self._queue: "queue.Queue[Any]" = queue.Queue(maxsize=max(2, buffer_size))
+        self._job_finished = threading.Event()
+        self._closed = threading.Event()
+        self._fetchers: Dict[str, threading.Thread] = {}
+        self._job_id = ""
+
+    # ------------------------------------------------------------------
+    # Session setup
+    # ------------------------------------------------------------------
+    def _register(self) -> None:
+        resp = self._dispatcher.call(
+            "get_or_register_dataset", graph_bytes=self._graph.to_bytes()
+        )
+        view = self._dispatcher.call(
+            "get_or_create_job",
+            dataset_id=resp["dataset_id"],
+            job_name=self._job_name,
+            policy=self._mode,
+            num_consumers=self._m,
+            sharing=self._sharing,
+            compression=self._compression,
+            max_workers=self._max_workers,
+            resume_offsets=self._resume_offsets,
+            client_id=self.client_id,
+        )
+        self._job_id = view["job_id"]
+        self._sync_tasks(view)
+
+    def _sync_tasks(self, view: Dict[str, Any]) -> None:
+        with self._tasks_lock:
+            seen = set()
+            for t in view["tasks"]:
+                seen.add(t["task_id"])
+                h = self._tasks.get(t["task_id"])
+                if h is None:
+                    h = self._tasks[t["task_id"]] = _TaskHandle(
+                        task_id=t["task_id"],
+                        job_id=t["job_id"],
+                        worker_id=t["worker_id"],
+                        worker_address=t["worker_address"],
+                        stub=Stub(t["worker_address"]),
+                    )
+                    if self._m == 0 and not self._closed.is_set():
+                        self._spawn_fetcher(h)
+                elif h.failed and not h.done:
+                    # the dispatcher re-listed a task we gave up on (e.g. the
+                    # transient window right after a dispatcher restart when
+                    # workers had not yet re-registered): resurrect it.
+                    h.failed = False
+                    if self._m == 0 and not self._closed.is_set():
+                        self._spawn_fetcher(h)
+            # tasks whose worker died are dropped by the dispatcher view
+            for tid, h in self._tasks.items():
+                if tid not in seen and not h.done:
+                    h.failed = True
+            if view.get("finished"):
+                self._job_finished.set()
+
+    def _heartbeat_loop(self) -> None:
+        while not self._closed.wait(self._hb_interval):
+            try:
+                view = self._dispatcher.call(
+                    "client_heartbeat", job_id=self._job_id, client_id=self.client_id
+                )
+                self._sync_tasks(view)
+            except TransportError:
+                continue  # dispatcher down: keep consuming from workers (§3.4)
+            if self._job_finished.is_set():
+                return
+
+    # ------------------------------------------------------------------
+    # Parallel-fetch mode
+    # ------------------------------------------------------------------
+    def _spawn_fetcher(self, handle: _TaskHandle) -> None:
+        th = threading.Thread(target=self._fetch_loop, args=(handle,), daemon=True)
+        self._fetchers[handle.task_id] = th
+        th.start()
+
+    def _fetch_loop(self, handle: _TaskHandle) -> None:
+        backoff = 0.005
+        while not self._closed.is_set() and not handle.done and not handle.failed:
+            try:
+                t0 = time.perf_counter()
+                resp = handle.stub.call(
+                    "get_element", task_id=handle.task_id, job_id=self._job_id
+                )
+                self.metrics.fetch_time += time.perf_counter() - t0
+                self.metrics.rpcs += 1
+            except TransportError:
+                handle.failed = True  # worker died; dispatcher will notice
+                break
+            status = resp["status"]
+            if status == FetchStatus.OK.value:
+                backoff = 0.005
+                self._enqueue(self._decode(resp))
+            elif status == FetchStatus.PENDING.value:
+                self.metrics.retries += 1
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 0.1)
+            else:  # END_OF_TASK
+                handle.done = True
+        self._maybe_finish()
+
+    def _decode(self, resp: Dict[str, Any]) -> Element:
+        if "element_compressed" in resp:
+            elem = decode_element(decompress(resp["element_compressed"]))
+        else:
+            elem = resp["element"]
+        self.metrics.bytes_received += resp.get("nbytes", 0)
+        return elem
+
+    def _enqueue(self, elem: Element) -> None:
+        while not self._closed.is_set():
+            try:
+                self._queue.put(elem, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def _maybe_finish(self) -> None:
+        with self._tasks_lock:
+            all_done = self._tasks and all(
+                h.done or h.failed for h in self._tasks.values()
+            )
+        if all_done and self._job_finished.is_set():
+            try:
+                self._queue.put_nowait(self._END)
+            except queue.Full:
+                # consumer will re-check completion on queue timeout
+                pass
+
+    # ------------------------------------------------------------------
+    # Iteration
+    # ------------------------------------------------------------------
+    def __iter__(self) -> Iterator[Element]:
+        self._register()
+        hb = threading.Thread(target=self._heartbeat_loop, daemon=True)
+        hb.start()
+        try:
+            if self._m > 0:
+                yield from self._iter_coordinated()
+            else:
+                yield from self._iter_parallel()
+        finally:
+            self.close()
+
+    def _iter_parallel(self) -> Iterator[Element]:
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = self._queue.get(timeout=0.2)
+            except queue.Empty:
+                self.metrics.stall_time += time.perf_counter() - t0
+                with self._tasks_lock:
+                    done = self._tasks and all(
+                        h.done or h.failed for h in self._tasks.values()
+                    )
+                if done and self._job_finished.is_set() and self._queue.empty():
+                    return
+                continue
+            self.metrics.stall_time += time.perf_counter() - t0
+            if item is self._END:
+                return
+            self.metrics.batches += 1
+            yield item
+
+    def _iter_coordinated(self) -> Iterator[Element]:
+        """Round-robin over workers; all consumers see same-bucket rounds."""
+        round_index = 0
+        backoff = 0.005
+        while not self._closed.is_set():
+            with self._tasks_lock:
+                live = sorted(
+                    (h for h in self._tasks.values() if not h.failed and not h.done),
+                    key=lambda h: h.worker_id,
+                )
+            if not live:
+                if self._job_finished.is_set():
+                    return
+                time.sleep(0.02)
+                continue
+            handle = live[round_index % len(live)]
+            t0 = time.perf_counter()
+            try:
+                resp = handle.stub.call(
+                    "get_element",
+                    task_id=handle.task_id,
+                    job_id=self._job_id,
+                    round_index=round_index,
+                    consumer_index=self._consumer_index,
+                )
+                self.metrics.rpcs += 1
+            except TransportError:
+                handle.failed = True
+                continue
+            finally:
+                self.metrics.stall_time += time.perf_counter() - t0
+            status = resp["status"]
+            if status == FetchStatus.OK.value:
+                self.metrics.batches += 1
+                backoff = 0.005
+                yield self._decode(resp)
+                round_index += 1
+            elif status == FetchStatus.PENDING.value:
+                self.metrics.retries += 1
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 0.05)
+            else:  # END_OF_TASK: coordinated jobs end at first exhausted worker
+                return
+
+    def close(self) -> None:
+        self._closed.set()
+
+
+class DistributedDataset:
+    """Iterable returned by ``Dataset.distribute(...)`` (paper Fig. 4)."""
+
+    def __init__(
+        self,
+        graph: Graph,
+        service: Any,
+        processing_mode: str = "off",
+        job_name: Optional[str] = None,
+        num_consumers: int = 0,
+        consumer_index: int = 0,
+        sharing: bool = False,
+        compression: Optional[str] = None,
+        target_workers: str = "any",
+        max_workers: int = 0,
+        resume_offsets: bool = False,
+        buffer_size: int = 8,
+    ):
+        self._graph = graph
+        address = getattr(service, "dispatcher_address", service)
+        if not isinstance(address, str):
+            raise TypeError("service must be a ServiceHandle or dispatcher address")
+        self._address = address
+        self._kw = dict(
+            processing_mode=processing_mode,
+            job_name=job_name,
+            num_consumers=num_consumers,
+            consumer_index=consumer_index,
+            sharing=sharing,
+            compression=compression,
+            target_workers=target_workers,
+            max_workers=max_workers,
+            resume_offsets=resume_offsets,
+            buffer_size=buffer_size,
+        )
+        self.last_client: Optional[DataServiceClient] = None
+
+    def session(self) -> DataServiceClient:
+        self.last_client = DataServiceClient(self._address, self._graph, **self._kw)
+        return self.last_client
+
+    def __iter__(self) -> Iterator[Element]:
+        return iter(self.session())

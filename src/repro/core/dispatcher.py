@@ -1,0 +1,646 @@
+"""The tf.data-service dispatcher (paper §3.1, §3.3, §3.4).
+
+Control plane only — never touches data.  Manages:
+  * registered datasets (pipeline graphs, keyed by content fingerprint),
+  * jobs (clients with the same ``job_name`` join the same job),
+  * the worker pool (registration, heartbeats, failure detection),
+  * per-job shard hand-out for the DYNAMIC policy (ShardManager),
+  * a write-ahead journal so a restarted dispatcher recovers its state.
+
+Threading model: a single lock guards dispatcher state (control-plane calls
+are small and rare relative to data-plane traffic, which goes directly from
+clients to workers — the dispatcher is deliberately off the data path).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+from ..data.graph import Graph
+from .journal import Journal
+from .protocol import (
+    FetchStatus,
+    JobView,
+    ShardingPolicy,
+    TaskSpec,
+    WorkerInfo,
+    new_id,
+)
+from .sharding import ShardManager
+
+
+@dataclass
+class _Dataset:
+    dataset_id: str
+    graph_bytes: bytes
+    fingerprint: str
+
+
+@dataclass
+class _Job:
+    job_id: str
+    job_name: str
+    dataset_id: str
+    policy: ShardingPolicy
+    num_consumers: int = 0
+    sharing: bool = False
+    compression: Optional[str] = None
+    max_workers: int = 0  # 0 = use all registered workers
+    resume_offsets: bool = False
+    tasks: Dict[str, TaskSpec] = field(default_factory=dict)  # by task_id
+    tasks_by_worker: Dict[str, str] = field(default_factory=dict)
+    completed_tasks: Set[str] = field(default_factory=set)
+    shard_mgr: Optional[ShardManager] = None
+    finished: bool = False
+    clients: Set[str] = field(default_factory=set)
+    seq: int = 0  # task seeds
+    static_assignment: Optional[Dict[str, List[Dict[str, Any]]]] = None
+
+
+@dataclass
+class _Worker:
+    info: WorkerInfo
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    buffer_occupancy: float = 0.0
+    cpu_busy: float = 0.0
+    delivered: Set[str] = field(default_factory=set)  # task ids shipped
+
+
+class Dispatcher:
+    def __init__(
+        self,
+        journal_path: Optional[str] = None,
+        heartbeat_timeout: float = 5.0,
+        overpartition: int = 4,
+    ):
+        self._lock = threading.RLock()
+        self._datasets: Dict[str, _Dataset] = {}
+        self._datasets_by_fp: Dict[str, str] = {}
+        self._jobs: Dict[str, _Job] = {}
+        self._jobs_by_name: Dict[str, str] = {}
+        self._workers: Dict[str, _Worker] = {}
+        self._worker_list_version = 0
+        self._heartbeat_timeout = heartbeat_timeout
+        self._overpartition = overpartition
+        # set after a journal restore that found shards assigned to workers
+        # not (yet) re-registered: those workers get one heartbeat-timeout of
+        # grace to come back before their in-flight shards are reclaimed
+        self._orphan_sweep_deadline: Optional[float] = None
+        self._journal = Journal(journal_path)
+        if journal_path:
+            self._restore(journal_path)
+
+    # ------------------------------------------------------------------
+    # RPC entry point
+    # ------------------------------------------------------------------
+    def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        fn = getattr(self, f"rpc_{method}", None)
+        if fn is None:
+            raise ValueError(f"dispatcher: unknown method {method}")
+        return fn(**payload)
+
+    # ------------------------------------------------------------------
+    # Datasets & jobs (client-facing)
+    # ------------------------------------------------------------------
+    def rpc_get_or_register_dataset(self, graph_bytes: bytes) -> Dict[str, Any]:
+        """Register the RAW client graph; optimize once, dispatcher-side.
+
+        The content fingerprint is taken over the bytes the client sent —
+        BEFORE optimization — because optimizer passes synthesize fresh
+        fused closures whose serialization is not content-stable.  Two jobs
+        submitting identical pipelines must land on the same dataset_id, or
+        ephemeral data sharing (§3.5) silently degrades to one cache per
+        job.  Workers receive the optimized graph.
+        """
+        g = Graph.from_bytes(graph_bytes)
+        fp = g.fingerprint()
+        with self._lock:
+            if fp in self._datasets_by_fp:
+                return {"dataset_id": self._datasets_by_fp[fp], "fingerprint": fp}
+            from ..data.optimizer import optimize_graph
+
+            opt_bytes = optimize_graph(g).to_bytes()
+            ds_id = new_id("ds")
+            self._journal.append(
+                "dataset_registered",
+                {"dataset_id": ds_id, "graph_bytes": opt_bytes, "fingerprint": fp},
+            )
+            self._apply_dataset(ds_id, opt_bytes, fp)
+            return {"dataset_id": ds_id, "fingerprint": fp}
+
+    def _apply_dataset(self, ds_id: str, graph_bytes: bytes, fp: str) -> None:
+        self._datasets[ds_id] = _Dataset(ds_id, graph_bytes, fp)
+        self._datasets_by_fp[fp] = ds_id
+
+    def rpc_get_or_create_job(
+        self,
+        dataset_id: str,
+        job_name: Optional[str] = None,
+        policy: str = "off",
+        num_consumers: int = 0,
+        sharing: bool = False,
+        compression: Optional[str] = None,
+        max_workers: int = 0,
+        resume_offsets: bool = False,
+        client_id: Optional[str] = None,
+    ) -> Dict[str, Any]:
+        with self._lock:
+            if job_name and job_name in self._jobs_by_name:
+                job = self._jobs[self._jobs_by_name[job_name]]
+                if client_id:
+                    job.clients.add(client_id)
+                return self._job_view(job)
+            payload = dict(
+                job_id=new_id("job"),
+                job_name=job_name or "",
+                dataset_id=dataset_id,
+                policy=str(ShardingPolicy.parse(policy).value),
+                num_consumers=num_consumers,
+                sharing=sharing,
+                compression=compression,
+                max_workers=max_workers,
+                resume_offsets=resume_offsets,
+                # journaled so a restored dispatcher partitions the source
+                # into the SAME shards (ids must stay aligned with the log)
+                shard_hint=max(1, len(self._workers)) * self._overpartition,
+            )
+            self._journal.append("job_created", payload)
+            job = self._apply_job(payload)
+            if client_id:
+                job.clients.add(client_id)
+            return self._job_view(job)
+
+    def _apply_job(self, p: Dict[str, Any]) -> _Job:
+        job = _Job(
+            job_id=p["job_id"],
+            job_name=p["job_name"],
+            dataset_id=p["dataset_id"],
+            policy=ShardingPolicy(p["policy"]),
+            num_consumers=p["num_consumers"],
+            sharing=p["sharing"],
+            compression=p.get("compression"),
+            max_workers=p.get("max_workers", 0),
+            resume_offsets=p.get("resume_offsets", False),
+        )
+        if job.policy in (ShardingPolicy.DYNAMIC, ShardingPolicy.STATIC):
+            graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
+            hint = p.get("shard_hint") or max(1, len(self._workers)) * self._overpartition
+            job.shard_mgr = ShardManager(
+                graph,
+                job.policy,
+                num_workers_hint=hint,
+                overpartition=1,
+                resume_offsets=job.resume_offsets,
+            )
+        self._jobs[job.job_id] = job
+        if job.job_name:
+            self._jobs_by_name[job.job_name] = job.job_id
+        # every registered worker gets a task for the new job (scale-out)
+        for w in self._workers.values():
+            self._ensure_task(job, w.info)
+        return job
+
+    def _ensure_task(self, job: _Job, w: WorkerInfo) -> Optional[TaskSpec]:
+        if job.finished or w.worker_id in job.tasks_by_worker:
+            return None
+        if job.max_workers and len(job.tasks) >= job.max_workers:
+            return None
+        ds = self._datasets[job.dataset_id]
+        job.seq += 1
+        task = TaskSpec(
+            task_id=new_id("task"),
+            job_id=job.job_id,
+            dataset_id=job.dataset_id,
+            worker_id=w.worker_id,
+            worker_address=w.address,
+            policy=job.policy.value,
+            num_consumers=job.num_consumers,
+            round_robin=job.num_consumers > 0,
+            shared=job.sharing,
+            cache_key=ds.fingerprint if job.sharing else None,
+            worker_seed=job.seq,
+        )
+        # journal task creation: task ids must be STABLE across dispatcher
+        # restarts so live workers/clients keep their handles (§3.4)
+        self._journal.append("task_created", vars(task).copy())
+        self._apply_task(job, task)
+        return task
+
+    def _apply_task(self, job: _Job, task: TaskSpec) -> None:
+        job.tasks[task.task_id] = task
+        job.tasks_by_worker[task.worker_id] = task.task_id
+
+    def _job_view(self, job: _Job) -> Dict[str, Any]:
+        return {
+            "job_id": job.job_id,
+            "dataset_id": job.dataset_id,
+            "policy": job.policy.value,
+            "num_consumers": job.num_consumers,
+            "finished": job.finished,
+            "worker_list_version": self._worker_list_version,
+            "compression": job.compression,
+            "tasks": [vars(t) for t in self._active_tasks(job)],
+        }
+
+    def _active_tasks(self, job: _Job) -> List[TaskSpec]:
+        return [
+            t
+            for t in job.tasks.values()
+            if t.task_id not in job.completed_tasks
+            and t.worker_id in self._workers
+        ]
+
+    def rpc_client_heartbeat(
+        self, job_id: str, client_id: str, starving: bool = False
+    ) -> Dict[str, Any]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None:
+                raise KeyError(f"unknown job {job_id}")
+            job.clients.add(client_id)
+            self._maybe_finish(job)
+            view = self._job_view(job)
+            view["starving_ack"] = starving
+            return view
+
+    # ------------------------------------------------------------------
+    # Workers
+    # ------------------------------------------------------------------
+    def rpc_register_worker(
+        self, worker_id: str, address: str, tags: Optional[Dict[str, Any]] = None
+    ) -> Dict[str, Any]:
+        with self._lock:
+            self._journal.append(
+                "worker_registered", {"worker_id": worker_id, "address": address}
+            )
+            is_new = worker_id not in self._workers
+            # (re)registration resets delivery state — stateless workers that
+            # restart must receive their tasks again (paper §3.4)
+            self._workers[worker_id] = _Worker(WorkerInfo(worker_id, address, tags or {}))
+            if is_new:
+                self._worker_list_version += 1
+            w = self._workers[worker_id]
+            tasks = self._undelivered_tasks(w)
+            return {"tasks": tasks, "worker_list_version": self._worker_list_version}
+
+    def _undelivered_tasks(self, w: _Worker) -> List[Dict[str, Any]]:
+        """Tasks for every active job not yet shipped to this worker."""
+        out: List[Dict[str, Any]] = []
+        for job in self._jobs.values():
+            if job.finished:
+                continue
+            t = self._ensure_task(job, w.info)
+            if t is None:
+                tid = job.tasks_by_worker.get(w.info.worker_id)
+                if tid and tid not in job.completed_tasks:
+                    t = job.tasks[tid]
+            if t is not None and t.task_id not in w.delivered:
+                w.delivered.add(t.task_id)
+                out.append(self._task_payload(t, job))
+        return out
+
+    def _task_payload(self, t: TaskSpec, job: _Job) -> Dict[str, Any]:
+        ds = self._datasets[job.dataset_id]
+        p = vars(t).copy()
+        p["graph_bytes"] = ds.graph_bytes
+        p["compression"] = job.compression
+        p["resume_offsets"] = job.resume_offsets
+        p["static_shards"] = None
+        if job.policy == ShardingPolicy.STATIC and job.shard_mgr is not None:
+            # computed ONCE over the workers present at first hand-out (the
+            # paper's "up-front" semantics) and journaled for restart stability
+            if job.static_assignment is None:
+                assignment = job.shard_mgr.static_assignment(
+                    sorted(job.tasks_by_worker)
+                )
+                self._journal.append(
+                    "static_assignment",
+                    {"job_id": job.job_id, "assignment": assignment},
+                )
+                job.static_assignment = assignment
+            p["static_shards"] = job.static_assignment.get(t.worker_id, [])
+        return p
+
+    def rpc_worker_heartbeat(
+        self,
+        worker_id: str,
+        buffer_occupancy: float = 0.0,
+        cpu_busy: float = 0.0,
+        completed_tasks: Optional[List[str]] = None,
+    ) -> Dict[str, Any]:
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w is None:
+                # unknown worker (e.g. dispatcher restarted): ask it to re-register
+                return {"reregister": True}
+            w.last_heartbeat = time.monotonic()
+            w.buffer_occupancy = buffer_occupancy
+            w.cpu_busy = cpu_busy
+            for tid in completed_tasks or []:
+                self._complete_task(tid, journal=True)
+            new_tasks = self._undelivered_tasks(w)
+            valid = [
+                job.tasks_by_worker[worker_id]
+                for job in self._jobs.values()
+                if worker_id in job.tasks_by_worker and not job.finished
+            ]
+            return {
+                "new_tasks": new_tasks,
+                "valid_tasks": valid,
+                "worker_list_version": self._worker_list_version,
+                "reregister": False,
+            }
+
+    def _complete_task(self, task_id: str, journal: bool) -> None:
+        for job in self._jobs.values():
+            if task_id in job.tasks and task_id not in job.completed_tasks:
+                if journal:
+                    self._journal.append("task_completed", {"task_id": task_id})
+                job.completed_tasks.add(task_id)
+                self._maybe_finish(job)
+
+    def _maybe_finish(self, job: _Job) -> None:
+        if job.finished or not job.tasks:
+            return
+        live = [t for t in job.tasks.values() if t.worker_id in self._workers]
+        all_done = all(t.task_id in job.completed_tasks for t in live) and live
+        if job.policy == ShardingPolicy.DYNAMIC and job.shard_mgr is not None:
+            if job.shard_mgr.done() and all_done:
+                self._finish_job(job)
+        elif all_done:
+            self._finish_job(job)
+
+    def _finish_job(self, job: _Job) -> None:
+        self._journal.append("job_finished", {"job_id": job.job_id})
+        job.finished = True
+
+    # -- failure detection ------------------------------------------------
+    def check_workers(self) -> List[str]:
+        """Mark workers dead after heartbeat timeout. Returns removed ids.
+
+        Called by the orchestrator's GC loop (or tests directly).
+        """
+        now = time.monotonic()
+        removed = []
+        with self._lock:
+            for wid, w in list(self._workers.items()):
+                if now - w.last_heartbeat > self._heartbeat_timeout:
+                    removed.append(wid)
+                    self._remove_worker(wid)
+            self._sweep_orphan_shards(now)
+        return removed
+
+    def _sweep_orphan_shards(self, now: float) -> None:
+        """Reclaim shards assigned (pre-restart, per the journal) to workers
+        that never re-registered.  check_workers can't see them — they are
+        not in self._workers — so without this sweep such shards stay
+        in-flight forever and the job never finishes."""
+        if self._orphan_sweep_deadline is None or now < self._orphan_sweep_deadline:
+            return
+        self._orphan_sweep_deadline = None
+        for job in self._jobs.values():
+            mgr = job.shard_mgr
+            if mgr is None or job.finished:
+                continue
+            orphans = {
+                st.assigned_to
+                for st in mgr._states
+                if st.assigned_to and not st.completed
+                and st.assigned_to not in self._workers
+            }
+            for wid in orphans:
+                for sid in mgr.worker_failed(wid):
+                    self._journal.append(
+                        "shard_lost",
+                        {"job_id": job.job_id, "shard_id": sid, "worker_id": wid},
+                    )
+            if orphans:
+                self._maybe_finish(job)
+
+    def rpc_remove_worker(self, worker_id: str) -> Dict[str, Any]:
+        """Administrative removal (tests / orchestrator-initiated)."""
+        with self._lock:
+            self._remove_worker(worker_id)
+        return {"ok": True}
+
+    def _remove_worker(self, worker_id: str) -> None:
+        if worker_id not in self._workers:
+            return
+        self._journal.append("worker_removed", {"worker_id": worker_id})
+        del self._workers[worker_id]
+        self._worker_list_version += 1
+        for job in self._jobs.values():
+            if job.shard_mgr is not None:
+                lost = job.shard_mgr.worker_failed(worker_id)
+                for sid in lost:
+                    self._journal.append(
+                        "shard_lost",
+                        {"job_id": job.job_id, "shard_id": sid, "worker_id": worker_id},
+                    )
+            self._maybe_finish(job)
+
+    # ------------------------------------------------------------------
+    # DYNAMIC sharding hand-out (worker-facing)
+    # ------------------------------------------------------------------
+    def rpc_get_shard(self, job_id: str, worker_id: str) -> Dict[str, Any]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.shard_mgr is None:
+                return {"done": True}
+            nxt = job.shard_mgr.next_shard(worker_id)
+            if nxt is None:
+                # resume_offsets: an in-flight shard on a dying worker can
+                # RE-ENTER the queue — "empty now" is not "drained".  Tell
+                # workers to poll again instead of retiring their task.
+                if job.shard_mgr.resume_offsets and not job.shard_mgr.done():
+                    return {"done": False, "wait": True}
+                return {"done": True}
+            sid, shard, offset = nxt
+            self._journal.append(
+                "shard_assigned",
+                {"job_id": job_id, "shard_id": sid, "worker_id": worker_id},
+            )
+            return {"done": False, "shard_id": sid, "shard": shard, "offset": offset}
+
+    def rpc_complete_shard(
+        self, job_id: str, shard_id: int, worker_id: str
+    ) -> Dict[str, Any]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is not None and job.shard_mgr is not None:
+                self._journal.append(
+                    "shard_completed",
+                    {"job_id": job_id, "shard_id": shard_id, "worker_id": worker_id},
+                )
+                job.shard_mgr.complete_shard(shard_id, worker_id)
+            return {"ok": True}
+
+    def rpc_checkpoint_offset(
+        self, job_id: str, shard_id: int, worker_id: str, offset: int
+    ) -> Dict[str, Any]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is not None and job.shard_mgr is not None:
+                self._journal.append(
+                    "shard_offset",
+                    {"job_id": job_id, "shard_id": shard_id, "offset": offset},
+                )
+                job.shard_mgr.checkpoint_offset(shard_id, worker_id, offset)
+            return {"ok": True}
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    def rpc_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "num_workers": len(self._workers),
+                "worker_list_version": self._worker_list_version,
+                "num_jobs": len(self._jobs),
+                "jobs": {
+                    j.job_id: {
+                        "name": j.job_name,
+                        "policy": j.policy.value,
+                        "finished": j.finished,
+                        "tasks": len(j.tasks),
+                        "completed_tasks": len(j.completed_tasks),
+                        "clients": len(j.clients),
+                        "shards": j.shard_mgr.stats() if j.shard_mgr else None,
+                    }
+                    for j in self._jobs.values()
+                },
+                "workers": {
+                    wid: {
+                        "address": w.info.address,
+                        "buffer_occupancy": w.buffer_occupancy,
+                        "cpu_busy": w.cpu_busy,
+                    }
+                    for wid, w in self._workers.items()
+                },
+            }
+
+    def rpc_list_workers(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "workers": [vars(w.info) for w in self._workers.values()],
+                "version": self._worker_list_version,
+            }
+
+    # ------------------------------------------------------------------
+    # Journal restore (paper §3.4: replay on restart)
+    # ------------------------------------------------------------------
+    def _restore(self, path: str) -> None:
+        events = list(Journal.replay(path))
+        if not events:
+            return
+        with self._lock:
+            for seq, etype, p in events:
+                self._journal.set_seq(seq)
+                if etype == "snapshot":
+                    self._restore_snapshot(p)
+                elif etype == "dataset_registered":
+                    self._apply_dataset(p["dataset_id"], p["graph_bytes"], p["fingerprint"])
+                elif etype == "job_created":
+                    self._apply_job(p)
+                elif etype == "job_finished":
+                    if p["job_id"] in self._jobs:
+                        self._jobs[p["job_id"]].finished = True
+                elif etype == "task_created":
+                    job = self._jobs.get(p["job_id"])
+                    if job is not None:
+                        task = TaskSpec(**p)
+                        self._apply_task(job, task)
+                        job.seq = max(job.seq, task.worker_seed)
+                elif etype == "static_assignment":
+                    job = self._jobs.get(p["job_id"])
+                    if job is not None:
+                        job.static_assignment = p["assignment"]
+                elif etype == "task_completed":
+                    self._complete_task(p["task_id"], journal=False)
+                elif etype == "shard_assigned":
+                    job = self._jobs.get(p["job_id"])
+                    if job and job.shard_mgr:
+                        # keep the assignment: the worker is (presumably) still
+                        # alive and processing; heartbeat timeout reclaims it
+                        mgr = job.shard_mgr
+                        with mgr._lock:
+                            for st in mgr._states:
+                                if st.shard_id == p["shard_id"]:
+                                    st.assigned_to = p["worker_id"]
+                            try:
+                                mgr._pending.remove(p["shard_id"])
+                            except ValueError:
+                                pass
+                elif etype == "shard_completed":
+                    job = self._jobs.get(p["job_id"])
+                    if job and job.shard_mgr:
+                        job.shard_mgr.complete_shard(p["shard_id"], p["worker_id"])
+                elif etype == "shard_lost":
+                    job = self._jobs.get(p["job_id"])
+                    if job and job.shard_mgr:
+                        for st in job.shard_mgr._states:
+                            if st.shard_id == p["shard_id"] and not st.completed:
+                                st.lost = True
+                                st.assigned_to = None
+                elif etype == "shard_offset":
+                    job = self._jobs.get(p["job_id"])
+                    if job and job.shard_mgr:
+                        for st in job.shard_mgr._states:
+                            if st.shard_id == p["shard_id"]:
+                                st.offset = max(st.offset, p["offset"])
+                # worker_registered/worker_removed: workers are transient; they
+                # re-register via heartbeat after a dispatcher restart.  Tasks
+                # and in-flight shard assignments are preserved verbatim: live
+                # workers continue seamlessly.  Workers that DON'T come back
+                # are invisible to check_workers (not in self._workers), so
+                # arm the orphan sweep: one heartbeat-timeout of grace, then
+                # their in-flight shards are reclaimed (lost / re-queued).
+            if any(
+                st.assigned_to and not st.completed
+                for job in self._jobs.values()
+                if job.shard_mgr is not None
+                for st in job.shard_mgr._states
+            ):
+                self._orphan_sweep_deadline = (
+                    time.monotonic() + self._heartbeat_timeout
+                )
+
+    def _restore_snapshot(self, p: Dict[str, Any]) -> None:
+        for ds in p.get("datasets", []):
+            self._apply_dataset(ds["dataset_id"], ds["graph_bytes"], ds["fingerprint"])
+        for jp in p.get("jobs", []):
+            job = self._apply_job(jp["payload"])
+            job.finished = jp["finished"]
+            if jp.get("shard_mgr") and job.shard_mgr is not None:
+                graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
+                job.shard_mgr = ShardManager.from_payload(graph, jp["shard_mgr"])
+
+    def snapshot(self) -> None:
+        with self._lock:
+            payload = {
+                "datasets": [vars(d) for d in self._datasets.values()],
+                "jobs": [
+                    {
+                        "payload": {
+                            "job_id": j.job_id,
+                            "job_name": j.job_name,
+                            "dataset_id": j.dataset_id,
+                            "policy": j.policy.value,
+                            "num_consumers": j.num_consumers,
+                            "sharing": j.sharing,
+                            "compression": j.compression,
+                            "max_workers": j.max_workers,
+                            "resume_offsets": j.resume_offsets,
+                        },
+                        "finished": j.finished,
+                        "shard_mgr": j.shard_mgr.to_payload() if j.shard_mgr else None,
+                    }
+                    for j in self._jobs.values()
+                ],
+            }
+            self._journal.snapshot(payload)
+
+    def close(self) -> None:
+        self._journal.close()

@@ -1,0 +1,101 @@
+"""Dispatcher write-ahead journal (paper §3.4).
+
+Every dispatcher state change is appended to the journal before it is applied
+and acknowledged; a restarted dispatcher replays the journal to recover
+registered datasets, jobs, workers, and shard-assignment state.  A snapshot
+op compacts the log.
+
+Format: [u32 length][pickled (seq, event_type, payload)] records appended to a
+single file, fsync'd per batch.  Corrupt/truncated tails (crash mid-write) are
+detected by length underrun and discarded — the WAL contract.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import threading
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+Event = Tuple[int, str, Dict[str, Any]]
+
+
+class Journal:
+    def __init__(self, path: Optional[str], fsync: bool = False):
+        """``path=None`` disables durability (in-memory dispatcher)."""
+        self._path = path
+        self._fsync = fsync
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._f = None
+        if path is not None:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            self._f = open(path, "ab")
+
+    # -- append -----------------------------------------------------------
+    def append(self, event_type: str, payload: Dict[str, Any]) -> int:
+        with self._lock:
+            self._seq += 1
+            if self._f is not None:
+                rec = pickle.dumps(
+                    (self._seq, event_type, payload), protocol=pickle.HIGHEST_PROTOCOL
+                )
+                self._f.write(struct.pack("<I", len(rec)))
+                self._f.write(rec)
+                self._f.flush()
+                if self._fsync:
+                    os.fsync(self._f.fileno())
+            return self._seq
+
+    # -- replay -----------------------------------------------------------
+    @staticmethod
+    def replay(path: str) -> Iterator[Event]:
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            while True:
+                hdr = f.read(4)
+                if len(hdr) < 4:
+                    return  # clean EOF or truncated length header
+                (n,) = struct.unpack("<I", hdr)
+                rec = f.read(n)
+                if len(rec) < n:
+                    return  # torn tail write — discard (WAL contract)
+                try:
+                    yield pickle.loads(rec)
+                except Exception:
+                    return  # corrupt tail
+
+    # -- compaction ---------------------------------------------------------
+    def snapshot(self, state_payload: Dict[str, Any]) -> None:
+        """Rewrite the journal as a single snapshot event + empty tail."""
+        if self._path is None:
+            return
+        with self._lock:
+            tmp = self._path + ".tmp"
+            with open(tmp, "wb") as f:
+                rec = pickle.dumps(
+                    (self._seq, "snapshot", state_payload),
+                    protocol=pickle.HIGHEST_PROTOCOL,
+                )
+                f.write(struct.pack("<I", len(rec)))
+                f.write(rec)
+                f.flush()
+                os.fsync(f.fileno())
+            if self._f is not None:
+                self._f.close()
+            os.replace(tmp, self._path)
+            self._f = open(self._path, "ab")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    def set_seq(self, seq: int) -> None:
+        self._seq = max(self._seq, seq)

@@ -1,0 +1,86 @@
+"""Wire protocol between clients, dispatcher, and workers.
+
+All control-plane and data-plane calls are method-name + dict payloads over a
+pluggable transport (in-proc direct call, or length-prefixed pickle over TCP —
+standing in for the paper's gRPC/HTTP2 channel).  Payloads are plain dicts of
+python/numpy values so both transports serialize them identically.
+
+Naming follows the paper's architecture (§3.1): clients register *datasets*
+and join *jobs*; the dispatcher creates per-worker *tasks*; workers serve
+*elements* (batches) to clients.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+class ShardingPolicy(str, enum.Enum):
+    OFF = "off"  # every worker processes the full dataset (zero-once-or-more)
+    DYNAMIC = "dynamic"  # dispatcher hands out disjoint shards FCFS (at-most-once)
+    STATIC = "static"  # up-front mod-partition across workers
+
+    @staticmethod
+    def parse(v: "str | ShardingPolicy") -> "ShardingPolicy":
+        return v if isinstance(v, ShardingPolicy) else ShardingPolicy(str(v).lower())
+
+
+class VisitationGuarantee(str, enum.Enum):
+    """What each policy provides (paper §3.3/§3.4); asserted in tests."""
+
+    ZERO_ONCE_OR_MORE = "zero-once-or-more"
+    AT_MOST_ONCE = "at-most-once"
+    EXACTLY_ONCE = "exactly-once"  # only without failures, or with offset ckpt
+
+
+# Data-plane element fetch status codes.
+class FetchStatus(str, enum.Enum):
+    OK = "ok"
+    PENDING = "pending"  # not yet produced; client should retry
+    END_OF_TASK = "end_of_task"
+
+
+@dataclass
+class WorkerInfo:
+    worker_id: str
+    address: str
+    tags: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class TaskSpec:
+    """One worker's processing assignment for one job."""
+
+    task_id: str
+    job_id: str
+    dataset_id: str
+    worker_id: str
+    worker_address: str
+    policy: str = ShardingPolicy.OFF.value
+    # coordinated reads
+    num_consumers: int = 0
+    round_robin: bool = False
+    # ephemeral sharing
+    shared: bool = False
+    cache_key: Optional[str] = None
+    worker_seed: int = 0
+
+
+@dataclass
+class JobView:
+    """Client-visible job state returned by the dispatcher."""
+
+    job_id: str
+    dataset_id: str
+    policy: str
+    tasks: List[TaskSpec] = field(default_factory=list)
+    worker_list_version: int = 0
+    finished: bool = False
+    num_consumers: int = 0
+
+
+def new_id(prefix: str) -> str:
+    import uuid
+
+    return f"{prefix}-{uuid.uuid4().hex[:10]}"

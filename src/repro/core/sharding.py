@@ -1,0 +1,179 @@
+"""Source-data sharding policies (paper §3.3).
+
+The dispatcher owns a ``ShardManager`` per DYNAMIC job: it over-partitions the
+source into more shards than workers (load balancing) and hands shards out
+first-come-first-served.  Completed shards are journaled; in-flight shards on
+a failed worker are *not* re-issued by default — that is exactly the paper's
+at-most-once guarantee.  ``resume_offsets=True`` upgrades recovery to
+offset-checkpointed resumption (the paper's sketched exactly-once mechanism:
+dispatcher logs shard distribution, workers report progress; the shard is
+re-issued starting at the last reported element offset).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..data.graph import Graph
+from ..data.sources import list_shards
+from .protocol import ShardingPolicy, VisitationGuarantee
+
+
+def guarantee_for(
+    policy: ShardingPolicy, failures_possible: bool, resume_offsets: bool
+) -> VisitationGuarantee:
+    if policy == ShardingPolicy.OFF:
+        return VisitationGuarantee.ZERO_ONCE_OR_MORE
+    if policy == ShardingPolicy.DYNAMIC:
+        if not failures_possible or resume_offsets:
+            return VisitationGuarantee.EXACTLY_ONCE
+        return VisitationGuarantee.AT_MOST_ONCE
+    # STATIC: fixed partitions; failure loses the partition (at-most-once)
+    return (
+        VisitationGuarantee.EXACTLY_ONCE
+        if not failures_possible
+        else VisitationGuarantee.AT_MOST_ONCE
+    )
+
+
+@dataclass
+class ShardState:
+    shard: Dict[str, Any]
+    shard_id: int
+    assigned_to: Optional[str] = None  # worker_id
+    completed: bool = False
+    lost: bool = False
+    offset: int = 0  # last checkpointed element offset within the shard
+
+
+class ShardManager:
+    """Dispatcher-side shard book-keeping for one DYNAMIC/STATIC job."""
+
+    def __init__(
+        self,
+        graph: Graph,
+        policy: ShardingPolicy,
+        num_workers_hint: int,
+        overpartition: int = 4,
+        resume_offsets: bool = False,
+    ):
+        self.policy = policy
+        self.resume_offsets = resume_offsets
+        self._lock = threading.Lock()
+        src = graph.source
+        hint = max(1, num_workers_hint) * max(1, overpartition)
+        shards = list_shards(src.params, src.op, num_shards_hint=hint)
+        self._states = [ShardState(shard=s, shard_id=i) for i, s in enumerate(shards)]
+        self._pending: deque[int] = deque(range(len(self._states)))
+
+    # -- dynamic policy ----------------------------------------------------
+    def next_shard(self, worker_id: str) -> Optional[Tuple[int, Dict[str, Any], int]]:
+        """FCFS hand-out. Returns (shard_id, shard, start_offset) or None."""
+        with self._lock:
+            while self._pending:
+                sid = self._pending.popleft()
+                st = self._states[sid]
+                if st.completed or st.lost:
+                    continue
+                st.assigned_to = worker_id
+                return sid, st.shard, st.offset
+            return None
+
+    def complete_shard(self, shard_id: int, worker_id: str) -> None:
+        with self._lock:
+            st = self._states[shard_id]
+            if st.assigned_to == worker_id:
+                st.completed = True
+                st.assigned_to = None
+
+    def checkpoint_offset(self, shard_id: int, worker_id: str, offset: int) -> None:
+        with self._lock:
+            st = self._states[shard_id]
+            if st.assigned_to == worker_id:
+                st.offset = max(st.offset, offset)
+
+    def worker_failed(self, worker_id: str) -> List[int]:
+        """Handle a worker death. Returns shard ids affected.
+
+        Default (at-most-once): in-flight shards are marked LOST — their
+        remaining data is never seen (paper §3.4).  With resume_offsets the
+        shard re-enters the queue at its checkpointed offset.
+        """
+        affected = []
+        with self._lock:
+            for st in self._states:
+                if st.assigned_to == worker_id and not st.completed:
+                    st.assigned_to = None
+                    affected.append(st.shard_id)
+                    if self.resume_offsets:
+                        self._pending.append(st.shard_id)
+                    else:
+                        st.lost = True
+        return affected
+
+    # -- static policy -------------------------------------------------------
+    def static_assignment(self, worker_ids: List[str]) -> Dict[str, List[Dict[str, Any]]]:
+        """Round-robin all shards across the worker set, up front."""
+        out: Dict[str, List[Dict[str, Any]]] = {w: [] for w in worker_ids}
+        with self._lock:
+            for st in self._states:
+                w = worker_ids[st.shard_id % len(worker_ids)]
+                st.assigned_to = w
+                out[w].append(st.shard)
+            self._pending.clear()
+        return out
+
+    # -- introspection ---------------------------------------------------------
+    def done(self) -> bool:
+        with self._lock:
+            return all(st.completed or st.lost for st in self._states) and not self._pending
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "total": len(self._states),
+                "completed": sum(s.completed for s in self._states),
+                "lost": sum(s.lost for s in self._states),
+                "pending": len(self._pending),
+                "in_flight": sum(
+                    1 for s in self._states
+                    if s.assigned_to is not None and not s.completed
+                ),
+            }
+
+    # -- journal (de)hydration ---------------------------------------------------
+    def to_payload(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "policy": self.policy.value,
+                "resume_offsets": self.resume_offsets,
+                "states": [
+                    (s.shard_id, s.shard, s.assigned_to, s.completed, s.lost, s.offset)
+                    for s in self._states
+                ],
+                "pending": list(self._pending),
+            }
+
+    @staticmethod
+    def from_payload(graph: Graph, payload: Dict[str, Any]) -> "ShardManager":
+        mgr = ShardManager.__new__(ShardManager)
+        mgr.policy = ShardingPolicy(payload["policy"])
+        mgr.resume_offsets = payload["resume_offsets"]
+        mgr._lock = threading.Lock()
+        mgr._states = [
+            ShardState(
+                shard=sh, shard_id=sid, assigned_to=asg, completed=c, lost=l, offset=o
+            )
+            for sid, sh, asg, c, l, o in payload["states"]
+        ]
+        # in-flight shards at crash time: the worker will re-request; treat
+        # assigned-but-not-completed as pending again (workers are stateless
+        # and re-register after a dispatcher restart).
+        mgr._pending = deque(payload["pending"])
+        for st in mgr._states:
+            if st.assigned_to is not None and not st.completed:
+                st.assigned_to = None
+                mgr._pending.append(st.shard_id)
+        return mgr

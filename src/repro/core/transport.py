@@ -1,0 +1,311 @@
+"""Pluggable RPC transports.
+
+Components (dispatcher, workers) expose ``handle(method, payload) -> payload``
+and are reachable through an address:
+
+* ``inproc://<name>``   — direct function call via a process-local registry
+  (default for single-process deployments and tests; zero-copy).
+* ``tcp://host:port``   — length-prefixed pickle over a socket; stands in for
+  the paper's gRPC channel and makes the deployment genuinely multi-process.
+* ``grpc://host:port``  — the paper's actual wire protocol (§3.1: "all
+  communication ... is done via gRPC, which uses HTTP/2, and multiplexes
+  multiple calls on a single TCP connection").  A single generic unary RPC
+  carries (method, pickled payload); uses grpcio's generic handler API so
+  no .proto codegen is required.
+
+Client code uses ``Stub(address)`` and never sees the difference.  Transport
+errors surface as ``TransportError`` so callers can implement retry /
+failover (clients ride through dispatcher downtime, paper §3.4).
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import socketserver
+import struct
+import threading
+from typing import Any, Callable, Dict, Optional, Protocol
+
+import zlib
+
+
+class TransportError(Exception):
+    pass
+
+
+class Handler(Protocol):
+    def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]: ...
+
+
+# ---------------------------------------------------------------------------
+# In-process registry transport
+# ---------------------------------------------------------------------------
+class _InprocRegistry:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._handlers: Dict[str, Handler] = {}
+
+    def bind(self, name: str, handler: Handler) -> str:
+        with self._lock:
+            self._handlers[name] = handler
+        return f"inproc://{name}"
+
+    def unbind(self, name: str) -> None:
+        with self._lock:
+            self._handlers.pop(name, None)
+
+    def get(self, name: str) -> Handler:
+        with self._lock:
+            h = self._handlers.get(name)
+        if h is None:
+            raise TransportError(f"inproc endpoint not bound: {name}")
+        return h
+
+
+INPROC = _InprocRegistry()
+
+
+# ---------------------------------------------------------------------------
+# TCP transport (length-prefixed pickle; request/response per connection pool)
+# ---------------------------------------------------------------------------
+def _send_msg(sock: socket.socket, obj: Any) -> None:
+    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(struct.pack("<I", len(data)) + data)
+
+
+def _recv_msg(sock: socket.socket) -> Any:
+    hdr = _recv_exact(sock, 4)
+    (n,) = struct.unpack("<I", hdr)
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise TransportError("connection closed mid-message")
+        buf += chunk
+    return buf
+
+
+class TCPServer:
+    """Threaded TCP server fronting a Handler."""
+
+    def __init__(self, handler: Handler, host: str = "127.0.0.1", port: int = 0):
+        self._handler = handler
+        outer = self
+
+        class _ReqHandler(socketserver.BaseRequestHandler):
+            def handle(self) -> None:  # one connection, many requests
+                while True:
+                    try:
+                        method, payload = _recv_msg(self.request)
+                    except (TransportError, EOFError, ConnectionError, OSError):
+                        return
+                    try:
+                        result = outer._handler.handle(method, payload)
+                        _send_msg(self.request, ("ok", result))
+                    except Exception as e:  # ship the error to the caller
+                        _send_msg(self.request, ("err", repr(e)))
+
+        class _Server(socketserver.ThreadingTCPServer):
+            daemon_threads = True
+            allow_reuse_address = True
+
+        self._server = _Server((host, port), _ReqHandler)
+        self.address = f"tcp://{self._server.server_address[0]}:{self._server.server_address[1]}"
+        self._thread = threading.Thread(target=self._server.serve_forever, daemon=True)
+
+    def start(self) -> "TCPServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+class _TCPConnection:
+    def __init__(self, host: str, port: int):
+        self._sock = socket.create_connection((host, port), timeout=30)
+        self._lock = threading.Lock()
+
+    def call(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        with self._lock:
+            _send_msg(self._sock, (method, payload))
+            status, result = _recv_msg(self._sock)
+        if status != "ok":
+            raise TransportError(f"remote error from {method}: {result}")
+        return result
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# gRPC transport (optional; the paper's production wire protocol)
+# ---------------------------------------------------------------------------
+_GRPC_METHOD = "/repro.DataService/Call"
+
+
+class GrpcServer:
+    """gRPC server fronting a Handler via one generic unary method.
+
+    Uses grpcio's generic_rpc_handlers so the repo carries no generated
+    proto code; the request/response bodies are (method, payload) pickles —
+    the same message schema as the TCP transport, over HTTP/2 multiplexing.
+    """
+
+    def __init__(self, handler: Handler, host: str = "127.0.0.1", port: int = 0):
+        import grpc  # deferred: optional dependency
+        from concurrent import futures
+
+        outer_handler = handler
+
+        class _Generic(grpc.GenericRpcHandler):
+            def service(self, handler_call_details):
+                if handler_call_details.method != _GRPC_METHOD:
+                    return None
+
+                def unary(request: bytes, context) -> bytes:
+                    method, payload = pickle.loads(request)
+                    try:
+                        return pickle.dumps(
+                            ("ok", outer_handler.handle(method, payload)),
+                            protocol=pickle.HIGHEST_PROTOCOL,
+                        )
+                    except Exception as e:
+                        return pickle.dumps(("err", repr(e)))
+
+                return grpc.unary_unary_rpc_method_handler(
+                    unary,
+                    request_deserializer=lambda b: b,
+                    response_serializer=lambda b: b,
+                )
+
+        self._server = grpc.server(
+            futures.ThreadPoolExecutor(max_workers=16),
+            options=[("grpc.max_receive_message_length", 128 * 1024 * 1024),
+                     ("grpc.max_send_message_length", 128 * 1024 * 1024)],
+        )
+        self._server.add_generic_rpc_handlers((_Generic(),))
+        bound = self._server.add_insecure_port(f"{host}:{port}")
+        self.address = f"grpc://{host}:{bound}"
+
+    def start(self) -> "GrpcServer":
+        self._server.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.stop(grace=0.2)
+
+
+class _GrpcConnection:
+    def __init__(self, target: str):
+        import grpc
+
+        self._grpc = grpc
+        self._channel = grpc.insecure_channel(
+            target,
+            options=[("grpc.max_receive_message_length", 128 * 1024 * 1024),
+                     ("grpc.max_send_message_length", 128 * 1024 * 1024)],
+        )
+        self._call = self._channel.unary_unary(
+            _GRPC_METHOD,
+            request_serializer=lambda b: b,
+            response_deserializer=lambda b: b,
+        )
+
+    def call(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            resp = self._call(
+                pickle.dumps((method, payload), protocol=pickle.HIGHEST_PROTOCOL),
+                timeout=30,
+            )
+        except self._grpc.RpcError as e:
+            raise TransportError(f"grpc call {method} failed: {e.code()}")
+        status, result = pickle.loads(resp)
+        if status != "ok":
+            raise TransportError(f"remote error from {method}: {result}")
+        return result
+
+    def close(self) -> None:
+        self._channel.close()
+
+
+# ---------------------------------------------------------------------------
+# Stub: uniform client handle over any transport
+# ---------------------------------------------------------------------------
+class Stub:
+    def __init__(self, address: str):
+        self.address = address
+        self._conn: Optional[Any] = None
+        self._lock = threading.Lock()
+
+    def call(self, method: str, **payload: Any) -> Dict[str, Any]:
+        if self.address.startswith("inproc://"):
+            handler = INPROC.get(self.address[len("inproc://") :])
+            return handler.handle(method, payload)
+        if self.address.startswith("grpc://"):
+            with self._lock:
+                if self._conn is None:
+                    self._conn = _GrpcConnection(self.address[len("grpc://") :])
+                conn = self._conn
+            try:
+                return conn.call(method, payload)
+            except TransportError:
+                with self._lock:
+                    if self._conn is conn:
+                        conn.close()
+                        self._conn = None
+                raise
+        if self.address.startswith("tcp://"):
+            hostport = self.address[len("tcp://") :]
+            host, port = hostport.rsplit(":", 1)
+            with self._lock:
+                if self._conn is None:
+                    try:
+                        self._conn = _TCPConnection(host, int(port))
+                    except OSError as e:
+                        raise TransportError(f"cannot connect to {self.address}: {e}")
+                conn = self._conn
+            try:
+                return conn.call(method, payload)
+            except (TransportError, OSError) as e:
+                with self._lock:
+                    if self._conn is conn:
+                        conn.close()
+                        self._conn = None
+                raise TransportError(str(e))
+        raise TransportError(f"unsupported address scheme: {self.address}")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._conn is not None:
+                self._conn.close()
+                self._conn = None
+
+
+# ---------------------------------------------------------------------------
+# Payload compression helpers (worker→client batches; paper §3.1 discusses
+# when compression pays for itself — it is off by default in-datacenter)
+# ---------------------------------------------------------------------------
+def compress(data: bytes, method: Optional[str]) -> bytes:
+    if method in (None, "none"):
+        return b"\x00" + data
+    if method == "zlib":
+        return b"\x01" + zlib.compress(data, level=1)
+    raise ValueError(f"unknown compression: {method}")
+
+
+def decompress(data: bytes) -> bytes:
+    tag, body = data[:1], data[1:]
+    if tag == b"\x00":
+        return body
+    if tag == b"\x01":
+        return zlib.decompress(body)
+    raise ValueError("unknown compression tag")

@@ -1,0 +1,516 @@
+"""tf.data-service worker (paper §3.1): stateless data-plane node.
+
+A worker executes *tasks* (one per job) shipped by the dispatcher as
+serialized pipeline graphs.  Four runner flavors:
+
+* buffered   — OFF/STATIC policies: background producer into a bounded queue.
+* dynamic    — DYNAMIC policy: pulls disjoint shards from the dispatcher
+               first-come-first-served, optionally checkpointing element
+               offsets for exactly-once-style recovery.
+* shared     — ephemeral data sharing (§3.5): jobs attach pointers to a
+               worker-global SlidingWindowCache keyed by pipeline fingerprint.
+* coordinated— coordinated reads (§3.6): serves round-indexed, same-bucket
+               batches; all consumers of round r read from this worker.
+
+Statelessness: a restarted worker re-registers and receives its tasks anew;
+it never persists local state (paper §3.4).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+from ..data.elements import Element, element_nbytes, encode_element
+from ..data.graph import Graph
+from ..data.iterators import ExecContext, build_iterator
+from .cache import SlidingWindowCache
+from .protocol import FetchStatus, ShardingPolicy, new_id
+from .transport import INPROC, Stub, TCPServer, TransportError, compress
+
+
+@dataclass
+class WorkerMetrics:
+    batches_produced: int = 0
+    batches_served: int = 0
+    bytes_served: int = 0
+    rpc_count: int = 0
+    busy_time: float = 0.0
+    pending_responses: int = 0
+
+
+class _TaskRunner:
+    status: str = "running"  # running | done
+
+    def __init__(self) -> None:
+        self._stopped = threading.Event()
+
+    def get(self, job_id: str, round_index: int, consumer_index: int):
+        raise NotImplementedError
+
+    def buffer_occupancy(self) -> float:
+        return 0.0
+
+    def extra_stats(self) -> Dict[str, Any]:
+        return {}
+
+    def stop(self) -> None:
+        self._stopped.set()
+
+
+class _BufferedRunner(_TaskRunner):
+    """OFF / STATIC: produce into a bounded deque from a background thread."""
+
+    def __init__(self, worker: "Worker", spec: Dict[str, Any], buffer_size: int):
+        super().__init__()
+        self._worker = worker
+        self._spec = spec
+        self._buffer: deque = deque()
+        self._buffer_size = buffer_size
+        self._cond = threading.Condition()
+        self._done = False
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _iterate(self) -> Iterator[Element]:
+        graph = Graph.from_bytes(self._spec["graph_bytes"])
+        policy = ShardingPolicy(self._spec["policy"])
+        if policy == ShardingPolicy.STATIC:
+            for shard in self._spec.get("static_shards") or []:
+                g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"])
+                yield from build_iterator(g, ExecContext())
+        else:  # OFF: whole dataset, worker-specific order
+            g = graph.bind_seed(self._spec["worker_seed"])
+            yield from build_iterator(g, ExecContext())
+
+    def _produce(self) -> None:
+        try:
+            for elem in self._iterate():
+                t0 = time.perf_counter()
+                with self._cond:
+                    while len(self._buffer) >= self._buffer_size:
+                        if self._worker._stopping.is_set() or self._stopped.is_set():
+                            return
+                        self._cond.wait(timeout=0.1)
+                    self._buffer.append(elem)
+                    self._worker.metrics.batches_produced += 1
+                    self._cond.notify_all()
+                self._worker.metrics.busy_time += time.perf_counter() - t0
+                if self._stopped.is_set():
+                    return
+        finally:
+            with self._cond:
+                self._done = True
+                self._cond.notify_all()
+
+    def get(self, job_id: str, round_index: int, consumer_index: int):
+        with self._cond:
+            if self._buffer:
+                elem = self._buffer.popleft()
+                self._cond.notify_all()
+                return FetchStatus.OK, elem
+            if self._done:
+                self.status = "done"
+                return FetchStatus.END_OF_TASK, None
+            return FetchStatus.PENDING, None
+
+    def buffer_occupancy(self) -> float:
+        with self._cond:
+            return len(self._buffer) / max(1, self._buffer_size)
+
+    def stop(self) -> None:
+        self._stopped.set()
+        with self._cond:
+            self._cond.notify_all()
+
+
+class _DynamicRunner(_BufferedRunner):
+    """DYNAMIC: pull disjoint shards from the dispatcher FCFS (paper §3.3)."""
+
+    CHECKPOINT_EVERY = 64
+
+    def _iterate(self) -> Iterator[Element]:
+        graph = Graph.from_bytes(self._spec["graph_bytes"])
+        job_id = self._spec["job_id"]
+        wid = self._worker.worker_id
+        while not self._worker._stopping.is_set() and not self._stopped.is_set():
+            try:
+                resp = self._worker._dispatcher.call(
+                    "get_shard", job_id=job_id, worker_id=wid
+                )
+            except TransportError:
+                # dispatcher down: no NEW shards can be handed out, but we keep
+                # serving what we have (paper §3.4) — retry after a pause.
+                time.sleep(0.2)
+                continue
+            if resp.get("done"):
+                return
+            if resp.get("wait"):  # queue empty but a shard may be re-queued
+                time.sleep(0.05)
+                continue
+            sid, shard, offset = resp["shard_id"], resp["shard"], resp.get("offset", 0)
+            g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"] + sid)
+            produced = 0
+            for i, elem in enumerate(build_iterator(g, ExecContext())):
+                if i < offset:  # resume after checkpointed prefix
+                    continue
+                produced += 1
+                yield elem
+                if (
+                    self._spec.get("resume_offsets")
+                    and produced % self.CHECKPOINT_EVERY == 0
+                ):
+                    self._try_call(
+                        "checkpoint_offset",
+                        job_id=job_id,
+                        shard_id=sid,
+                        worker_id=wid,
+                        offset=i + 1,
+                    )
+            self._try_call(
+                "complete_shard", job_id=job_id, shard_id=sid, worker_id=wid
+            )
+
+    def _try_call(self, method: str, **kw: Any) -> None:
+        try:
+            self._worker._dispatcher.call(method, **kw)
+        except TransportError:
+            # dispatcher down: completions are liveness-critical (an
+            # uncompleted shard blocks job finish) — queue for redelivery
+            # from the heartbeat loop once the dispatcher is back.
+            if method == "complete_shard":
+                self._worker._pending_control.append((method, kw))
+
+
+class _SharedRunner(_TaskRunner):
+    """Ephemeral data sharing (§3.5): read via the worker-global cache."""
+
+    def __init__(self, worker: "Worker", spec: Dict[str, Any]):
+        super().__init__()
+        self._worker = worker
+        self._cache = worker._get_or_create_cache(spec)
+        self._cache.attach(spec["job_id"])
+
+    def get(self, job_id: str, round_index: int, consumer_index: int):
+        t0 = time.perf_counter()
+        batch, eos = self._cache.read(job_id)
+        self._worker.metrics.busy_time += time.perf_counter() - t0
+        if eos:
+            self.status = "done"
+            return FetchStatus.END_OF_TASK, None
+        return FetchStatus.OK, batch
+
+    def buffer_occupancy(self) -> float:
+        lo, hi = self._cache.window_range()
+        return min(1.0, (hi - lo) / max(1, self._cache._capacity))
+
+
+class _CoordinatedRunner(_TaskRunner):
+    """Coordinated reads (§3.6): round-indexed same-bucket batch service.
+
+    The element stream arrives pre-grouped (bucket_by_sequence_length →
+    group_by_window(m) → flat_map upstream), so m consecutive elements form
+    one round's same-bucket window.  All m consumers of round r read their
+    ``consumer_index``-th element of that window from this worker.  Windows
+    materialize lazily in round order; finished rounds are GC'd once every
+    consumer has read its slot.
+    """
+
+    MAX_BUFFERED_ROUNDS = 8
+
+    def __init__(self, worker: "Worker", spec: Dict[str, Any]):
+        super().__init__()
+        self._worker = worker
+        self._m = max(1, int(spec["num_consumers"]))
+        graph = Graph.from_bytes(spec["graph_bytes"]).bind_seed(spec["worker_seed"])
+        self._it = build_iterator(graph, ExecContext())
+        self._lock = threading.Lock()
+        self._rounds: Dict[int, List[Element]] = {}  # round -> window
+        self._consumed: Dict[int, set] = {}
+        self._served_rounds: set = set()  # fully-consumed (GC'd) rounds
+        self._exhausted = False
+        self.evictions = 0
+
+    def _materialize(self, round_index: int) -> bool:
+        """Produce ONE window and bind it to ``round_index``.
+
+        Global round numbers are striped across workers (round r is served by
+        worker r mod n), so this worker only materializes windows for the
+        rounds actually directed at it — window identity per round is what
+        matters, not global ordering.
+
+        Skew control: a fast consumer may request rounds far ahead of a slow
+        one.  Evicting the slow consumer's pending window would strand it in
+        a PENDING retry loop forever, so instead the fast consumer WAITS —
+        we refuse to materialize more than MAX_BUFFERED_ROUNDS windows and
+        return PENDING, bounding consumer skew (the paper's "predetermined
+        round-robin client-side buffer slots" imply the same backpressure).
+        """
+        if len(self._rounds) >= self.MAX_BUFFERED_ROUNDS:
+            self.evictions += 1  # counted as backpressure events
+            return False
+        window: List[Element] = []
+        t0 = time.perf_counter()
+        for _ in range(self._m):
+            try:
+                window.append(next(self._it))
+            except StopIteration:
+                self._exhausted = True
+                break
+        self._worker.metrics.busy_time += time.perf_counter() - t0
+        if len(window) < self._m:
+            return False
+        self._rounds[round_index] = window
+        self._consumed[round_index] = set()
+        self._worker.metrics.batches_produced += self._m
+        return True
+
+    def extra_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "coordinated_rounds_served": len(self._served_rounds),
+                "coordinated_evictions": self.evictions,
+                "coordinated_rounds_buffered": len(self._rounds),
+            }
+
+    def get(self, job_id: str, round_index: int, consumer_index: int):
+        with self._lock:
+            if round_index not in self._rounds:
+                if round_index in self._served_rounds:
+                    # consumer retry after GC (shouldn't happen with one read
+                    # per consumer per round) — treat as pending
+                    return FetchStatus.PENDING, None
+                if self._exhausted or not self._materialize(round_index):
+                    if self._exhausted:
+                        self.status = "done"
+                        return FetchStatus.END_OF_TASK, None
+                    return FetchStatus.PENDING, None
+            elem = self._rounds[round_index][consumer_index % self._m]
+            self._consumed[round_index].add(consumer_index % self._m)
+            if len(self._consumed[round_index]) == self._m:
+                del self._rounds[round_index]
+                del self._consumed[round_index]
+                self._served_rounds.add(round_index)
+            return FetchStatus.OK, elem
+
+    def buffer_occupancy(self) -> float:
+        with self._lock:
+            return len(self._rounds) / self.MAX_BUFFERED_ROUNDS
+
+
+class Worker:
+    def __init__(
+        self,
+        dispatcher_address: str,
+        worker_id: Optional[str] = None,
+        transport: str = "inproc",
+        buffer_size: int = 8,
+        heartbeat_interval: float = 0.5,
+        cache_capacity: int = 16,
+        tags: Optional[Dict[str, Any]] = None,
+    ):
+        self.worker_id = worker_id or new_id("worker")
+        self.metrics = WorkerMetrics()
+        self._dispatcher = Stub(dispatcher_address)
+        self._transport = transport
+        self._buffer_size = buffer_size
+        self._hb_interval = heartbeat_interval
+        self._cache_capacity = cache_capacity
+        self._tags = tags or {}
+        self._tasks: Dict[str, _TaskRunner] = {}
+        self._task_specs: Dict[str, Dict[str, Any]] = {}
+        self._caches: Dict[str, SlidingWindowCache] = {}
+        self._pending_control: deque = deque()  # control calls to redeliver
+        self._lock = threading.RLock()
+        self._stopping = threading.Event()
+        self._failed = threading.Event()  # simulated crash (tests/benchmarks)
+        self._hb_thread: Optional[threading.Thread] = None
+        self._tcp: Optional[TCPServer] = None
+        self.address = ""
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> "Worker":
+        if self._transport == "tcp":
+            self._tcp = TCPServer(self).start()
+            self.address = self._tcp.address
+        elif self._transport == "grpc":
+            from .transport import GrpcServer
+
+            self._tcp = GrpcServer(self).start()  # same stop()/address API
+            self.address = self._tcp.address
+        else:
+            self.address = INPROC.bind(self.worker_id, self)
+        resp = self._dispatcher.call(
+            "register_worker",
+            worker_id=self.worker_id,
+            address=self.address,
+            tags=self._tags,
+        )
+        for spec in resp.get("tasks", []):
+            self._add_task(spec)
+        self._hb_thread = threading.Thread(target=self._heartbeat_loop, daemon=True)
+        self._hb_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stopping.set()
+        with self._lock:
+            for r in self._tasks.values():
+                r.stop()
+        if self._tcp is not None:
+            self._tcp.stop()
+        elif self.address:
+            INPROC.unbind(self.worker_id)
+
+    def fail(self) -> None:
+        """Simulate a crash: stop serving and heartbeating WITHOUT dispatcher
+        notification — failure must be detected via heartbeat timeout."""
+        self._failed.set()
+        self._stopping.set()
+        if self._tcp is not None:
+            self._tcp.stop()
+        elif self.address:
+            INPROC.unbind(self.worker_id)
+
+    # ------------------------------------------------------------------
+    # Task management
+    # ------------------------------------------------------------------
+    def _add_task(self, spec: Dict[str, Any]) -> None:
+        with self._lock:
+            tid = spec["task_id"]
+            if tid in self._tasks:
+                return
+            if spec.get("shared"):
+                runner: _TaskRunner = _SharedRunner(self, spec)
+            elif spec.get("round_robin"):
+                runner = _CoordinatedRunner(self, spec)
+            elif spec["policy"] == ShardingPolicy.DYNAMIC.value:
+                runner = _DynamicRunner(self, spec, self._buffer_size)
+            else:
+                runner = _BufferedRunner(self, spec, self._buffer_size)
+            self._tasks[tid] = runner
+            self._task_specs[tid] = spec
+
+    def _get_or_create_cache(self, spec: Dict[str, Any]) -> SlidingWindowCache:
+        key = spec["cache_key"] or spec["dataset_id"]
+        with self._lock:
+            if key not in self._caches:
+                graph = Graph.from_bytes(spec["graph_bytes"]).bind_seed(
+                    spec["worker_seed"]
+                )
+                producer = build_iterator(graph, ExecContext())
+                self._caches[key] = SlidingWindowCache(
+                    producer, capacity=self._cache_capacity
+                )
+            return self._caches[key]
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stopping.wait(self._hb_interval):
+            try:
+                while self._pending_control:
+                    method, kw = self._pending_control[0]
+                    self._dispatcher.call(method, **kw)  # raises if still down
+                    self._pending_control.popleft()
+                with self._lock:
+                    occ = [r.buffer_occupancy() for r in self._tasks.values()]
+                    completed = [
+                        tid for tid, r in self._tasks.items() if r.status == "done"
+                    ]
+                resp = self._dispatcher.call(
+                    "worker_heartbeat",
+                    worker_id=self.worker_id,
+                    buffer_occupancy=sum(occ) / len(occ) if occ else 0.0,
+                    cpu_busy=self.metrics.busy_time,
+                    completed_tasks=completed,
+                )
+                if resp.get("reregister"):
+                    resp = self._dispatcher.call(
+                        "register_worker",
+                        worker_id=self.worker_id,
+                        address=self.address,
+                        tags=self._tags,
+                    )
+                    for spec in resp.get("tasks", []):
+                        self._add_task(spec)
+                    continue
+                for spec in resp.get("new_tasks", []):
+                    self._add_task(spec)
+                valid = resp.get("valid_tasks")
+                if valid is not None:
+                    self._prune_tasks(set(valid))
+            except TransportError:
+                continue  # dispatcher down: keep serving current tasks (§3.4)
+
+    def _prune_tasks(self, valid: set) -> None:
+        """Drop orphaned tasks (finished/garbage-collected jobs)."""
+        with self._lock:
+            for tid in list(self._tasks):
+                if tid not in valid:
+                    self._tasks[tid].stop()
+                    del self._tasks[tid]
+                    self._task_specs.pop(tid, None)
+
+    # ------------------------------------------------------------------
+    # RPC entry point (data plane)
+    # ------------------------------------------------------------------
+    def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        if self._failed.is_set():
+            raise TransportError(f"worker {self.worker_id} is down")
+        if method == "get_element":
+            return self._get_element(**payload)
+        if method == "ping":
+            return {"worker_id": self.worker_id}
+        if method == "stats":
+            return self._stats()
+        raise ValueError(f"worker: unknown method {method}")
+
+    def _get_element(
+        self,
+        task_id: str,
+        job_id: str = "",
+        round_index: int = -1,
+        consumer_index: int = -1,
+    ) -> Dict[str, Any]:
+        self.metrics.rpc_count += 1
+        with self._lock:
+            runner = self._tasks.get(task_id)
+            spec = self._task_specs.get(task_id)
+        if runner is None:
+            return {"status": FetchStatus.PENDING.value}
+        status, elem = runner.get(job_id, round_index, consumer_index)
+        out: Dict[str, Any] = {"status": status.value}
+        if elem is not None:
+            self.metrics.batches_served += 1
+            nbytes = element_nbytes(elem)
+            self.metrics.bytes_served += nbytes
+            if spec and spec.get("compression"):
+                out["element_compressed"] = compress(
+                    encode_element(elem), spec["compression"]
+                )
+            else:
+                out["element"] = elem
+            out["nbytes"] = nbytes
+        return out
+
+    def _stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "worker_id": self.worker_id,
+                "metrics": vars(self.metrics).copy(),
+                "tasks": {
+                    tid: {
+                        "status": r.status,
+                        "occupancy": r.buffer_occupancy(),
+                        "kind": type(r).__name__,
+                        **r.extra_stats(),
+                    }
+                    for tid, r in self._tasks.items()
+                },
+                "caches": {
+                    k: vars(c.stats).copy() for k, c in self._caches.items()
+                },
+            }

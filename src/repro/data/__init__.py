@@ -1,0 +1,37 @@
+"""repro.data — tf.data-equivalent input pipeline framework (graph IR +
+execution engine + static optimizations + runtime autotuning)."""
+from .dataset import Dataset
+from .graph import AUTOTUNE, Graph, Node
+from .registry import FnRef, register
+from .elements import (
+    decode_element,
+    element_nbytes,
+    encode_element,
+    padded_stack_elements,
+    stack_elements,
+)
+from .iterators import ExecContext, build_iterator
+from .optimizer import optimize_graph
+from .autotune import Autotuner
+from .sources import RecordWriter, read_records, write_record_shards
+
+__all__ = [
+    "AUTOTUNE",
+    "Autotuner",
+    "Dataset",
+    "ExecContext",
+    "FnRef",
+    "Graph",
+    "Node",
+    "RecordWriter",
+    "build_iterator",
+    "decode_element",
+    "element_nbytes",
+    "encode_element",
+    "optimize_graph",
+    "padded_stack_elements",
+    "read_records",
+    "register",
+    "stack_elements",
+    "write_record_shards",
+]

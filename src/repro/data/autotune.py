@@ -1,0 +1,112 @@
+"""Runtime AUTOTUNE harness (paper §3.2).
+
+A background thread periodically inspects per-op stats and hill-climbs the
+knobs flagged AUTOTUNE:
+
+* parallel-map width — increased while the op is the pipeline bottleneck
+  (highest busy-time share) and the last increase improved throughput;
+  decreased when an increase regressed (classic 1D hill climb, the same shape
+  as tf.data's gradient-free tuner).
+* prefetch buffer size — increased while the buffer runs near-empty
+  (consumer starving) and capped by a memory budget.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .iterators import ExecContext, Knob, OpStats
+
+
+@dataclass
+class _KnobState:
+    last_value: int = 0
+    last_rate: float = 0.0
+    last_elements: int = 0
+    last_time: float = 0.0
+    direction: int = 1
+
+
+class Autotuner:
+    def __init__(
+        self,
+        ctx: ExecContext,
+        interval: float = 0.25,
+        ram_budget_bytes: int = 1 << 30,
+    ):
+        self._ctx = ctx
+        self._interval = interval
+        self._ram_budget = ram_budget_bytes
+        self._states: Dict[int, _KnobState] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)
+
+    def _run(self) -> None:
+        while not self._stop.is_set() and not self._ctx.stop_event.is_set():
+            time.sleep(self._interval)
+            try:
+                self.step()
+            except Exception:  # tuner must never kill the pipeline
+                pass
+
+    # -- one tuning step (also callable synchronously from tests) ---------
+    def step(self) -> None:
+        now = time.perf_counter()
+        for idx, stats in list(self._ctx.stats.items()):
+            if stats.parallelism is not None and stats.parallelism.autotune:
+                self._tune_parallelism(idx, stats, now)
+            if stats.buffer_size is not None and stats.buffer_size.autotune:
+                self._tune_buffer(stats)
+
+    def _tune_parallelism(self, idx: int, stats: OpStats, now: float) -> None:
+        knob = stats.parallelism
+        st = self._states.setdefault(idx, _KnobState(last_value=knob.get()))
+        dt = now - st.last_time
+        if st.last_time == 0.0 or dt <= 0:
+            st.last_time, st.last_elements = now, stats.elements
+            return
+        rate = (stats.elements - st.last_elements) / dt
+        if rate >= st.last_rate * 1.05:
+            # improving: keep moving in the same direction
+            knob.value = max(knob.minimum, min(knob.maximum, knob.get() + st.direction))
+        elif rate < st.last_rate * 0.95:
+            # regressed: flip direction and step back
+            st.direction = -st.direction
+            knob.value = max(knob.minimum, min(knob.maximum, knob.get() + st.direction))
+        st.last_rate, st.last_elements, st.last_time = rate, stats.elements, now
+
+    def _tune_buffer(self, stats: OpStats) -> None:
+        knob = stats.buffer_size
+        # Consumer starving (buffer mostly empty) => producer-bound; a deeper
+        # buffer only helps smooth bursts, grow gently. Buffer mostly full =>
+        # already ahead; shrink to return memory.
+        if stats.buffer_occupancy < 0.1:
+            knob.value = min(knob.maximum, knob.get() + 1)
+        elif stats.buffer_occupancy > 0.9 and knob.get() > knob.minimum:
+            knob.value = knob.get() - 1
+
+    # -- introspection ------------------------------------------------------
+    def snapshot(self) -> Dict[int, Dict[str, float]]:
+        out: Dict[int, Dict[str, float]] = {}
+        for idx, stats in self._ctx.stats.items():
+            out[idx] = {
+                "name": stats.name,
+                "elements": stats.elements,
+                "mean_cost": stats.mean_cost,
+                "parallelism": stats.parallelism.get() if stats.parallelism else 0,
+                "buffer": stats.buffer_size.get() if stats.buffer_size else 0,
+                "occupancy": stats.buffer_occupancy,
+            }
+        return out

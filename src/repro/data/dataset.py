@@ -1,0 +1,218 @@
+"""Fluent, tf.data-style Dataset API over the serializable Graph IR.
+
+Datasets are immutable descriptions; iteration compiles the graph (after
+static optimization passes) and executes it.  ``Dataset.distribute(...)``
+hands the graph to a tf.data-service-style deployment (repro.core) and
+returns a client-backed dataset — the same one-line opt-in as the paper's
+Fig. 4.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+from .elements import Element
+from .graph import AUTOTUNE, Graph, Node, validate
+from .iterators import ExecContext, build_iterator
+from .registry import FnRef
+
+
+class Dataset:
+    def __init__(self, graph: Graph):
+        self.graph = graph
+
+    # -- sources -----------------------------------------------------------
+    @staticmethod
+    def range(n: int) -> "Dataset":
+        return Dataset(Graph([Node("range", {"n": int(n)})]))
+
+    @staticmethod
+    def from_list(items: Sequence[Element]) -> "Dataset":
+        return Dataset(Graph([Node("from_list", {"items": list(items)})]))
+
+    @staticmethod
+    def from_files(pattern: str) -> "Dataset":
+        return Dataset(Graph([Node("files", {"pattern": pattern})]))
+
+    @staticmethod
+    def from_generator(fn: Callable, **kwargs: Any) -> "Dataset":
+        return Dataset(
+            Graph([Node("generator", {"fn": FnRef.from_callable(fn, **kwargs)})])
+        )
+
+    # -- transforms ----------------------------------------------------------
+    def _with(self, op: str, **params: Any) -> "Dataset":
+        return Dataset(self.graph.appended(Node(op, params)))
+
+    def map(
+        self,
+        fn: Callable,
+        num_parallel_calls: int = 0,
+        stochastic: bool = False,
+        **fn_kwargs: Any,
+    ) -> "Dataset":
+        return self._with(
+            "map",
+            fn=FnRef.from_callable(fn, **fn_kwargs),
+            num_parallel_calls=num_parallel_calls,
+            stochastic=stochastic,
+        )
+
+    def filter(self, fn: Callable, **fn_kwargs: Any) -> "Dataset":
+        return self._with("filter", fn=FnRef.from_callable(fn, **fn_kwargs))
+
+    def batch(self, batch_size: int, drop_remainder: bool = False) -> "Dataset":
+        return self._with("batch", batch_size=batch_size, drop_remainder=drop_remainder)
+
+    def padded_batch(
+        self,
+        batch_size: int,
+        drop_remainder: bool = False,
+        pad_value: float = 0,
+        pad_to_multiple: int = 1,
+    ) -> "Dataset":
+        return self._with(
+            "padded_batch",
+            batch_size=batch_size,
+            drop_remainder=drop_remainder,
+            pad_value=pad_value,
+            pad_to_multiple=pad_to_multiple,
+        )
+
+    def unbatch(self) -> "Dataset":
+        return self._with("unbatch")
+
+    def shuffle(self, buffer_size: int, seed: Optional[int] = None) -> "Dataset":
+        params: Dict[str, Any] = {"buffer_size": buffer_size}
+        if seed is not None:
+            params["seed"] = seed
+        return Dataset(self.graph.appended(Node("shuffle", params)))
+
+    def repeat(self, count: Optional[int] = None) -> "Dataset":
+        return self._with("repeat", count=count)
+
+    def take(self, count: int) -> "Dataset":
+        return self._with("take", count=count)
+
+    def skip(self, count: int) -> "Dataset":
+        return self._with("skip", count=count)
+
+    def prefetch(self, buffer_size: int = AUTOTUNE) -> "Dataset":
+        return self._with("prefetch", buffer_size=buffer_size)
+
+    def cache(self) -> "Dataset":
+        return self._with("cache")
+
+    def flat_map(self, fn: Callable, **fn_kwargs: Any) -> "Dataset":
+        return self._with("flat_map", fn=FnRef.from_callable(fn, **fn_kwargs))
+
+    def interleave(self, fn: Callable, cycle_length: int = 2, **fn_kwargs: Any) -> "Dataset":
+        return self._with(
+            "interleave", fn=FnRef.from_callable(fn, **fn_kwargs), cycle_length=cycle_length
+        )
+
+    def bucket_by_sequence_length(
+        self,
+        boundaries: Sequence[int],
+        batch_size: int,
+        length_fn: Callable,
+        pad_value: float = 0,
+        drop_remainder: bool = False,
+        emit_bucket_id: bool = False,
+        pad_to_boundary: bool = True,
+    ) -> "Dataset":
+        return self._with(
+            "bucket_by_sequence_length",
+            boundaries=list(boundaries),
+            batch_size=batch_size,
+            length_fn=FnRef.from_callable(length_fn),
+            pad_value=pad_value,
+            drop_remainder=drop_remainder,
+            emit_bucket_id=emit_bucket_id,
+            pad_to_boundary=pad_to_boundary,
+        )
+
+    def group_by_window(
+        self, key_fn: Callable, window_size: int, drop_remainder: bool = False
+    ) -> "Dataset":
+        return self._with(
+            "group_by_window",
+            key_fn=FnRef.from_callable(key_fn),
+            window_size=window_size,
+            drop_remainder=drop_remainder,
+        )
+
+    # -- service hand-off ------------------------------------------------------
+    def distribute(
+        self,
+        service: Any = None,
+        processing_mode: str = "off",
+        job_name: Optional[str] = None,
+        num_consumers: int = 0,
+        consumer_index: int = 0,
+        sharing: bool = False,
+        compression: Optional[str] = None,
+        target_workers: str = "any",
+        max_workers: int = 0,
+        resume_offsets: bool = False,
+        buffer_size: int = 8,
+    ) -> "Dataset":
+        """Process this dataset in a tf.data-service-style deployment.
+
+        ``service`` is a ``repro.core.service.ServiceHandle`` (or dispatcher
+        address string for TCP deployments).  Mirrors the paper's Fig. 4 API.
+        """
+        from ..core.client import DistributedDataset  # lazy: avoid cycle
+
+        return DistributedDataset(
+            graph=self.graph,
+            service=service,
+            processing_mode=processing_mode,
+            job_name=job_name,
+            num_consumers=num_consumers,
+            consumer_index=consumer_index,
+            sharing=sharing,
+            compression=compression,
+            target_workers=target_workers,
+            max_workers=max_workers,
+            resume_offsets=resume_offsets,
+            buffer_size=buffer_size,
+        )
+
+    # -- execution --------------------------------------------------------------
+    def __iter__(self) -> Iterator[Element]:
+        return self.iterator()
+
+    def iterator(
+        self,
+        ctx: Optional[ExecContext] = None,
+        optimize: bool = True,
+        autotune: bool = False,
+    ) -> Iterator[Element]:
+        from .optimizer import optimize_graph  # lazy: avoid cycle
+
+        graph = optimize_graph(self.graph) if optimize else self.graph
+        validate(graph)
+        ctx = ctx or ExecContext()
+        it = build_iterator(graph, ctx)
+        if autotune:
+            from .autotune import Autotuner
+
+            tuner = Autotuner(ctx)
+            tuner.start()
+            return _closing_iter(it, tuner.stop)
+        return it
+
+    def as_numpy(self, limit: Optional[int] = None) -> List[Element]:
+        out = []
+        for i, e in enumerate(self):
+            if limit is not None and i >= limit:
+                break
+            out.append(e)
+        return out
+
+
+def _closing_iter(it: Iterator[Element], on_close: Callable[[], None]) -> Iterator[Element]:
+    try:
+        yield from it
+    finally:
+        on_close()

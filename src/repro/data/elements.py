@@ -1,0 +1,179 @@
+"""Element model for the data pipeline.
+
+An *element* flowing through a pipeline is either a single numpy array or a
+(possibly nested) dict of numpy arrays / python scalars.  Elements must be
+(a) cheaply size-estimable (for buffer accounting and autotuning),
+(b) serializable (workers ship batches to clients over a transport), and
+(c) paddable/stackable (for `batch` / `padded_batch`).
+
+Serialization uses a small self-describing binary format (length-prefixed
+msgpack with a raw-buffer extension for ndarrays) so that client/worker
+processes do not need to share a pickle codebase version.  Pickle remains
+available as a fallback codec for exotic payloads.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import struct
+from typing import Any, Dict, Iterator, List, Mapping, Tuple
+
+import numpy as np
+
+try:  # msgpack is available in-container; fall back to pickle otherwise.
+    import msgpack
+
+    _HAVE_MSGPACK = True
+except Exception:  # pragma: no cover
+    _HAVE_MSGPACK = False
+
+Element = Any  # np.ndarray | scalar | Dict[str, "Element"]
+
+_NDARRAY_EXT = 42
+
+
+def _pack_ndarray(arr: np.ndarray) -> bytes:
+    """Header (dtype, shape) + raw bytes. C-contiguous copy if needed."""
+    arr = np.ascontiguousarray(arr)
+    header = msgpack.packb((arr.dtype.str, arr.shape), use_bin_type=True)
+    return struct.pack("<I", len(header)) + header + arr.tobytes()
+
+
+def _unpack_ndarray(data: bytes) -> np.ndarray:
+    (hlen,) = struct.unpack_from("<I", data, 0)
+    dtype_str, shape = msgpack.unpackb(data[4 : 4 + hlen], raw=False)
+    return np.frombuffer(data[4 + hlen :], dtype=np.dtype(dtype_str)).reshape(shape)
+
+
+def _default(obj: Any) -> Any:
+    if isinstance(obj, np.ndarray):
+        return msgpack.ExtType(_NDARRAY_EXT, _pack_ndarray(obj))
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"cannot msgpack-encode {type(obj)}")
+
+
+def _ext_hook(code: int, data: bytes) -> Any:
+    if code == _NDARRAY_EXT:
+        return _unpack_ndarray(data)
+    return msgpack.ExtType(code, data)  # pragma: no cover
+
+
+def encode_element(elem: Element, codec: str = "msgpack") -> bytes:
+    """Serialize an element. codec: 'msgpack' (default) or 'pickle'."""
+    if codec == "msgpack" and _HAVE_MSGPACK:
+        try:
+            return b"M" + msgpack.packb(elem, default=_default, use_bin_type=True)
+        except TypeError:
+            pass  # fall through to pickle for unsupported payloads
+    return b"P" + pickle.dumps(elem, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_element(data: bytes) -> Element:
+    tag, body = data[:1], data[1:]
+    if tag == b"M":
+        return msgpack.unpackb(body, ext_hook=_ext_hook, raw=False, strict_map_key=False)
+    if tag == b"P":
+        return pickle.loads(body)
+    raise ValueError(f"unknown element codec tag {tag!r}")
+
+
+def element_nbytes(elem: Element) -> int:
+    """Approximate in-memory footprint of an element (for buffer accounting)."""
+    if isinstance(elem, np.ndarray):
+        return elem.nbytes
+    if isinstance(elem, Mapping):
+        return sum(element_nbytes(v) for v in elem.values())
+    if isinstance(elem, (list, tuple)):
+        return sum(element_nbytes(v) for v in elem)
+    if isinstance(elem, (bytes, bytearray, str)):
+        return len(elem)
+    return 8  # scalar
+
+
+def map_structure(fn, elem: Element) -> Element:
+    if isinstance(elem, Mapping):
+        return {k: map_structure(fn, v) for k, v in elem.items()}
+    if isinstance(elem, (list, tuple)):
+        return type(elem)(map_structure(fn, v) for v in elem)
+    return fn(elem)
+
+
+def flatten_structure(elem: Element) -> List[Any]:
+    out: List[Any] = []
+
+    def rec(e):
+        if isinstance(e, Mapping):
+            for k in sorted(e.keys()):
+                rec(e[k])
+        elif isinstance(e, (list, tuple)):
+            for v in e:
+                rec(v)
+        else:
+            out.append(e)
+
+    rec(elem)
+    return out
+
+
+def _as_array(x: Any) -> np.ndarray:
+    return x if isinstance(x, np.ndarray) else np.asarray(x)
+
+
+def stack_elements(elems: List[Element]) -> Element:
+    """Stack a list of same-structure elements into one batched element."""
+    first = elems[0]
+    if isinstance(first, Mapping):
+        return {k: stack_elements([e[k] for e in elems]) for k in first.keys()}
+    if isinstance(first, (list, tuple)):
+        return type(first)(
+            stack_elements([e[i] for e in elems]) for i in range(len(first))
+        )
+    return np.stack([_as_array(e) for e in elems])
+
+
+def padded_stack_elements(
+    elems: List[Element], pad_value: float = 0, pad_to_multiple: int = 1
+) -> Element:
+    """Stack variable-length leading-dim arrays, padding to the max length.
+
+    ``pad_to_multiple`` rounds the padded length up (bucket-friendly shapes).
+    Scalars/uniform arrays are stacked normally.
+    """
+    first = elems[0]
+    if isinstance(first, Mapping):
+        return {
+            k: padded_stack_elements([e[k] for e in elems], pad_value, pad_to_multiple)
+            for k in first.keys()
+        }
+    if isinstance(first, (list, tuple)):
+        return type(first)(
+            padded_stack_elements([e[i] for e in elems], pad_value, pad_to_multiple)
+            for i in range(len(first))
+        )
+    arrs = [_as_array(e) for e in elems]
+    if arrs[0].ndim == 0:
+        return np.stack(arrs)
+    max_len = max(a.shape[0] for a in arrs)
+    if pad_to_multiple > 1:
+        max_len = -(-max_len // pad_to_multiple) * pad_to_multiple
+    out = np.full(
+        (len(arrs), max_len) + arrs[0].shape[1:], pad_value, dtype=arrs[0].dtype
+    )
+    for i, a in enumerate(arrs):
+        out[i, : a.shape[0]] = a
+    return out
+
+
+def element_spec(elem: Element) -> Element:
+    """(shape, dtype) spec tree for an element."""
+
+    def spec(x):
+        a = _as_array(x)
+        return (tuple(a.shape), str(a.dtype))
+
+    return map_structure(spec, elem)

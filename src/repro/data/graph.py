@@ -1,0 +1,113 @@
+"""Serializable pipeline graph IR.
+
+A pipeline is a linear chain of ``Node``s rooted at a source.  The dispatcher
+serializes the graph and ships it to every worker (mirroring tf.data service
+shipping the tf.data GraphDef); workers deserialize and execute it, optionally
+bound to a source *shard* and re-seeded per worker.
+
+Nested pipelines (``interleave``) hold a sub-graph in their params.
+"""
+from __future__ import annotations
+
+import copy
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+AUTOTUNE = -1  # sentinel for "let the runtime tune this parameter"
+
+SOURCE_OPS = ("range", "files", "generator", "from_list")
+# Ops whose per-element cost may warrant parallelism / autotuning.
+PARALLELIZABLE_OPS = ("map",)
+
+
+@dataclass
+class Node:
+    op: str
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    def copy(self) -> "Node":
+        return Node(self.op, copy.deepcopy(self.params))
+
+    def describe(self) -> str:
+        fn = self.params.get("fn")
+        extra = f"({fn.describe()})" if fn is not None else ""
+        return f"{self.op}{extra}"
+
+
+@dataclass
+class Graph:
+    nodes: List[Node] = field(default_factory=list)
+
+    # -- construction -----------------------------------------------------
+    def appended(self, node: Node) -> "Graph":
+        return Graph(self.nodes + [node])
+
+    @property
+    def source(self) -> Node:
+        return self.nodes[0]
+
+    # -- serialization ----------------------------------------------------
+    def to_bytes(self) -> bytes:
+        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "Graph":
+        g = pickle.loads(data)
+        if not isinstance(g, Graph):
+            raise TypeError("payload is not a pipeline Graph")
+        return g
+
+    def copy(self) -> "Graph":
+        return Graph([n.copy() for n in self.nodes])
+
+    # -- worker-side binding ----------------------------------------------
+    def bind_shard(self, shard: Dict[str, Any]) -> "Graph":
+        """Return a copy whose source is restricted to ``shard``.
+
+        Shard kinds:
+          {"kind": "file", "path": p}            — one source file
+          {"kind": "range", "start": a, "stop": b} — element index range
+          {"kind": "mod", "num": n, "index": i}  — static mod-sharding
+        """
+        g = self.copy()
+        g.source.params["shard"] = dict(shard)
+        return g
+
+    def bind_seed(self, seed: int) -> "Graph":
+        """Re-seed all stochastic ops (shuffle, sampled maps) for a worker.
+
+        With the OFF sharding policy each worker processes the full dataset in
+        its own random order (paper §3.3) — this is the hook that makes the
+        orders distinct.
+        """
+        g = self.copy()
+        for i, node in enumerate(g.nodes):
+            if node.op == "shuffle":
+                node.params["seed"] = (seed * 1_000_003 + i) & 0x7FFFFFFF
+            if node.op == "map" and node.params.get("stochastic"):
+                node.params["seed"] = (seed * 10_007 + i) & 0x7FFFFFFF
+        return g
+
+    # -- introspection -----------------------------------------------------
+    def describe(self) -> str:
+        return " -> ".join(n.describe() for n in self.nodes)
+
+    def fingerprint(self) -> str:
+        """Stable content hash; identical pipelines across jobs share caches
+        (ephemeral data sharing keys on this, paper §3.5)."""
+        import hashlib
+
+        return hashlib.sha256(self.to_bytes()).hexdigest()[:16]
+
+
+def validate(graph: Graph) -> None:
+    if not graph.nodes:
+        raise ValueError("empty pipeline graph")
+    if graph.nodes[0].op not in SOURCE_OPS:
+        raise ValueError(
+            f"pipeline must start with a source op, got '{graph.nodes[0].op}'"
+        )
+    for node in graph.nodes[1:]:
+        if node.op in SOURCE_OPS:
+            raise ValueError(f"source op '{node.op}' not at graph root")

@@ -1,0 +1,468 @@
+"""Pipeline execution engine.
+
+``build_iterator(graph, ctx)`` compiles a pipeline Graph into a python
+iterator chain.  Parallel maps use a thread pool whose width is a *shared
+mutable* knob so the AUTOTUNE harness can adjust it while the pipeline runs
+(mirrors tf.data's runtime autotuning, §3.2).  Prefetch runs a daemon thread
+into a bounded queue.
+
+Every node gets an ``OpStats`` slot in the context: element counts and
+cumulative processing time feed both the autotuner and the benchmark harness
+(per-op cost breakdown).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import queue
+import random
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .elements import Element, padded_stack_elements, stack_elements
+from .graph import AUTOTUNE, Graph, Node
+
+_END = object()
+
+
+@dataclass
+class Knob:
+    """A shared, autotunable integer parameter."""
+
+    value: int
+    minimum: int = 1
+    maximum: int = 64
+    autotune: bool = False
+
+    def get(self) -> int:
+        return max(self.minimum, min(self.value, self.maximum))
+
+
+@dataclass
+class OpStats:
+    name: str = ""
+    elements: int = 0
+    busy_time: float = 0.0  # cumulative seconds spent inside the op's fn
+    parallelism: Optional[Knob] = None
+    buffer_size: Optional[Knob] = None
+    buffer_occupancy: float = 0.0  # EMA of queue fill fraction
+
+    def record(self, dt: float, n: int = 1) -> None:
+        self.elements += n
+        self.busy_time += dt
+
+    @property
+    def mean_cost(self) -> float:
+        return self.busy_time / self.elements if self.elements else 0.0
+
+
+@dataclass
+class ExecContext:
+    seed: int = 0
+    stop_event: threading.Event = field(default_factory=threading.Event)
+    stats: Dict[int, OpStats] = field(default_factory=dict)
+    cache_store: Dict[int, List[Element]] = field(default_factory=dict)
+    default_parallelism: int = 4
+
+    def stat(self, idx: int, name: str) -> OpStats:
+        if idx not in self.stats:
+            self.stats[idx] = OpStats(name=name)
+        return self.stats[idx]
+
+
+# ---------------------------------------------------------------------------
+# Threaded operators
+# ---------------------------------------------------------------------------
+class _ParallelMap:
+    """Ordered parallel map with a dynamically adjustable thread-pool width.
+
+    Keeps at most ``parallelism`` futures in flight; yields results in input
+    order (deterministic by default, like tf.data's deterministic=True).
+    """
+
+    def __init__(
+        self,
+        upstream: Iterator[Element],
+        fn: Callable[[Element], Element],
+        knob: Knob,
+        stats: OpStats,
+        stop_event: threading.Event,
+    ):
+        self._up = upstream
+        self._fn = fn
+        self._knob = knob
+        self._stats = stats
+        self._stop = stop_event
+        self._pool = ThreadPoolExecutor(max_workers=knob.maximum)
+        self._pending: collections.deque[Future] = collections.deque()
+        self._exhausted = False
+
+    def _timed(self, elem: Element) -> Element:
+        t0 = time.perf_counter()
+        out = self._fn(elem)
+        self._stats.record(time.perf_counter() - t0)
+        return out
+
+    def _fill(self) -> None:
+        while not self._exhausted and len(self._pending) < self._knob.get():
+            try:
+                elem = next(self._up)
+            except StopIteration:
+                self._exhausted = True
+                return
+            self._pending.append(self._pool.submit(self._timed, elem))
+
+    def __iter__(self) -> Iterator[Element]:
+        try:
+            self._fill()
+            while self._pending:
+                if self._stop.is_set():
+                    break
+                fut = self._pending.popleft()
+                result = fut.result()
+                self._fill()
+                yield result
+        finally:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class _Prefetch:
+    """Background-thread prefetch into a bounded queue."""
+
+    def __init__(
+        self,
+        upstream: Iterator[Element],
+        knob: Knob,
+        stats: OpStats,
+        stop_event: threading.Event,
+    ):
+        self._up = upstream
+        self._knob = knob
+        self._stats = stats
+        self._stop = stop_event
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=max(1, knob.get()))
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self) -> None:
+        try:
+            for elem in self._up:
+                while True:
+                    if self._stop.is_set():
+                        return
+                    try:
+                        self._q.put(elem, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+            self._q.put(_END)
+        except BaseException as e:  # propagate upstream failures to consumer
+            self._q.put(e)
+
+    def __iter__(self) -> Iterator[Element]:
+        self._thread.start()
+        while True:
+            if self._stop.is_set():
+                return
+            item = self._q.get()
+            occ = self._q.qsize() / max(1, self._q.maxsize)
+            self._stats.buffer_occupancy = 0.9 * self._stats.buffer_occupancy + 0.1 * occ
+            if item is _END:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            self._stats.elements += 1
+            yield item
+
+
+# ---------------------------------------------------------------------------
+# Pure-python operators
+# ---------------------------------------------------------------------------
+def _shuffle(up: Iterator[Element], buffer_size: int, seed: int) -> Iterator[Element]:
+    rng = random.Random(seed)
+    buf: List[Element] = []
+    for elem in up:
+        buf.append(elem)
+        if len(buf) >= buffer_size:
+            i = rng.randrange(len(buf))
+            buf[i], buf[-1] = buf[-1], buf[i]
+            yield buf.pop()
+    rng.shuffle(buf)
+    yield from buf
+
+
+def _batch(
+    up: Iterator[Element], batch_size: int, drop_remainder: bool
+) -> Iterator[Element]:
+    chunk: List[Element] = []
+    for elem in up:
+        chunk.append(elem)
+        if len(chunk) == batch_size:
+            yield stack_elements(chunk)
+            chunk = []
+    if chunk and not drop_remainder:
+        yield stack_elements(chunk)
+
+
+def _padded_batch(
+    up: Iterator[Element],
+    batch_size: int,
+    drop_remainder: bool,
+    pad_value: float,
+    pad_to_multiple: int,
+) -> Iterator[Element]:
+    chunk: List[Element] = []
+    for elem in up:
+        chunk.append(elem)
+        if len(chunk) == batch_size:
+            yield padded_stack_elements(chunk, pad_value, pad_to_multiple)
+            chunk = []
+    if chunk and not drop_remainder:
+        yield padded_stack_elements(chunk, pad_value, pad_to_multiple)
+
+
+def _unbatch(up: Iterator[Element]) -> Iterator[Element]:
+    for elem in up:
+        if isinstance(elem, dict):
+            n = len(next(iter(elem.values())))
+            for i in range(n):
+                yield {k: v[i] for k, v in elem.items()}
+        else:
+            yield from elem
+
+
+def _bucket_by_sequence_length(
+    up: Iterator[Element],
+    boundaries: List[int],
+    batch_size: int,
+    length_fn: Callable[[Element], int],
+    pad_value: float,
+    drop_remainder: bool,
+    emit_bucket_id: bool,
+    pad_to_boundary: bool,
+) -> Iterator[Element]:
+    """Bucketize variable-length elements; emit per-bucket padded batches.
+
+    Buckets are (0, b0], (b0, b1], ..., (bn, inf).  This is the front half of
+    the paper's coordinated-reads pipeline (Fig. 7).
+    """
+    buckets: Dict[int, List[Element]] = collections.defaultdict(list)
+    bounds = list(boundaries)
+
+    def bucket_of(n: int) -> int:
+        for i, b in enumerate(bounds):
+            if n <= b:
+                return i
+        return len(bounds)
+
+    def emit(bid: int, items: List[Element]) -> Element:
+        pad_mult = 1
+        if pad_to_boundary and bid < len(bounds):
+            batch = padded_stack_elements(items, pad_value, 1)
+            # pad fully up to the bucket boundary for shape-stable executables
+            batch = _pad_batch_to(batch, bounds[bid], pad_value)
+        else:
+            batch = padded_stack_elements(items, pad_value, pad_mult)
+        if emit_bucket_id:
+            if not isinstance(batch, dict):
+                batch = {"data": batch}
+            batch = dict(batch)
+            batch["_bucket"] = np.int64(bid)
+        return batch
+
+    for elem in up:
+        bid = bucket_of(int(length_fn(elem)))
+        buckets[bid].append(elem)
+        if len(buckets[bid]) == batch_size:
+            yield emit(bid, buckets.pop(bid))
+    if not drop_remainder:
+        for bid in sorted(buckets):
+            yield emit(bid, buckets[bid])
+
+
+def _pad_batch_to(batch: Element, length: int, pad_value: float) -> Element:
+    def pad(a: np.ndarray) -> np.ndarray:
+        if a.ndim < 2 or a.shape[1] >= length:
+            return a
+        out = np.full((a.shape[0], length) + a.shape[2:], pad_value, dtype=a.dtype)
+        out[:, : a.shape[1]] = a
+        return out
+
+    if isinstance(batch, dict):
+        return {k: (pad(v) if isinstance(v, np.ndarray) else v) for k, v in batch.items()}
+    return pad(batch)
+
+
+def _group_by_window(
+    up: Iterator[Element],
+    key_fn: Callable[[Element], int],
+    window_size: int,
+    drop_remainder: bool,
+) -> Iterator[List[Element]]:
+    windows: Dict[int, List[Element]] = collections.defaultdict(list)
+    for elem in up:
+        k = int(key_fn(elem))
+        windows[k].append(elem)
+        if len(windows[k]) == window_size:
+            yield windows.pop(k)
+    if not drop_remainder:
+        for k in sorted(windows):
+            yield windows[k]
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+def build_iterator(graph: Graph, ctx: Optional[ExecContext] = None) -> Iterator[Element]:
+    ctx = ctx or ExecContext()
+    return _build_from(graph, len(graph.nodes), ctx)
+
+
+def _build_from(graph: Graph, upto: int, ctx: ExecContext) -> Iterator[Element]:
+    from .sources import iterate_source  # local import to avoid cycle
+
+    it: Optional[Iterator[Element]] = None
+    for idx in range(upto):
+        node = graph.nodes[idx]
+        op, p = node.op, node.params
+        stats = ctx.stat(idx, node.describe())
+
+        if op in ("range", "files", "generator", "from_list"):
+            it = iterate_source(p, op)
+        elif op == "map":
+            fn = p["fn"].resolve()
+            npar = p.get("num_parallel_calls", 0) or 0
+            if npar == 0:
+                it = _sequential_map(it, fn, stats)
+            else:
+                if stats.parallelism is None:
+                    auto = npar == AUTOTUNE
+                    width = ctx.default_parallelism if auto else int(npar)
+                    stats.parallelism = Knob(
+                        value=width, minimum=1, maximum=32, autotune=auto
+                    )
+                it = iter(
+                    _ParallelMap(it, fn, stats.parallelism, stats, ctx.stop_event)
+                )
+        elif op == "filter":
+            fn = p["fn"].resolve()
+            it = (e for e in it if fn(e))
+        elif op == "batch":
+            it = _batch(it, int(p["batch_size"]), bool(p.get("drop_remainder", False)))
+        elif op == "padded_batch":
+            it = _padded_batch(
+                it,
+                int(p["batch_size"]),
+                bool(p.get("drop_remainder", False)),
+                p.get("pad_value", 0),
+                int(p.get("pad_to_multiple", 1)),
+            )
+        elif op == "unbatch":
+            it = _unbatch(it)
+        elif op == "shuffle":
+            it = _shuffle(it, int(p["buffer_size"]), int(p.get("seed", ctx.seed)))
+        elif op == "repeat":
+            it = _repeat(graph, idx, p.get("count"), ctx)
+        elif op == "take":
+            it = itertools.islice(it, int(p["count"]))
+        elif op == "skip":
+            it = itertools.islice(it, int(p["count"]), None)
+        elif op == "prefetch":
+            size = int(p.get("buffer_size", 2))
+            auto = p.get("buffer_size") == AUTOTUNE
+            if stats.buffer_size is None:
+                stats.buffer_size = Knob(
+                    value=2 if auto else size, minimum=1, maximum=128, autotune=auto
+                )
+            it = iter(_Prefetch(it, stats.buffer_size, stats, ctx.stop_event))
+        elif op == "cache":
+            it = _cache(it, idx, ctx)
+        elif op == "flat_map":
+            fn = p["fn"].resolve()
+            it = (x for e in it for x in fn(e))
+        elif op == "interleave":
+            fn = p["fn"].resolve()
+            it = _interleave(it, fn, int(p.get("cycle_length", 2)))
+        elif op == "bucket_by_sequence_length":
+            it = _bucket_by_sequence_length(
+                it,
+                list(p["boundaries"]),
+                int(p["batch_size"]),
+                p["length_fn"].resolve(),
+                p.get("pad_value", 0),
+                bool(p.get("drop_remainder", False)),
+                bool(p.get("emit_bucket_id", False)),
+                bool(p.get("pad_to_boundary", True)),
+            )
+        elif op == "group_by_window":
+            it = _group_by_window(
+                it,
+                p["key_fn"].resolve(),
+                int(p["window_size"]),
+                bool(p.get("drop_remainder", False)),
+            )
+        else:
+            raise ValueError(f"unknown pipeline op: {op}")
+    assert it is not None
+    return it
+
+
+def _sequential_map(
+    up: Iterator[Element], fn: Callable, stats: OpStats
+) -> Iterator[Element]:
+    for elem in up:
+        t0 = time.perf_counter()
+        out = fn(elem)
+        stats.record(time.perf_counter() - t0)
+        yield out
+
+
+def _repeat(
+    graph: Graph, idx: int, count: Optional[int], ctx: ExecContext
+) -> Iterator[Element]:
+    epochs = itertools.count() if count in (None, -1) else range(int(count))
+    for _ in epochs:
+        if ctx.stop_event.is_set():
+            return
+        yield from _build_from(graph, idx, ctx)
+
+
+def _cache(up: Iterator[Element], idx: int, ctx: ExecContext) -> Iterator[Element]:
+    if idx in ctx.cache_store:
+        yield from ctx.cache_store[idx]
+        return
+    acc: List[Element] = []
+    for elem in up:
+        acc.append(elem)
+        yield elem
+    ctx.cache_store[idx] = acc
+
+
+def _interleave(
+    up: Iterator[Element], fn: Callable[[Element], Any], cycle_length: int
+) -> Iterator[Element]:
+    active: List[Iterator[Element]] = []
+    upstream_done = False
+
+    def refill() -> None:
+        nonlocal upstream_done
+        while not upstream_done and len(active) < cycle_length:
+            try:
+                active.append(iter(fn(next(up))))
+            except StopIteration:
+                upstream_done = True
+
+    refill()
+    i = 0
+    while active:
+        it = active[i % len(active)]
+        try:
+            yield next(it)
+            i += 1
+        except StopIteration:
+            active.remove(it)
+            refill()

@@ -1,0 +1,131 @@
+"""Static graph optimization passes (paper §3.2).
+
+Before a client registers an input pipeline with the dispatcher it is run
+through these passes — the same set tf.data applies: dead-transformation
+elimination, map/map and map/filter fusion, and transparent prefetch
+injection.  Passes are pure Graph→Graph functions, individually testable.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from .graph import AUTOTUNE, Graph, Node
+from .registry import FnRef
+
+Pass = Callable[[Graph], Graph]
+
+
+def _fuse_callables(f_ref: FnRef, g_ref: FnRef) -> FnRef:
+    f, g = f_ref.resolve(), g_ref.resolve()
+
+    def fused(x):
+        return g(f(x))
+
+    return FnRef(fn=fused)
+
+
+def fuse_maps(graph: Graph) -> Graph:
+    """map(f) -> map(g)  ==>  map(g∘f).
+
+    Fusing removes one hop of per-element dispatch overhead.  Parallelism of
+    the fused op is the max of the two (AUTOTUNE wins if either is AUTOTUNE);
+    stochastic ops keep their flag so re-seeding still reaches them.
+    """
+    nodes: List[Node] = []
+    for node in graph.nodes:
+        if nodes and node.op == "map" and nodes[-1].op == "map":
+            prev = nodes[-1]
+            p_par = prev.params.get("num_parallel_calls", 0)
+            n_par = node.params.get("num_parallel_calls", 0)
+            par = AUTOTUNE if AUTOTUNE in (p_par, n_par) else max(p_par, n_par)
+            nodes[-1] = Node(
+                "map",
+                {
+                    "fn": _fuse_callables(prev.params["fn"], node.params["fn"]),
+                    "num_parallel_calls": par,
+                    "stochastic": prev.params.get("stochastic", False)
+                    or node.params.get("stochastic", False),
+                },
+            )
+        else:
+            nodes.append(node.copy())
+    return Graph(nodes)
+
+
+def fuse_map_filter(graph: Graph) -> Graph:
+    """map(f) -> filter(p)  ==>  fused op evaluating p(f(x)) in one dispatch.
+
+    Implemented as a flat_map returning [] or [f(x)] — one pass over the data,
+    no intermediate hand-off between two python generators.
+    """
+    nodes: List[Node] = []
+    for node in graph.nodes:
+        if (
+            nodes
+            and node.op == "filter"
+            and nodes[-1].op == "map"
+            and not nodes[-1].params.get("num_parallel_calls")
+        ):
+            f = nodes[-1].params["fn"].resolve()
+            p = node.params["fn"].resolve()
+
+            def fused(x, _f=f, _p=p):
+                y = _f(x)
+                return [y] if _p(y) else []
+
+            nodes[-1] = Node("flat_map", {"fn": FnRef(fn=fused)})
+        else:
+            nodes.append(node.copy())
+    return Graph(nodes)
+
+
+def eliminate_dead(graph: Graph) -> Graph:
+    """Drop no-op transformations: take/skip(0)... prefetch->prefetch merges."""
+    nodes: List[Node] = []
+    for node in graph.nodes:
+        if node.op == "skip" and int(node.params.get("count", 0)) == 0:
+            continue
+        if node.op == "prefetch" and nodes and nodes[-1].op == "prefetch":
+            # consecutive prefetches: keep the larger buffer (AUTOTUNE dominates)
+            a = nodes[-1].params.get("buffer_size", 2)
+            b = node.params.get("buffer_size", 2)
+            nodes[-1].params["buffer_size"] = (
+                AUTOTUNE if AUTOTUNE in (a, b) else max(a, b)
+            )
+            continue
+        if node.op == "shuffle" and nodes and nodes[-1].op == "shuffle":
+            # shuffle∘shuffle: one shuffle with the larger buffer suffices
+            nodes[-1].params["buffer_size"] = max(
+                nodes[-1].params["buffer_size"], node.params["buffer_size"]
+            )
+            continue
+        if node.op == "repeat" and nodes and nodes[-1].op == "repeat":
+            a, b = nodes[-1].params.get("count"), node.params.get("count")
+            nodes[-1].params["count"] = (
+                None if None in (a, b) or -1 in (a, b) else a * b
+            )
+            continue
+        nodes.append(node.copy())
+    return Graph(nodes)
+
+
+def inject_prefetch(graph: Graph) -> Graph:
+    """Transparently append prefetch(AUTOTUNE) if the pipeline lacks a final
+    prefetch — decouples producer and consumer (tf.data does the same)."""
+    if graph.nodes and graph.nodes[-1].op != "prefetch":
+        return graph.appended(Node("prefetch", {"buffer_size": AUTOTUNE}))
+    return graph
+
+
+DEFAULT_PASSES: List[Pass] = [eliminate_dead, fuse_maps, fuse_map_filter]
+
+
+def optimize_graph(
+    graph: Graph, passes: List[Pass] = None, add_prefetch: bool = False
+) -> Graph:
+    g = graph
+    for p in passes if passes is not None else DEFAULT_PASSES:
+        g = p(g)
+    if add_prefetch:
+        g = inject_prefetch(g)
+    return g

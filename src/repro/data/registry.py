@@ -1,0 +1,154 @@
+"""Named-function registry for serializable pipeline graphs.
+
+The dispatcher ships dataset *definitions* (not code) to workers, mirroring
+tf.data service shipping a GraphDef.  User-defined transformations therefore
+must be referenceable by name: workers resolve ``registry:<name>`` against the
+same module import, which is how production systems (TF, Beam) handle UDFs.
+
+Closures are still supported for in-process execution via a pickle fallback —
+``FnRef.from_callable`` picks the strongest representation available.
+"""
+from __future__ import annotations
+
+import importlib
+import pickle
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+_REGISTRY: Dict[str, Callable] = {}
+# Process-local stash for unpicklable callables (lambdas/closures) used with
+# in-process deployments; see FnRef.__getstate__.  Tokens are memoized per
+# function object so repeated serializations of the same pipeline yield
+# identical bytes (content fingerprints must be stable for data sharing).
+_LOCAL_FNS: Dict[str, Callable] = {}
+_LOCAL_TOKENS: Dict[int, str] = {}
+
+
+def register(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a function under a stable name."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY and _REGISTRY[name] is not fn:
+            raise ValueError(f"function name already registered: {name}")
+        _REGISTRY[name] = fn
+        fn.__registry_name__ = name
+        return fn
+
+    return deco
+
+
+def lookup(name: str) -> Callable:
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name.startswith("__local__/"):
+        fn = _LOCAL_FNS.get(name)
+        if fn is None:
+            raise KeyError(
+                "pipeline function was defined in another process and is not "
+                "serializable — register it with @repro.data.register(name) "
+                "to ship it to remote workers"
+            )
+        return fn
+    # Allow fully-qualified "module:attr" references that self-register on import.
+    if ":" in name:
+        mod, attr = name.split(":", 1)
+        fn = importlib.import_module(mod)
+        for part in attr.split("."):
+            fn = getattr(fn, part)
+        return fn  # type: ignore[return-value]
+    raise KeyError(f"unknown registered function: {name}")
+
+
+@dataclass
+class FnRef:
+    """A serializable reference to a transformation function.
+
+    One of ``name`` (registry / module path), ``payload`` (pickled callable)
+    or ``fn`` (direct in-process reference; serialized lazily) is set.
+    ``kwargs`` are bound keyword arguments, letting a single registered
+    function serve parameterized transforms (the common production pattern:
+    config in the graph, code on the worker).
+
+    Lambdas/closures work in-process; shipping them across processes requires
+    them to be picklable (registered/module-level functions always are).
+    """
+
+    name: Optional[str] = None
+    payload: Optional[bytes] = None
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+    fn: Optional[Callable] = None  # transient; dropped on serialization
+
+    @staticmethod
+    def from_callable(fn: Callable, **kwargs: Any) -> "FnRef":
+        kw = tuple(sorted(kwargs.items()))
+        name = getattr(fn, "__registry_name__", None)
+        if name is not None:
+            return FnRef(name=name, kwargs=kw)
+        if (
+            getattr(fn, "__module__", None)
+            and getattr(fn, "__qualname__", "")
+            and "<locals>" not in fn.__qualname__
+            and "<lambda>" not in fn.__qualname__
+        ):
+            return FnRef(name=f"{fn.__module__}:{fn.__qualname__}", kwargs=kw)
+        # Closure/lambda: keep the direct reference; pickle only if shipped.
+        return FnRef(fn=fn, kwargs=kw)
+
+    def __deepcopy__(self, memo: dict) -> "FnRef":
+        # Functions are immutable — share the reference on graph copies so
+        # in-process lambdas survive optimizer passes / shard binding.
+        return FnRef(self.name, self.payload, self.kwargs, self.fn)
+
+    def __copy__(self) -> "FnRef":
+        return self.__deepcopy__({})
+
+    def __getstate__(self) -> dict:
+        name, payload = self.name, self.payload
+        if name is None and payload is None:
+            assert self.fn is not None
+            try:
+                payload = pickle.dumps(self.fn, protocol=pickle.HIGHEST_PROTOCOL)
+            except Exception:
+                # Same-process fallback: stash the callable in a process-local
+                # side table (works for in-proc deployments / local workers;
+                # a remote process resolving this token gets a clear error).
+                key = id(self.fn)
+                token = _LOCAL_TOKENS.get(key)
+                if token is None or _LOCAL_FNS.get(token) is not self.fn:
+                    import uuid
+
+                    token = f"__local__/{uuid.uuid4().hex}"
+                    _LOCAL_TOKENS[key] = token
+                    _LOCAL_FNS[token] = self.fn
+                name = token
+        return {"name": name, "payload": payload, "kwargs": self.kwargs}
+
+    def __setstate__(self, state: dict) -> None:
+        self.name = state["name"]
+        self.payload = state["payload"]
+        self.kwargs = state["kwargs"]
+        self.fn = None
+
+    def resolve(self) -> Callable:
+        if self.fn is not None:
+            fn = self.fn
+        elif self.name is not None:
+            fn = lookup(self.name)
+        else:
+            assert self.payload is not None
+            fn = pickle.loads(self.payload)
+        if self.kwargs:
+            bound = dict(self.kwargs)
+
+            def wrapped(*args: Any) -> Any:
+                return fn(*args, **bound)
+
+            return wrapped
+        return fn
+
+    def describe(self) -> str:
+        if self.name:
+            return self.name
+        if self.fn is not None:
+            return getattr(self.fn, "__qualname__", "<callable>")
+        return "<pickled>"

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for compute hot-spots, each with a pure-jnp oracle.
+
+Layout per kernel: ``<name>/kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``<name>/ops.py`` (jit'd public wrapper with an ``interpret`` switch
+for CPU validation), ``<name>/ref.py`` (pure-jnp oracle the tests sweep
+against).
+
+Kernels:
+  flash_attention  — blocked causal/windowed GQA attention, online softmax
+  decode_attention — flash-decoding split-K attention over a deep KV cache
+  ssd_scan         — mamba2 SSD chunked scan (matmul formulation, MXU)
+  moe_router       — fused softmax + top-k + capacity-slot assignment
+  fused_augment    — crop+flip+normalize image augmentation (the DALI-style
+                     "preprocess on the accelerator" alternative of paper §2)
+"""

@@ -1,0 +1,32 @@
+"""Public jit'd wrapper for the flash-decoding Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_fwd
+
+
+@partial(
+    jax.jit,
+    static_argnames=("window", "num_splits", "block_s", "interpret"),
+)
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    lengths: jnp.ndarray,  # (B,) valid lengths
+    window: int = 0,
+    num_splits: int = 8,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    return decode_attention_fwd(
+        q, k_cache, v_cache, lengths,
+        window=window,
+        num_splits=num_splits,
+        block_s=block_s,
+        interpret=interpret,
+    )

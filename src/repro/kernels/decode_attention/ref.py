@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, Hq, D) — one new token per sequence
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    lengths: jnp.ndarray,  # (B,) int32 — valid cache length per sequence
+    window: int = 0,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    kv_pos = jnp.arange(S)
+    mask = kv_pos[None, :] < lengths[:, None]  # (B, S)
+    if window > 0:
+        mask &= kv_pos[None, :] > lengths[:, None] - 1 - window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Public jit'd wrapper for the flash attention Pallas kernel.
+
+``interpret=True`` executes the kernel body in Python on CPU (validation);
+on TPU the default lowers through Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_offset", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    return flash_attention_fwd(
+        q, k, v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,3 @@
+from .ops import fused_augment
+
+__all__ = ["fused_augment"]

@@ -1,0 +1,26 @@
+"""Public jit'd wrapper for the fused augmentation Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_augment_fwd
+
+
+@partial(jax.jit, static_argnames=("out_h", "out_w", "interpret"))
+def fused_augment(
+    images: jnp.ndarray,  # (B, H, W, C) uint8
+    crops: jnp.ndarray,  # (B, 2) int32 top-left corners
+    flips: jnp.ndarray,  # (B,) int32 flags
+    mean: jnp.ndarray,  # (C,) f32
+    std: jnp.ndarray,  # (C,) f32
+    out_h: int = 224,
+    out_w: int = 224,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    return fused_augment_fwd(
+        images, crops, flips, mean, std,
+        out_h=out_h, out_w=out_w, interpret=interpret,
+    )

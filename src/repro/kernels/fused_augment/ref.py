@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for fused crop + horizontal-flip + normalize."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_augment_ref(
+    images: jnp.ndarray,  # (B, H, W, C) uint8
+    crops: jnp.ndarray,  # (B, 2) int32 — (y0, x0) top-left corners
+    flips: jnp.ndarray,  # (B,) int32 ∈ {0, 1}
+    mean: jnp.ndarray,  # (C,) f32
+    std: jnp.ndarray,  # (C,) f32
+    out_h: int,
+    out_w: int,
+) -> jnp.ndarray:
+    def one(img, crop, flip):
+        tile = jax.lax.dynamic_slice(
+            img, (crop[0], crop[1], 0), (out_h, out_w, img.shape[-1])
+        ).astype(jnp.float32)
+        tile = jnp.where(flip > 0, tile[:, ::-1, :], tile)
+        return (tile / 255.0 - mean[None, None, :]) / std[None, None, :]
+
+    return jax.vmap(one)(images, crops, flips)

@@ -1,0 +1,3 @@
+from .ops import moe_router
+
+__all__ = ["moe_router"]

@@ -1,0 +1,26 @@
+"""Public jit'd wrapper for the fused MoE router Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import moe_router_fwd
+
+
+@partial(jax.jit, static_argnames=("k", "capacity", "block_t", "interpret"))
+def moe_router(
+    logits: jnp.ndarray,  # (T, E)
+    k: int,
+    capacity: int,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Returns (expert_ids (T,k) i32, gates (T,k) f32, slots (T,k) i32).
+
+    A (token, choice) is dropped iff ``slots >= capacity``.
+    """
+    return moe_router_fwd(
+        logits, k, capacity, block_t=block_t, interpret=interpret
+    )

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused MoE router.
+
+Semantics: softmax over experts, top-k by iterated argmax (ties broken
+toward the lower expert id), gates renormalized over the k winners.
+Capacity slots are assigned token-major over the flattened (T·k) choice
+list — identical to the gshard exclusive-cumsum in ``models.layers.moe_ffn``
+— so ``slot >= capacity`` means the (token, choice) is dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_router_ref(
+    logits: jnp.ndarray,  # (T, E) f32
+    k: int,
+    capacity: int,
+):
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ids = []
+    gates = []
+    p = probs
+    for _ in range(k):
+        idx = jnp.argmax(p, axis=-1)
+        ids.append(idx)
+        gates.append(jnp.take_along_axis(p, idx[:, None], axis=-1)[:, 0])
+        p = p.at[jnp.arange(T), idx].set(-1.0)
+    ids = jnp.stack(ids, axis=1)  # (T, k)
+    gates = jnp.stack(gates, axis=1)
+    gates = gates / jnp.maximum(gates.sum(axis=1, keepdims=True), 1e-9)
+
+    # token-major slot assignment (gshard exclusive cumsum over (T·k, E))
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    slots = (pos * flat).sum(-1).reshape(T, k)
+    return ids.astype(jnp.int32), gates, slots.astype(jnp.int32)

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel for the mamba2 SSD scan (chunked matmul formulation).
+
+The SSD duality turns the token recurrence into per-chunk matmuls (MXU
+work) plus a tiny cross-chunk state recurrence:
+
+  intra-chunk:  Y_d = (C Bᵀ ∘ L ∘ dt) X            (Q×Q)·(Q×P) dots
+  state in:     Y_o = (C ∘ exp(cum)) H_prev         (Q×N)·(N×P) dot
+  state update: H   = exp(cum_Q) H_prev + (B ∘ w)ᵀ X  (N×Q)·(Q×P) dot
+
+Grid: (B, H, num_chunks); the chunk dimension is sequential ("arbitrary")
+and the running state H (N, P) f32 lives in VMEM scratch — the cross-chunk
+recurrence never leaves the core.  Block tiling (VMEM):
+
+  x  (1, Q, 1, P)   dt (1, Q, 1)   B/C (1, Q, 1, N)
+  y  (1, Q, 1, P)   final state (1, 1, N, P) emitted on the last chunk
+
+Q=chunk (default 128), N=state, P=head dim — all matmul dims are 128-ish,
+MXU-aligned for the assigned mamba2 config (N=128, P=64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+    y_ref, h_out_ref,
+    h_ref,  # scratch: running state (N, P) f32
+    *,
+    chunk: int,
+    length: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    Q = chunk
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    a = a_ref[0]  # scalar decay rate for this head
+    D = d_ref[0]
+
+    # zero padded tail tokens (last chunk when L % Q != 0)
+    tok = ci * Q + jax.lax.broadcasted_iota(jnp.int32, (Q, 1), 0)
+    valid = (tok < length)[:, 0]  # (Q,)
+    dt = jnp.where(valid, dt, 0.0)
+
+    da = dt * a  # (Q,) log-decay per token
+    cum = jnp.cumsum(da)  # inclusive
+    # L[i, j] = exp(cum_i - cum_j) for j <= i else 0  (decay from j+1..i)
+    seg = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    )
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_i . B_j
+    W = CB * Lmat * dt[None, :]  # weight token j's input into token i's output
+    y_diag = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    h_prev = h_ref[...]  # (N, P)
+    state_in = Cm * jnp.exp(cum)[:, None]  # (Q, N)
+    y_off = jax.lax.dot_general(
+        state_in, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = y_diag + y_off + x * D
+    y_ref[0, :, 0, :] = jnp.where(valid[:, None], y, 0.0).astype(y_ref.dtype)
+
+    # state update: H = exp(cum_Q) H_prev + Σ_j exp(cum_Q - cum_j) dt_j B_j x_jᵀ
+    cq = cum[Q - 1]
+    w = jnp.exp(cq - cum) * dt  # (Q,)
+    bw = Bm * w[:, None]  # (Q, N)
+    h_new = jnp.exp(cq) * h_prev + jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    h_ref[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        h_out_ref[0, 0, :, :] = h_new
+
+
+def ssd_scan_fwd(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H) — post-softplus step sizes
+    a: jnp.ndarray,  # (H,) negative decay rates
+    Bm: jnp.ndarray,  # (B, L, H, N)
+    Cm: jnp.ndarray,  # (B, L, H, N)
+    D: jnp.ndarray,  # (H,) skip gain
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    nc = pl.cdiv(L, chunk)
+    Lp = nc * chunk
+    if Lp != L:
+        pad = Lp - L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    grid = (Bsz, H, nc)
+    kern = functools.partial(_ssd_kernel, chunk=chunk, length=L)
+    y, h_final = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Lp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        x,
+        dt.astype(jnp.float32),
+        a.astype(jnp.float32),
+        Bm,
+        Cm,
+        D.astype(jnp.float32),
+    )
+    return y[:, :L], h_final

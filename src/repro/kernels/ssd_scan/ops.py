@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the SSD scan Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "return_state"))
+def ssd_scan(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)
+    a: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, L, H, N)
+    Cm: jnp.ndarray,  # (B, L, H, N)
+    D: jnp.ndarray,  # (H,)
+    chunk: int = 128,
+    interpret: bool = False,
+    return_state: bool = False,
+):
+    y, h = ssd_scan_fwd(x, dt, a, Bm, Cm, D, chunk=chunk, interpret=interpret)
+    return (y, h) if return_state else y

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the mamba2 SSD scan: sequential token recurrence.
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . h_t + D * x_t
+
+Shapes follow the SSD paper (heads already expanded — no GQA-style groups):
+  x  (B, L, H, P)  dt (B, L, H)  a (H,)  Bm/Cm (B, L, H, N)  D (H,)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    D: jnp.ndarray,
+) -> jnp.ndarray:
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        decay = jnp.exp(dt_t * af[None, :])  # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", B_t, dt_t, x_t
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            xf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2),
+            Bf.transpose(1, 0, 2, 3),
+            Cf.transpose(1, 0, 2, 3),
+        ),
+    )
+    y = ys.transpose(1, 0, 2, 3)  # (B, L, H, P)
+    y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype)

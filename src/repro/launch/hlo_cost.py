@@ -1,0 +1,314 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE —
+for scan-over-layers models that under-reports FLOPs by ~num_layers×.  This
+module parses the optimized (post-SPMD, per-device) HLO text and computes:
+
+  * flops  — dot/convolution flops, weighted by computation invocation count
+             (while bodies × trip count, fusion/called bodies × caller count)
+  * bytes  — memory traffic at fusion granularity: operand + result bytes of
+             top-level instructions (fusions counted as single instructions,
+             mirroring XLA's fusion-boundary bytes-accessed model)
+  * collective operand bytes, invocation-weighted (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute)
+
+Trip counts come from the while op's ``backend_config known_trip_count``
+(present for scan-lowered loops), falling back to the largest integer
+literal in the loop condition.
+
+Validated in tests against unrolled-vs-scanned small models and against the
+analytic 6·N·D estimate for dense LMs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_DT_ALT = "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True))
+_SHAPE_TOKEN = re.compile(rf"\b({_DT_ALT})\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_ATTR_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _nelems(dims) * _DTYPE_BYTES[dtype]
+
+
+_OPERAND_REF = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result: List[Tuple[str, str]]  # shape tokens of the result type
+    operand_names: List[str]  # %refs inside the call parens
+    attrs: str  # text after the closing paren of the args
+
+    def result_bytes(self) -> int:
+        return sum(_shape_bytes(d, s) for d, s in self.result)
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    symtab: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+
+    def operand_shapes(self, ins: Instruction) -> List[List[Tuple[str, str]]]:
+        return [self.symtab.get(n, []) for n in ins.operand_names]
+
+    def operand_bytes(self, ins: Instruction) -> int:
+        return sum(
+            _shape_bytes(d, s)
+            for shapes in self.operand_shapes(ins)
+            for d, s in shapes
+        )
+
+    def param_slice_bytes(self) -> Dict[int, int]:
+        """For fused computations: parameters consumed ONLY by (dynamic-)slice
+        ops effectively read just the slice, not the whole operand — map
+        param index -> bytes actually read.  (Scan bodies slice one layer's
+        weights out of the stacked array; charging the full stack per trip
+        would overcount HBM traffic by num_layers×.)"""
+        # parameter index: use declaration order (HLO prints parameter(N)
+        # instructions in index order within a computation).
+        idx = 0
+        out: Dict[int, int] = {}
+        uses: Dict[str, List[str]] = {}
+        for ins in self.instructions:
+            for n in ins.operand_names:
+                uses.setdefault(n, []).append(ins.opcode)
+        for ins in self.instructions:
+            if ins.opcode != "parameter":
+                continue
+            consumers = uses.get(ins.name, [])
+            if consumers and all(c in ("dynamic-slice", "slice") for c in consumers):
+                # bytes read = sum of slice result bytes (count each use once)
+                total = 0
+                for other in self.instructions:
+                    if other.opcode in ("dynamic-slice", "slice") and ins.name in other.operand_names:
+                        total += other.result_bytes()
+                out[idx] = total
+            elif consumers and all(c == "dynamic-update-slice" for c in consumers):
+                # destination of an in-place update: written bytes = update size
+                total = 0
+                for other in self.instructions:
+                    if other.opcode == "dynamic-update-slice" and other.operand_names and other.operand_names[0] == ins.name:
+                        # update operand is the second arg
+                        if len(other.operand_names) > 1:
+                            upd = self.symtab.get(other.operand_names[1], [])
+                            total += sum(_shape_bytes(d, s) for d, s in upd)
+                out[idx] = total
+            idx += 1
+        return out
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, result_type, opcode, rest = m.groups()
+        # split args (balanced parens) from trailing attributes
+        depth = 1
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args, attrs = rest[:end], rest[end + 1 :]
+        ins = Instruction(
+            name=name,
+            opcode=opcode,
+            result=[(t.group(1), t.group(2)) for t in _SHAPE_TOKEN.finditer(result_type)],
+            operand_names=_OPERAND_REF.findall(args),
+            attrs=attrs,
+        )
+        cur.instructions.append(ins)
+        cur.symtab[name] = ins.result
+    return comps, entry
+
+
+def _trip_count(ins: Instruction, comps: Dict[str, Computation]) -> int:
+    m = _TRIP.search(ins.attrs)
+    if m:
+        return max(1, int(m.group(1)))
+    cm = _ATTR_COND.search(ins.attrs)
+    if cm and cm.group(1) in comps:
+        best = 0
+        for ci in comps[cm.group(1)].instructions:
+            for mm in _CONST_INT.finditer(ci.attrs):
+                best = max(best, int(mm.group(1)))
+            if ci.opcode == "constant":
+                # constants appear as `%c = s32[] constant(8)` — args empty,
+                # value inside parens was consumed into args text; re-check
+                pass
+        # also scan raw constants in the condition: value is in args of the
+        # constant instruction line which we stored as operands-free; use a
+        # permissive text search over instruction names/attrs
+        if best:
+            return best
+    return 1
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    while_trips: List[int] = field(default_factory=list)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while", "call",
+    "conditional", "bitcast", "bitcast-convert", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+# ops whose nested computation is tiny (reducers/comparators): do not recurse
+_TRIVIAL_CALLEES = {
+    "reduce", "reduce-window", "select-and-scatter", "sort", "map", "scatter",
+    "all-reduce", "reduce-scatter",
+}
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    out_elems = sum(_nelems(s) for _, s in ins.result)
+    contract = 1
+    m = _CONTRACT.search(ins.attrs)
+    lhs_shapes = comp.operand_shapes(ins)
+    if m and lhs_shapes and lhs_shapes[0]:
+        lhs_dims = lhs_shapes[0][0][1].split(",") if lhs_shapes[0][0][1] else []
+        for idx in m.group(1).split(","):
+            if idx.strip() and int(idx) < len(lhs_dims):
+                contract *= int(lhs_dims[int(idx)])
+    return 2.0 * out_elems * contract
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    cost = HloCost(
+        collective_detail={c: 0.0 for c in _COLLECTIVES},
+        collective_counts={c: 0.0 for c in _COLLECTIVES},
+    )
+    if entry is None:
+        return cost
+
+    def visit(comp: Computation, mult: float, count_bytes: bool, depth: int = 0) -> None:
+        if depth > 32:
+            return
+        for ins in comp.instructions:
+            op = ins.opcode
+            if op == "dot":
+                f = _dot_flops(ins, comp) * mult
+                cost.flops += f
+                cost.dot_flops += f
+            elif op == "fusion":
+                m = _ATTR_CALLS.search(ins.attrs)
+                callee = comps.get(m.group(1)) if m else None
+                if callee is not None:
+                    visit(callee, mult, False, depth + 1)
+                if count_bytes:
+                    b = ins.result_bytes()
+                    slice_map = callee.param_slice_bytes() if callee else {}
+                    for i, shapes in enumerate(comp.operand_shapes(ins)):
+                        full = sum(_shape_bytes(d, s) for d, s in shapes)
+                        b += min(slice_map.get(i, full), full)
+                    cost.bytes += b * mult
+            elif op == "while":
+                trips = _trip_count(ins, comps)
+                cost.while_trips.append(trips)
+                bm = _ATTR_BODY.search(ins.attrs)
+                if bm and bm.group(1) in comps:
+                    visit(comps[bm.group(1)], mult * trips, count_bytes, depth + 1)
+            elif op == "conditional":
+                bm = _ATTR_BRANCHES.search(ins.attrs)
+                if bm:
+                    for name in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        if name in comps:
+                            visit(comps[name], mult, count_bytes, depth + 1)
+            elif op == "call":
+                m = _ATTR_TO_APPLY.search(ins.attrs)
+                if m and m.group(1) in comps:
+                    visit(comps[m.group(1)], mult, count_bytes, depth + 1)
+            elif op in ("dynamic-slice", "slice"):
+                if count_bytes:
+                    cost.bytes += 2 * ins.result_bytes() * mult  # read + write slice
+            elif op == "dynamic-update-slice":
+                if count_bytes:
+                    upd = 0
+                    if len(ins.operand_names) > 1:
+                        upd = sum(
+                            _shape_bytes(d, s)
+                            for d, s in comp.symtab.get(ins.operand_names[1], [])
+                        )
+                    cost.bytes += 2 * upd * mult  # read update + write slice
+            else:
+                if op in _TRIVIAL_CALLEES:
+                    pass  # reducer bodies are scalar lambdas — skip
+                if count_bytes and op not in _SKIP_BYTES_OPS:
+                    cost.bytes += (ins.result_bytes() + comp.operand_bytes(ins)) * mult
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                ob = comp.operand_bytes(ins) * mult
+                cost.collective_bytes += ob
+                cost.collective_detail[base] += ob
+                cost.collective_counts[base] += mult
+        return
+
+    visit(comps[entry], 1.0, True)
+    return cost

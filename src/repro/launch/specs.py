@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable specs with NO device
+allocation — the dry-run lowers against these.  Modality frontends are
+STUBS per the assignment: whisper receives precomputed 1500-frame mel
+embeddings, qwen2-vl receives pre-embedded mixed text/vision tokens plus
+(t,h,w) M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model, build_model
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.layers import DTYPES
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = DTYPES[cfg.dtype]
+    if cfg.family == "encdec":
+        return {
+            "enc_embeds": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+            "positions": jax.ShapeDtypeStruct((B, S, 3), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(
+    model: Model, cfg: ModelConfig, shape: ShapeConfig
+) -> Tuple[Dict[str, Any], Any]:
+    """(token specs, cache specs) for one-new-token decode over a seq_len-deep
+    cache (the ``decode_*`` / ``long_*`` cells lower serve_step, NOT train)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda p: model.init_cache(p, B, S), params_shape(model)
+        )
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return {"tokens": tokens}, cache
+
+
+def params_shape(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_shape(model: Model, opt_cfg) -> Any:
+    from ..train import optimizer as opt
+
+    p = params_shape(model)
+    return jax.eval_shape(lambda: opt.init_state(p_concrete(p), opt_cfg))
+
+
+def p_concrete(shape_tree: Any) -> Any:
+    """ShapeDtypeStructs pass through eval_shape as abstract values."""
+    return shape_tree

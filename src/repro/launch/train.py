@@ -1,0 +1,128 @@
+"""Production training launcher: any assigned arch × shape on the
+production mesh (dry-run lowering) or a reduced config end-to-end on CPU,
+always fed through the disaggregated data service.
+
+Two modes:
+
+  --execute      REDUCED config, real training on this host's devices, data
+                 via a local service deployment (workers + dispatcher).
+                 The smoke-scale twin of the production job.
+  (default)      FULL config, production mesh: lower + compile the sharded
+                 train_step exactly as the multi-pod dry-run does, print the
+                 memory/cost analysis, and exit — the pre-flight a real
+                 cluster launch would run first.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --shape train_4k --seq-shard
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --execute --steps 30
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--execute", action="store_true",
+                    help="run a reduced config for real on this host")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if args.execute:
+        _execute_reduced(args)
+        return
+
+    # pre-flight: compile the production job (needs 512 host devices BEFORE
+    # jax initializes, so re-exec through the dryrun module)
+    from repro.launch import dryrun
+
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", args.arch.replace("-", "_").replace(".", "p"),
+        "--shape", args.shape, "--mesh", args.mesh,
+        "--tag", "preflight",
+    ]
+    if args.seq_shard:
+        cmd.append("--seq-shard")
+    if args.microbatches != 1:
+        cmd += ["--microbatches", str(args.microbatches)]
+    import subprocess
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    env = {**os.environ}
+    env["PYTHONPATH"] = f"{src}:{env.get('PYTHONPATH', '')}"
+    sys.exit(subprocess.run(cmd, env=env).returncode)
+
+
+def _execute_reduced(args) -> None:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import start_service
+    from repro.data import Dataset
+    from repro.launch import specs as S
+    from repro.models import build_model
+    from repro.models.config import ShapeConfig
+    from repro.train import (
+        AdamWConfig, init_train_state, make_train_step, save_checkpoint,
+    )
+
+    cfg = get_config(args.arch).scaled_down()
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, decay_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt)
+    step_fn = jax.jit(make_train_step(model, opt, microbatches=args.microbatches))
+
+    B, SEQ = 4, 64
+    shape = ShapeConfig("exec", SEQ, B, "train")
+    spec = S.train_input_specs(cfg, shape)
+
+    def make_batch(i):
+        rng = np.random.default_rng(int(i))
+        out = {}
+        for k, v in spec.items():
+            shp = v.shape[1:]  # per-example
+            if jnp.issubdtype(v.dtype, jnp.integer):
+                out[k] = rng.integers(1, cfg.vocab_size, shp).astype(np.int32)
+            else:
+                out[k] = rng.standard_normal(shp).astype(np.float32)
+        return out
+
+    svc = start_service(num_workers=args.workers)
+    try:
+        ds = (
+            Dataset.range(10_000)
+            .map(make_batch)
+            .batch(B, drop_remainder=True)
+            .distribute(service=svc, processing_mode="dynamic")
+        )
+        it = iter(ds)
+        t0 = time.time()
+        for step in range(1, args.steps + 1):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            state, metrics = step_fn(state, batch)
+            if step % 5 == 0 or step == args.steps:
+                jax.block_until_ready(metrics["loss"])
+                print(f"[{args.arch}] step {step:3d} "
+                      f"loss {float(metrics['loss']):.4f} "
+                      f"({(time.time()-t0)/step:.2f}s/step)", flush=True)
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.steps, state)
+            print(f"checkpoint -> {args.ckpt_dir}")
+    finally:
+        svc.orchestrator.stop()
+
+
+if __name__ == "__main__":
+    main()

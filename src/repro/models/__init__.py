@@ -1,0 +1,26 @@
+"""repro.models — 10-architecture model zoo (dense GQA / MoE / SSM / hybrid /
+enc-dec / VLM backbones) in pure JAX, scan-over-layers, mesh-agnostic."""
+from typing import Union
+
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .encdec import EncDecModel
+from .lm import LanguageModel
+
+Model = Union[LanguageModel, EncDecModel]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return LanguageModel(cfg)
+
+
+__all__ = [
+    "EncDecModel",
+    "LanguageModel",
+    "Model",
+    "ModelConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "build_model",
+]

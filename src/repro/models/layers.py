@@ -1,0 +1,544 @@
+"""Pure-JAX model layers shared by all architecture families.
+
+Conventions:
+  * params are (nested) dicts of jnp arrays; apply fns are pure.
+  * compute dtype = cfg.dtype (bf16 on TPU); accumulations in f32.
+  * attention's XLA path is a flash-equivalent chunked implementation
+    (lax.scan over KV chunks with an online-softmax carry) — same math as
+    kernels/flash_attention, memory-bounded for 32k+ contexts.  The Pallas
+    path (cfg.attn_impl = "pallas*") swaps in the TPU kernel.
+  * MoE uses gshard-style token-choice top-k with capacity dispatch
+    (cumsum position-in-expert + scatter), expert-parallel over the model
+    mesh axis.
+  * mamba2 uses the SSD chunked formulation (matmul-rich => MXU-friendly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..dist.context import shard_activations
+from .config import ModelConfig
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def cdt(cfg: ModelConfig):
+    return DTYPES[cfg.dtype]
+
+
+def pdt(cfg: ModelConfig):
+    return DTYPES[cfg.param_dtype]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, S, H, D)
+    positions: jnp.ndarray,  # (B, S) int32  or (B, S, 3) for M-RoPE
+    theta: float,
+    mrope: bool = False,
+) -> jnp.ndarray:
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    if mrope and positions.ndim == 3:
+        # M-RoPE (qwen2-vl): split rotary channels into 3 sections driven by
+        # (temporal, height, width) position streams.
+        sec = D // 2 // 3
+        sizes = [sec, sec, D // 2 - 2 * sec]
+        angle_parts = []
+        off = 0
+        for i, sz in enumerate(sizes):
+            f = freqs[off : off + sz]
+            angle_parts.append(
+                positions[..., i].astype(jnp.float32)[:, :, None] * f[None, None, :]
+            )
+            off += sz
+        angles = jnp.concatenate(angle_parts, axis=-1)  # (B, S, D/2)
+    else:
+        angles = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — flash-equivalent chunked XLA implementation
+# ---------------------------------------------------------------------------
+def _attn_chunked(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    q_offset: jnp.ndarray,  # scalar: absolute position of q[0] (causal masking)
+    causal: bool,
+    window: int,
+    chunk: int,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks of ``chunk``.
+
+    Identical math to flash attention; O(Sq * chunk) live memory for scores.
+    GQA: q heads grouped over kv heads.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    # keep matmul inputs in the compute dtype (bf16 on MXU), accumulate f32
+    qf = ((q.astype(jnp.float32) * scale).astype(q.dtype)).reshape(
+        B, Sq, Hkv, G, D
+    )
+
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, chunk, Hkv, D)
+
+    q_pos = q_offset + jnp.arange(Sq)  # (Sq,)
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,Sq,Hkv,G) , (B,Sq,Hkv,G), (B,Sq,Hkv,G,D)
+        kci, vci, cidx = inp
+        kv_pos = cidx * chunk + jnp.arange(chunk)  # (chunk,)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qf, kci, preferred_element_type=jnp.float32
+        )
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = kv_pos[None, :] < Sk - pad + jnp.zeros((Sq, 1), jnp.int32)  # valid
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard -inf rows (fully masked chunk): exp(-inf - -inf) -> use safe m
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nchunks)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    kv_x: Optional[jnp.ndarray] = None,  # cross-attention source
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    B, S, d = x.shape
+    src = x if kv_x is None else kv_x
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (src @ params["wk"].astype(x.dtype)).reshape(
+        B, src.shape[1], cfg.num_kv_heads, cfg.head_dim
+    )
+    v = (src @ params["wv"].astype(x.dtype)).reshape(
+        B, src.shape[1], cfg.num_kv_heads, cfg.head_dim
+    )
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    if cfg.attn_impl.startswith("pallas"):
+        from ..kernels.flash_attention.ops import flash_attention as _fa
+
+        out = _fa(
+            q, k, v,
+            causal=causal and kv_x is None,
+            window=cfg.attn_window,
+            interpret=cfg.attn_impl == "pallas_interpret",
+        )
+    else:
+        out = _attn_chunked(
+            q, k, v,
+            q_offset=jnp.asarray(0, jnp.int32),
+            causal=causal and kv_x is None,
+            window=cfg.attn_window,
+            chunk=min(cfg.attn_chunk, src.shape[1]),
+            softcap=cfg.attn_logit_softcap,
+        )
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(
+    params: Dict[str, jnp.ndarray],
+    x_t: jnp.ndarray,  # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],  # {"k","v"}: (B, Smax, Hkv, D)
+    pos: jnp.ndarray,  # scalar int32: current length
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode against a KV cache (in-place update at ``pos``)."""
+    B = x_t.shape[0]
+    q = (x_t @ params["wq"].astype(x_t.dtype)).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    k = (x_t @ params["wk"].astype(x_t.dtype)).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = (x_t @ params["wv"].astype(x_t.dtype)).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    posb = jnp.broadcast_to(pos[None], (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    # dots run on the cache's native dtype (bf16 on MXU) with f32 accumulate —
+    # converting the cache to f32 would materialize + transpose the whole
+    # cache every token (measured 17 GB/token/device on whisper decode_32k).
+    qf = ((q.astype(jnp.float32) * scale).astype(k_cache.dtype)).reshape(
+        B, Hkv, G, cfg.head_dim
+    )
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32
+    )
+    kv_pos = jnp.arange(k_cache.shape[1])
+    mask = kv_pos <= pos  # (Smax,)
+    if cfg.attn_window > 0:
+        mask &= kv_pos > pos - cfg.attn_window
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    ).astype(x_t.dtype)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"].astype(x_t.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+def mlp(params: Dict[str, jnp.ndarray], x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w1"].astype(x.dtype)) * (
+            x @ params["w3"].astype(x.dtype)
+        )
+    else:
+        h = jax.nn.gelu(x @ params["w1"].astype(x.dtype))
+    return h @ params["w2"].astype(x.dtype)
+
+
+def moe_ffn(
+    params: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
+    dropless: bool = False,
+) -> jnp.ndarray:
+    """Token-choice top-k MoE, GShard-style 2D grouped-capacity dispatch.
+
+    x: (T, d) flattened tokens (caller reshapes).  Tokens are split into
+    ``cfg.moe_groups`` groups (G aligned with the data-parallel shards) and
+    each group gets its own capacity C — the dispatch scatter then stays
+    LOCAL to a dp shard and the buffer shards as (G→data, E→model).  A
+    single global group (G=1) makes the scatter span shards: SPMD either
+    replicates the buffer per model shard (16x redundant expert FLOPs) or
+    all-reduces full-buffer updates — both measured, both bad
+    (EXPERIMENTS.md §Perf, kimi-k2 prefill iterations 2-4).
+
+    ``dropless=True`` sets capacity C = T so no (token, choice) is ever
+    dropped — the serving path uses this (decode batches are small, and
+    dropping tokens at inference silently corrupts outputs).
+    """
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    G = max(1, cfg.moe_groups if T % max(1, cfg.moe_groups) == 0 else 1)
+    t = T // G  # tokens per group
+    if dropless:
+        C = t
+    else:
+        C = max(1, int(math.ceil(t * k / E * cfg.capacity_factor)))
+        C = min(C, t)
+
+    xg = shard_activations(x.reshape(G, t, d), "gtd")
+    logits = (xg @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (G,t,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = lax.top_k(probs, k)  # (G, t, k)
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # slot index within the (group, expert) queue: exclusive cumsum over the
+    # group's flattened token-major (t·k) choice list
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)  # (G, t, k, E)
+    flat = onehot.reshape(G, t * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = (pos * flat).sum(-1).reshape(G, t, k)  # (G, t, k)
+    keep = pos < C  # capacity-dropped tokens fall back to residual only
+
+    # dispatch: per-group scatter into (G, E, C, d) buffers — index arrays
+    # carry the group id so the batched scatter never crosses groups
+    safe_pos = jnp.where(keep, pos, C - 1)
+    gid = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, t, k))
+    buf = jnp.zeros((G, E, C, d), x.dtype)
+    tok = jnp.broadcast_to(xg[:, :, None, :], (G, t, k, d))
+    buf = buf.at[gid, expert_ids, safe_pos].add(
+        jnp.where(keep[..., None], tok, 0), mode="drop"
+    )
+    buf = shard_activations(buf, "gecd")
+
+    # expert FFN on (G, E, C, d)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(
+            jnp.einsum("gecd,edf->gecf", buf, params["w1"].astype(x.dtype))
+        ) * jnp.einsum("gecd,edf->gecf", buf, params["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", buf, params["w1"].astype(x.dtype))
+        )
+    out_buf = shard_activations(
+        jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(x.dtype)), "gecd"
+    )
+
+    # combine: gather each token's expert outputs, weight by (renormalized) gate
+    gathered = out_buf[gid, expert_ids, safe_pos]  # (G, t, k, d)
+    out = (gathered * (gate * keep)[..., None]).sum(axis=2)  # (G, t, d)
+    return out.reshape(T, d)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD) — chunked matmul formulation
+# ---------------------------------------------------------------------------
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise segment sums: out[..., i, j] = sum_{j<t<=i} x[t]."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _depthwise_causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, L, Ch), w: (K, Ch) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K=4: unrolled, fuses into a few adds
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba2_mixer(
+    params: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """SSD forward over a full sequence (training/prefill).
+
+    x: (B, L, d).  Chunked: intra-chunk attention-like matmuls + inter-chunk
+    state recurrence (lax.scan over chunks).
+    """
+    B, L, d = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.ssm_d_inner
+    Q = min(cfg.ssm_chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)  # (B,L, 2di+2GN+H)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(
+        _depthwise_causal_conv(xbc, params["conv_w"], params["conv_b"])
+    )
+    xs, Bc, Cc = jnp.split(xbc, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Lp = nc * Q
+
+    xh = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bh = Bc.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    Ch = Cc.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    dth = dt.reshape(B, nc, Q, H)
+    rep = H // G
+    Bh = jnp.repeat(Bh, rep, axis=3)  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Ch, rep, axis=3)
+
+    da = dth * a[None, None, None, :]  # (B,nc,Q,H) log-decay per step
+    da_cum = jnp.cumsum(da, axis=2)  # inclusive
+    # intra-chunk (diagonal blocks): Y_d[i] = sum_{j<=i} C_i.B_j exp(sum da) dt_j x_j
+    Lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh, preferred_element_type=jnp.float32)
+    Y_diag = jnp.einsum(
+        "bchqk,bckh,bckhp->bcqhp", CB * Lmat, dth, xh,
+        preferred_element_type=jnp.float32,
+    )
+    # chunk-final states: S_c = sum_j exp(da_cum[-1]-da_cum[j]) dt_j B_j x_j^T
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B,nc,Q,H)
+    S = jnp.einsum(
+        "bcqhn,bcqh,bcqh,bcqhp->bchnp", Bh, decay_states, dth, xh,
+        preferred_element_type=jnp.float32,
+    )
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_body(h, inp):
+        S_c, dec = inp  # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + S_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prev = lax.scan(
+        scan_body, h0, (S.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    h_prev = h_prev.swapaxes(0, 1)  # (B,nc,H,N,P): state at chunk start
+    state_decay = jnp.exp(da_cum)  # (B,nc,Q,H)
+    Y_off = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp", Ch, h_prev, state_decay,
+        preferred_element_type=jnp.float32,
+    )
+    Y = (Y_diag + Y_off).reshape(B, Lp, H, P)[:, :L]
+    Y = Y + xs.reshape(B, Lp, H, P)[:, :L] * params["D"].astype(jnp.float32)[None, None, :, None]
+    Y = Y.reshape(B, L, di).astype(x.dtype)
+    # gated RMSNorm (mamba2 block output norm)
+    Y = rms_norm(Y * jax.nn.silu(z), params["norm_w"])
+    return Y @ params["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(
+    params: Dict[str, jnp.ndarray],
+    x_t: jnp.ndarray,  # (B, 1, d)
+    state: Dict[str, jnp.ndarray],  # {"h": (B,H,N,P), "conv": (B,K-1,Ch)}
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token SSD recurrence: h <- exp(dt a) h + dt B x ; y = C h + D x."""
+    B = x_t.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.ssm_d_inner
+    zxbcdt = (x_t @ params["in_proj"].astype(x_t.dtype))[:, 0]  # (B, ...)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B, Ch)
+    conv = state["conv"]  # (B, K-1, Ch) last inputs
+    K = params["conv_w"].shape[0]
+    full = jnp.concatenate([conv, xbc[:, None, :]], axis=1)  # (B, K, Ch)
+    conv_out = (full * params["conv_w"][None]).sum(1) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(xbc, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bc.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch_ = jnp.repeat(Cc.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    h = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh, dt, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch_, h) + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm_w"])
+    out = y @ params["out_proj"].astype(x_t.dtype)
+    new_state = {"h": h, "conv": full[:, 1:]}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _init(ks[0], (d, qd), s, pdt(cfg)),
+        "wk": _init(ks[1], (d, kvd), s, pdt(cfg)),
+        "wv": _init(ks[2], (d, kvd), s, pdt(cfg)),
+        "wo": _init(ks[3], (qd, d), 1.0 / math.sqrt(qd), pdt(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), pdt(cfg))
+        p["k_norm"] = jnp.ones((cfg.head_dim,), pdt(cfg))
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {
+        "w1": _init(ks[0], (d, ff), 1.0 / math.sqrt(d), pdt(cfg)),
+        "w2": _init(ks[1], (ff, d), 1.0 / math.sqrt(ff), pdt(cfg)),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w3"] = _init(ks[2], (d, ff), 1.0 / math.sqrt(d), pdt(cfg))
+    return p
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": _init(ks[0], (d, E), 1.0 / math.sqrt(d), pdt(cfg)),
+        "w1": _init(ks[1], (E, d, ff), 1.0 / math.sqrt(d), pdt(cfg)),
+        "w2": _init(ks[2], (E, ff, d), 1.0 / math.sqrt(ff), pdt(cfg)),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w3"] = _init(ks[3], (E, d, ff), 1.0 / math.sqrt(d), pdt(cfg))
+    return p
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 4)
+    d, di, N, G, H = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * G * N + H), 1.0 / math.sqrt(d), pdt(cfg)),
+        "conv_w": _init(ks[1], (4, conv_ch), 0.5, pdt(cfg)),
+        "conv_b": jnp.zeros((conv_ch,), pdt(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pdt(cfg)),
+        "D": jnp.ones((H,), pdt(cfg)),
+        "dt_bias": jnp.zeros((H,), pdt(cfg)),
+        "norm_w": jnp.ones((di,), pdt(cfg)),
+        "out_proj": _init(ks[2], (di, d), 1.0 / math.sqrt(di), pdt(cfg)),
+    }

@@ -1,0 +1,4 @@
+"""repro.serve — KV-cache decode serving."""
+from .engine import ServeEngine, make_serve_step
+
+__all__ = ["ServeEngine", "make_serve_step"]

@@ -1,0 +1,25 @@
+"""repro.train — optimizer, train step, loss, checkpointing."""
+from .optimizer import AdamWConfig, apply_updates, init_state, lr_schedule
+from .step import (
+    cross_entropy,
+    init_train_state,
+    make_eval_step,
+    make_loss_fn,
+    make_train_step,
+)
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = [
+    "AdamWConfig",
+    "apply_updates",
+    "cross_entropy",
+    "init_state",
+    "init_train_state",
+    "latest_step",
+    "lr_schedule",
+    "make_eval_step",
+    "make_loss_fn",
+    "make_train_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

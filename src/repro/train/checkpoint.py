@@ -1,0 +1,113 @@
+"""Distributed checkpointing: shard-wise npz + manifest (tensorstore-free).
+
+Design for 1000+ nodes: each host writes only ITS param shards (here: the
+single-process path writes everything, but the layout is per-leaf files so a
+multi-host deployment maps leaf→owning host).  Restores are elastic: a
+checkpoint taken on one data-parallel size restores onto another (arrays are
+stored unsharded per leaf; resharding happens at device_put with the target
+NamedSharding).  Atomicity via write-to-tmp + rename of the manifest —
+a crashed save never corrupts the previous checkpoint (restart safety).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state: Any, keep: int = 3) -> str:
+    """Write ``state`` pytree under ``directory/step_<N>/``; prune old."""
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    tmp_dir = ckpt_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    entries = []
+    for key, leaf in _flatten_with_paths(state):
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp_dir, fname), arr)
+        entries.append(
+            {"key": key, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    manifest = {"step": step, "entries": entries}
+    with open(os.path.join(tmp_dir, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    os.replace(tmp_dir, ckpt_dir)  # atomic publish
+    _prune(directory, keep)
+    return ckpt_dir
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, d, MANIFEST))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    target: Any,
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, int]:
+    """Restore into the structure of ``target``.
+
+    ``shardings``: optional matching pytree of NamedShardings — arrays are
+    device_put directly to their target layout (elastic resume on a different
+    mesh works because files store full arrays).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        manifest = json.load(f)
+    by_key = {e["key"]: e for e in manifest["entries"]}
+
+    flat_t = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None else None
+    leaves = []
+    for i, (path, leaf) in enumerate(flat_t[0]):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        e = by_key.get(key)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(os.path.join(ckpt_dir, e["file"]))
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves), step

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def service_factory():
+    """Yields a start_service wrapper that guarantees teardown."""
+    from repro.core import start_service
+
+    handles = []
+
+    def make(num_workers=2, **kw):
+        h = start_service(num_workers=num_workers, **kw)
+        handles.append(h)
+        return h
+
+    yield make
+    for h in handles:
+        try:
+            h.orchestrator.stop()
+        except Exception:
+            pass

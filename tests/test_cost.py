@@ -1,0 +1,62 @@
+"""Cost model (paper §4.1 Eq. 1) and its paper-anchored behaviors."""
+import pytest
+
+from repro.core import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
+
+
+def test_eq1_arithmetic():
+    rates = CostRates(cpu_per_core_hour=1.0, mem_per_gb_hour=0.5,
+                      acc_per_chip_hour=10.0)
+    res = JobResources(
+        duration_hours=2.0,
+        num_workers=3, worker_cpu_util_cores=2.0, worker_mem_util_gb=4.0,
+        num_trainers=1, trainer_cpu_alloc_cores=8.0, trainer_mem_alloc_gb=16.0,
+        accelerators_per_trainer=4,
+    )
+    c = job_cost(res, rates)
+    # cpu: 1.0*(3*2 + 1*8)=14 ; mem: 0.5*(3*4 + 1*16)=14 ; acc: 10*4=40
+    assert c["per_hour"] == pytest.approx(14 + 14 + 40)
+    assert c["total"] == pytest.approx(2 * 68)
+
+
+def test_workers_billed_on_utilization_not_allocation():
+    """Idle workers cost ~nothing; idle trainer hosts cost full allocation."""
+    idle_workers = JobResources(duration_hours=1, num_workers=100,
+                                worker_cpu_util_cores=0.0, worker_mem_util_gb=0.0)
+    no_workers = JobResources(duration_hours=1, num_workers=0)
+    assert job_cost(idle_workers)["total"] == pytest.approx(
+        job_cost(no_workers)["total"]
+    )
+
+
+def test_speedup_dominates_worker_cost():
+    """The paper's core claim: finishing 10× faster with modest extra CPU
+    saves ~10× cost, because accelerator-time dominates."""
+    colocated = JobResources(duration_hours=10.0)
+    disagg = JobResources(duration_hours=1.0, num_workers=64,
+                          worker_cpu_util_cores=6.0, worker_mem_util_gb=24.0)
+    s = cost_saving(colocated, disagg)
+    assert 4.0 < s <= 10.0
+
+
+def test_overprovisioning_increases_cost_but_mildly():
+    """Fig. 9b: extra idle-ish workers beyond the input-bound point raise
+    cost marginally; job time (duration) unchanged."""
+    base = JobResources(duration_hours=1.0, num_workers=512,
+                        worker_cpu_util_cores=4.0, worker_mem_util_gb=8.0)
+    over = JobResources(duration_hours=1.0, num_workers=640,
+                        worker_cpu_util_cores=3.2, worker_mem_util_gb=6.4)
+    c_base, c_over = job_cost(base)["total"], job_cost(over)["total"]
+    assert c_over == pytest.approx(c_base, rel=0.05)
+
+
+def test_gcp_rates_anchor_to_paper_pricing():
+    """TPU v2-8 VM ≈ $4.5/h and n2-standard-8 ≈ $0.08/h (paper §4.1)."""
+    tpu_vm = (
+        GCP_RATES.acc_per_chip_hour * 8
+        + GCP_RATES.cpu_per_core_hour * 96
+        + GCP_RATES.mem_per_gb_hour * 335
+    )
+    n2 = GCP_RATES.cpu_per_core_hour * 8 + GCP_RATES.mem_per_gb_hour * 32
+    assert tpu_vm == pytest.approx(4.50, rel=0.01)
+    assert n2 == pytest.approx(0.08, rel=0.01)

@@ -1,0 +1,233 @@
+"""Unit tests for the tf.data-equivalent pipeline layer (repro.data)."""
+import numpy as np
+import pytest
+
+from repro.data import (
+    Dataset,
+    Graph,
+    Node,
+    RecordWriter,
+    decode_element,
+    encode_element,
+    element_nbytes,
+    read_records,
+    write_record_shards,
+)
+from repro.data.graph import validate
+
+
+def ints(ds, limit=None):
+    out = []
+    for i, e in enumerate(ds):
+        if limit is not None and i >= limit:
+            break
+        out.append(np.asarray(e).tolist())
+    return out
+
+
+class TestBasicOps:
+    def test_range(self):
+        assert ints(Dataset.range(5)) == [0, 1, 2, 3, 4]
+
+    def test_map(self):
+        assert ints(Dataset.range(4).map(lambda x: x * 10)) == [0, 10, 20, 30]
+
+    def test_map_kwargs(self):
+        ds = Dataset.range(3).map(lambda x, k: x + k, k=100)
+        assert ints(ds) == [100, 101, 102]
+
+    def test_filter(self):
+        assert ints(Dataset.range(10).filter(lambda x: x % 2 == 0)) == [0, 2, 4, 6, 8]
+
+    def test_batch(self):
+        got = ints(Dataset.range(7).batch(3))
+        assert got == [[0, 1, 2], [3, 4, 5], [6]]
+
+    def test_batch_drop_remainder(self):
+        got = ints(Dataset.range(7).batch(3, drop_remainder=True))
+        assert got == [[0, 1, 2], [3, 4, 5]]
+
+    def test_unbatch(self):
+        assert ints(Dataset.range(6).batch(2).unbatch()) == [0, 1, 2, 3, 4, 5]
+
+    def test_take_skip(self):
+        assert ints(Dataset.range(10).skip(3).take(4)) == [3, 4, 5, 6]
+
+    def test_repeat(self):
+        assert ints(Dataset.range(3).repeat(2)) == [0, 1, 2, 0, 1, 2]
+
+    def test_repeat_infinite_take(self):
+        assert ints(Dataset.range(2).repeat().take(5)) == [0, 1, 0, 1, 0]
+
+    def test_shuffle_is_permutation(self):
+        got = ints(Dataset.range(100).shuffle(32, seed=7))
+        assert sorted(got) == list(range(100))
+        assert got != list(range(100))  # astronomically unlikely to be identity
+
+    def test_shuffle_deterministic_given_seed(self):
+        a = ints(Dataset.range(50).shuffle(16, seed=3))
+        b = ints(Dataset.range(50).shuffle(16, seed=3))
+        c = ints(Dataset.range(50).shuffle(16, seed=4))
+        assert a == b
+        assert a != c
+
+    def test_flat_map(self):
+        ds = Dataset.range(3).flat_map(lambda x: [x, x])
+        assert ints(ds) == [0, 0, 1, 1, 2, 2]
+
+    def test_interleave(self):
+        ds = Dataset.range(2).interleave(lambda x: [x * 10, x * 10 + 1], cycle_length=2)
+        got = ints(ds)
+        assert sorted(got) == [0, 1, 10, 11]
+
+    def test_prefetch_preserves_stream(self):
+        assert ints(Dataset.range(20).map(lambda x: x + 1).prefetch(4)) == list(
+            range(1, 21)
+        )
+
+    def test_cache_second_pass_identical(self):
+        calls = []
+
+        def f(x):
+            calls.append(int(x))
+            return x
+
+        ds = Dataset.range(5).map(f).cache()
+        it = ds.iterator(optimize=False)
+        assert [int(np.asarray(e)) for e in it] == list(range(5))
+        n_first = len(calls)
+        assert [int(np.asarray(e)) for e in ds.iterator(optimize=False)] == list(range(5))
+        assert len(calls) == n_first or len(calls) == 2 * n_first  # fresh iterators may recompute
+
+
+class TestPaddedAndBucketed:
+    def test_padded_batch(self):
+        ds = Dataset.from_list(
+            [np.arange(n, dtype=np.int64) for n in (1, 3, 2, 4)]
+        ).padded_batch(2, pad_value=-1)
+        got = [np.asarray(b) for b in ds]
+        assert got[0].shape == (2, 3)
+        assert got[0][0].tolist() == [0, -1, -1]
+        assert got[1].shape == (2, 4)
+
+    def test_padded_batch_to_multiple(self):
+        ds = Dataset.from_list([np.arange(3, dtype=np.int64)]).padded_batch(
+            1, pad_to_multiple=8
+        )
+        (b,) = [np.asarray(x) for x in ds]
+        assert b.shape == (1, 8)
+
+    def test_bucket_by_sequence_length(self):
+        lens = [1, 5, 2, 6, 3, 7, 1, 5]
+        ds = Dataset.from_list(
+            [np.arange(n, dtype=np.int64) for n in lens]
+        ).bucket_by_sequence_length(
+            boundaries=[4], batch_size=2, length_fn=lambda x: len(x)
+        )
+        for b in ds:
+            arr = np.asarray(b)
+            widths = (arr >= 0).sum(1) if arr.size else []
+            # every batch comes from one bucket: all lens <=4 or all >4
+            lens_in = [int((row != 0).sum()) + 1 for row in arr]  # arange rows
+            side = [w <= 4 for w in lens_in]
+            assert all(side) or not any(side)
+
+    def test_bucket_pads_to_boundary(self):
+        ds = Dataset.from_list(
+            [np.arange(n, dtype=np.int64) for n in (2, 3, 6, 5)]
+        ).bucket_by_sequence_length(
+            boundaries=[4, 8], batch_size=2, length_fn=len, pad_to_boundary=True
+        )
+        shapes = {np.asarray(b).shape[1] for b in ds}
+        assert shapes <= {4, 8}
+
+    def test_group_by_window(self):
+        ds = (
+            Dataset.range(8)
+            .map(lambda x: x % 2)
+            .group_by_window(key_fn=lambda x: int(x), window_size=2)
+        )
+        for w in ds:
+            arr = np.asarray(w)
+            assert len(set(arr.tolist())) == 1  # window is single-key
+
+
+class TestGraphAndSerialization:
+    def test_graph_roundtrip(self):
+        g = Dataset.range(10).map(lambda x: x + 1).batch(2).graph
+        g2 = Graph.from_bytes(g.to_bytes())
+        a = ints(Dataset(g2))
+        assert a == ints(Dataset(g))
+
+    def test_fingerprint_stable_and_distinct(self):
+        g1 = Dataset.range(10).batch(2).graph
+        g2 = Dataset.range(10).batch(2).graph
+        g3 = Dataset.range(11).batch(2).graph
+        assert g1.fingerprint() == g2.fingerprint()
+        assert g1.fingerprint() != g3.fingerprint()
+
+    def test_validate_rejects_sourceless(self):
+        with pytest.raises(ValueError):
+            validate(Graph([Node("map", {})]))
+
+    def test_bind_shard_range(self):
+        g = Dataset.range(10).graph.bind_shard({"kind": "range", "start": 2, "stop": 5})
+        assert ints(Dataset(g)) == [2, 3, 4]
+
+    def test_bind_seed_changes_shuffle(self):
+        g = Dataset.range(30).shuffle(30).graph
+        a = ints(Dataset(g.bind_seed(1)))
+        b = ints(Dataset(g.bind_seed(2)))
+        assert sorted(a) == sorted(b) == list(range(30))
+        assert a != b
+
+
+class TestElements:
+    def test_encode_decode_scalars_and_arrays(self):
+        for elem in (
+            np.int64(3),
+            np.arange(5),
+            {"a": np.ones((2, 2), np.float32), "b": np.int32(1)},
+            [np.arange(2), {"x": np.float64(0.5)}],
+        ):
+            rt = decode_element(encode_element(elem))
+            flat_a = np.asarray(rt["a"] if isinstance(rt, dict) else rt, dtype=object) \
+                if isinstance(rt, dict) else None
+            # structural equality via repr of normalized arrays
+            def norm(e):
+                if isinstance(e, dict):
+                    return {k: norm(v) for k, v in sorted(e.items())}
+                if isinstance(e, (list, tuple)):
+                    return [norm(v) for v in e]
+                return np.asarray(e).tolist()
+
+            assert norm(rt) == norm(elem)
+
+    def test_element_nbytes_positive(self):
+        assert element_nbytes({"a": np.zeros((4, 4), np.float32)}) >= 64
+
+
+class TestRecordFiles:
+    def test_write_read_roundtrip(self, tmp_path):
+        path = str(tmp_path / "x.rec")
+        with RecordWriter(path) as w:
+            for i in range(10):
+                w.write({"v": np.int64(i)})
+        got = [int(e["v"]) for e in read_records(path)]
+        assert got == list(range(10))
+
+    def test_shard_files_cover_all(self, tmp_path):
+        elems = [np.int64(i) for i in range(23)]
+        paths = write_record_shards(elems, str(tmp_path), num_shards=4)
+        assert len(paths) == 4
+        ds = Dataset.from_files(str(tmp_path / "*.rec"))
+        got = sorted(int(np.asarray(e)) for e in ds)
+        assert got == list(range(23))
+
+
+class TestAutotune:
+    def test_autotuned_iteration_matches(self):
+        ds = Dataset.range(64).map(lambda x: x * 2, num_parallel_calls=-1).batch(8)
+        plain = [np.asarray(b).tolist() for b in ds.iterator(autotune=False)]
+        tuned = [np.asarray(b).tolist() for b in ds.iterator(autotune=True)]
+        assert plain == tuned

@@ -1,0 +1,95 @@
+"""Static graph optimization passes (paper §3.2) — semantics preserved."""
+import numpy as np
+
+from repro.data import AUTOTUNE, Dataset, optimize_graph
+from repro.data.optimizer import (
+    eliminate_dead,
+    fuse_map_filter,
+    fuse_maps,
+    inject_prefetch,
+)
+
+
+def run(g):
+    return [np.asarray(e).tolist() for e in Dataset(g).iterator(optimize=False)]
+
+
+def test_fuse_maps_collapses_and_preserves():
+    g = Dataset.range(10).map(lambda x: x + 1).map(lambda x: x * 2).graph
+    fused = fuse_maps(g)
+    assert [n.op for n in fused.nodes] == ["range", "map"]
+    assert run(fused) == run(g) == [(i + 1) * 2 for i in range(10)]
+
+
+def test_fuse_maps_parallelism_autotune_wins():
+    g = (
+        Dataset.range(4)
+        .map(lambda x: x, num_parallel_calls=2)
+        .map(lambda x: x, num_parallel_calls=AUTOTUNE)
+        .graph
+    )
+    fused = fuse_maps(g)
+    assert fused.nodes[1].params["num_parallel_calls"] == AUTOTUNE
+
+
+def test_fuse_map_filter():
+    g = Dataset.range(10).map(lambda x: x * 3).filter(lambda x: x % 2 == 0).graph
+    fused = fuse_map_filter(g)
+    assert [n.op for n in fused.nodes] == ["range", "flat_map"]
+    assert run(fused) == run(g)
+
+
+def test_eliminate_dead_skip0_and_merges():
+    ds = (
+        Dataset.range(10)
+        .skip(0)
+        .prefetch(2)
+        .prefetch(8)
+        .repeat(2)
+        .repeat(3)
+    )
+    g = eliminate_dead(ds.graph)
+    ops = [n.op for n in g.nodes]
+    assert ops == ["range", "prefetch", "repeat"]
+    assert g.nodes[1].params["buffer_size"] == 8
+    assert g.nodes[2].params["count"] == 6
+    assert run(g) == run(ds.graph)
+
+
+def test_shuffle_merge_keeps_permutation():
+    ds = Dataset.range(40).shuffle(8, seed=1).shuffle(16, seed=2)
+    g = eliminate_dead(ds.graph)
+    assert [n.op for n in g.nodes] == ["range", "shuffle"]
+    assert g.nodes[1].params["buffer_size"] == 16
+    assert sorted(run(g)) == list(range(40))
+
+
+def test_inject_prefetch_idempotent():
+    g = Dataset.range(3).graph
+    g1 = inject_prefetch(g)
+    g2 = inject_prefetch(g1)
+    assert [n.op for n in g1.nodes] == ["range", "prefetch"]
+    assert [n.op for n in g2.nodes] == ["range", "prefetch"]
+
+
+def test_default_pipeline_equivalence_random_chains():
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        ds = Dataset.range(int(rng.integers(5, 40)))
+        for _ in range(int(rng.integers(1, 6))):
+            op = rng.choice(["map", "filter", "skip", "take", "batchunbatch"])
+            if op == "map":
+                k = int(rng.integers(1, 5))
+                ds = ds.map(lambda x, k=k: x + k)
+            elif op == "filter":
+                m = int(rng.integers(2, 4))
+                ds = ds.filter(lambda x, m=m: x % m != 0)
+            elif op == "skip":
+                ds = ds.skip(int(rng.integers(0, 3)))
+            elif op == "take":
+                ds = ds.take(int(rng.integers(5, 30)))
+            else:
+                ds = ds.batch(2).unbatch()
+        plain = run(ds.graph)
+        opt = run(optimize_graph(ds.graph))
+        assert plain == opt, f"trial {trial}: optimizer changed the stream"

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step + one decode step on CPU; shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as S
+from repro.models import build_model
+from repro.models.config import ShapeConfig
+from repro.serve.engine import make_serve_step
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+B, SEQ = 2, 64
+
+
+def tiny_batch(cfg, rng):
+    shape = ShapeConfig("t", SEQ, B, "train")
+    sd = S.train_input_specs(cfg, shape)
+    batch = {}
+    for k, v in sd.items():
+        if jnp.issubdtype(v.dtype, jnp.integer):
+            batch[k] = jnp.asarray(
+                rng.integers(1, cfg.vocab_size, v.shape), v.dtype
+            )
+        else:
+            batch[k] = jnp.asarray(rng.standard_normal(v.shape), v.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).scaled_down()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), AdamWConfig())
+    return request.param, cfg, model, state
+
+
+class TestPerArchSmoke:
+    def test_forward_shapes_and_finite(self, arch_setup):
+        arch, cfg, model, state = arch_setup
+        rng = np.random.default_rng(0)
+        batch = tiny_batch(cfg, rng)
+        logits = model.forward(state["params"], batch)
+        assert logits.shape == (B, SEQ, cfg.vocab_size)
+        assert logits.dtype == jnp.float32  # cfg.logits_fp32
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_train_step_updates_and_finite(self, arch_setup):
+        arch, cfg, model, state = arch_setup
+        rng = np.random.default_rng(1)
+        batch = tiny_batch(cfg, rng)
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+        new_state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert float(metrics["loss"]) > 0
+        assert int(new_state["opt"]["step"]) == 1
+        # parameters actually moved
+        moved = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree.leaves(state["params"]), jax.tree.leaves(new_state["params"])
+            )
+        )
+        assert moved
+
+    def test_loss_decreases_over_steps(self, arch_setup):
+        arch, cfg, model, state = arch_setup
+        rng = np.random.default_rng(2)
+        batch = tiny_batch(cfg, rng)  # overfit one fixed batch
+        step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=1)))
+        losses = []
+        for _ in range(5):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0], f"{arch}: no learning signal {losses}"
+
+    def test_decode_step_finite(self, arch_setup):
+        arch, cfg, model, state = arch_setup
+        params = state["params"]
+        if cfg.family == "encdec":
+            enc = jnp.asarray(
+                np.random.default_rng(3).standard_normal(
+                    (B, cfg.encoder_seq, cfg.d_model)
+                ),
+                jnp.float32,
+            )
+            cache = model.init_cache(params, B, 32, enc_embeds=enc)
+            logits, cache = model.decode_step(
+                params, cache, jnp.zeros((B,), jnp.int32)
+            )
+            assert logits.shape == (B, cfg.vocab_size)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+            return
+        cache = model.init_cache(B, 32)
+        step = jax.jit(make_serve_step(model))
+        toks = jnp.ones((B,), jnp.int32)
+        for _ in range(4):
+            toks, cache = step(params, toks_cache_fix(cache), toks)
+        assert toks.shape == (B,)
+        assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+
+
+def toks_cache_fix(cache):
+    return cache
+
+
+class TestConfigIntegrity:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_full_config_matches_assignment(self, arch):
+        cfg = get_config(arch)
+        expected = {
+            "qwen3_14b": dict(num_layers=40, d_model=5120, num_heads=40,
+                              num_kv_heads=8, d_ff=17408, vocab_size=151936),
+            "llama3_405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                                num_kv_heads=8, d_ff=53248, vocab_size=128256),
+            "starcoder2_3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                                  num_kv_heads=2, d_ff=12288, vocab_size=49152),
+            "deepseek_7b": dict(num_layers=30, d_model=4096, num_heads=32,
+                                num_kv_heads=32, d_ff=11008, vocab_size=102400),
+            "whisper_large_v3": dict(num_layers=32, d_model=1280, num_heads=20,
+                                     num_kv_heads=20, d_ff=5120, vocab_size=51866),
+            "kimi_k2_1t_a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                    num_kv_heads=8, d_ff=2048, vocab_size=163840,
+                                    num_experts=384, experts_per_token=8),
+            "moonshot_v1_16b_a3b": dict(num_layers=48, d_model=2048, num_heads=16,
+                                        num_kv_heads=16, d_ff=1408,
+                                        vocab_size=163840, num_experts=64,
+                                        experts_per_token=6),
+            "mamba2_2p7b": dict(num_layers=64, d_model=2560, vocab_size=50280,
+                                ssm_state=128),
+            "jamba_v0p1_52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                   num_kv_heads=8, d_ff=14336, vocab_size=65536,
+                                   num_experts=16, experts_per_token=2),
+            "qwen2_vl_2b": dict(num_layers=28, d_model=1536, num_heads=12,
+                                num_kv_heads=2, d_ff=8960, vocab_size=151936),
+        }[arch]
+        for k, v in expected.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_param_count_plausible(self, arch):
+        """6·N·D accounting sanity: total params within 40% of the nameplate."""
+        cfg = get_config(arch)
+        n = cfg.param_counts()["total"]
+        nameplate = {
+            "qwen3_14b": 14e9, "llama3_405b": 405e9, "starcoder2_3b": 3e9,
+            "deepseek_7b": 7e9, "whisper_large_v3": 1.5e9,
+            # NOTE: the assigned moonshot config pins 48 layers (the HF
+            # Moonlight-16B-A3B checkpoint has 27); at 48L the analytic
+            # total is ~27.5B — we anchor to the assigned-config value.
+            "kimi_k2_1t_a32b": 1.0e12, "moonshot_v1_16b_a3b": 27.5e9,
+            "mamba2_2p7b": 2.7e9, "jamba_v0p1_52b": 52e9, "qwen2_vl_2b": 2.1e9,
+        }[arch]
+        assert 0.6 * nameplate < n < 1.55 * nameplate, (
+            f"{arch}: {n/1e9:.1f}B vs nameplate {nameplate/1e9:.1f}B"
+        )
+
+    def test_jamba_interleave_ratio(self):
+        cfg = get_config("jamba-v0.1-52b")
+        kinds = [cfg.is_attn_layer(i) for i in range(cfg.num_layers)]
+        assert sum(kinds) == cfg.num_layers // 8  # 1 attn : 7 mamba
+        assert all(not k for k in kinds[:7])
+
+    def test_moe_layer_patterns(self):
+        kimi = get_config("kimi-k2-1t-a32b")
+        assert not kimi.is_moe_layer(0)  # first layer dense (kimi style)
+        assert kimi.is_moe_layer(kimi.num_layers - 1)
+        jamba = get_config("jamba-v0.1-52b")
+        assert any(jamba.is_moe_layer(i) for i in range(jamba.num_layers))

