@@ -5,6 +5,7 @@ data-visitation guarantees, and journal-based dispatcher fault tolerance."""
 from .autoscaler import Autoscaler, AutoscalerConfig
 from .cache import SlidingWindowCache
 from .client import DataServiceClient, DistributedDataset
+from .codecs import available_codecs, register_codec, resolve_codec
 from .cost import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
 from .dispatcher import Dispatcher
 from .journal import Journal
@@ -37,8 +38,11 @@ __all__ = [
     "TransportError",
     "VisitationGuarantee",
     "Worker",
+    "available_codecs",
     "cost_saving",
     "guarantee_for",
     "job_cost",
+    "register_codec",
+    "resolve_codec",
     "start_service",
 ]

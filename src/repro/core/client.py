@@ -2,13 +2,25 @@
 
 Two read modes:
 
-* **parallel fetch** (default): one fetcher thread per worker task feeding a
-  bounded client-side buffer — maximizes ingestion, order across workers is
-  unspecified (the paper's relaxed-visitation stance makes this fine).
+* **parallel fetch** (default): a *window* of ``fetch_window`` fetcher
+  threads per worker task, each with its own connection, keeps that many
+  ``get_elements`` requests outstanding against the worker — transfer
+  overlaps with worker-side production and client-side decode, and each RPC
+  drains up to ``max_batch`` elements, amortizing per-RPC overhead.  Order
+  across (and now within) workers is unspecified — the paper's
+  relaxed-visitation stance makes this fine.  Workers that predate the
+  batched protocol are detected via the unknown-method error and served by
+  the single-element ``get_element`` fallback.
 * **coordinated reads** (``num_consumers > 0``): strict round-robin — for
   training step r every consumer fetches its ``consumer_index`` slot of round
   r from worker ``sorted_workers[r % n]``, guaranteeing same-bucket batches
-  across all clients in the step (§3.6).
+  across all clients in the step (§3.6).  Round identity is per-element, so
+  this path always uses single-element fetch.
+
+Compression is negotiated per job: the client requests a codec by name (or
+``"auto"``); the dispatcher resolves it against the deployment's codec
+registry (``core.codecs``) and the agreed name is applied worker-side.
+Frames are tag-prefixed, so decode never needs out-of-band codec state.
 
 The client records stall time (time blocked waiting for data): the paper's
 "input-bound" diagnosis is ``stall_time / wall_time``.
@@ -21,9 +33,16 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
 
-from ..data.elements import Element, decode_element, element_nbytes
+from ..data.elements import Element, decode_element, decode_elements
 from ..data.graph import Graph
-from .protocol import FetchStatus, new_id
+from .protocol import (
+    DEFAULT_FETCH_WINDOW,
+    DEFAULT_MAX_BATCH,
+    DEFAULT_POLL_TIMEOUT,
+    FetchStatus,
+    new_id,
+)
+from .codecs import available_codecs
 from .transport import Stub, TransportError, decompress
 
 
@@ -35,6 +54,15 @@ class ClientMetrics:
     fetch_time: float = 0.0
     rpcs: int = 0
     retries: int = 0
+    fallback_tasks: int = 0  # tasks demoted to the single-element v1 path
+
+
+@dataclass
+class _FetchError:
+    """Queued in place of an element to surface a fatal decode error."""
+
+    task_id: str
+    error: Exception
 
 
 @dataclass
@@ -46,10 +74,31 @@ class _TaskHandle:
     stub: Stub
     done: bool = False
     failed: bool = False
+    batched: bool = True  # flips False when the worker lacks get_elements
+    poisoned: bool = False  # undecodable responses: never resurrect
 
 
 class DataServiceClient:
-    """One iteration session over a service-backed dataset."""
+    """One iteration session over a service-backed dataset.
+
+    Data-plane knobs (parallel-fetch mode):
+
+    * ``buffer_size``  — capacity of the client-side element queue the
+      training loop consumes from.
+    * ``fetch_window`` — outstanding ``get_elements`` requests kept in
+      flight per worker task; each slot is a thread with its own
+      connection, so transfer pipelines with decode and production.
+    * ``max_batch``    — maximum elements a worker may return per RPC.
+    * ``compression``  — requested codec name (``None``/``"none"``,
+      ``"zlib"``, ``"lz4"``, or ``"auto"``); the dispatcher negotiates the
+      codec actually applied (``negotiated_compression`` after iteration
+      starts) against what the deployment has available.
+
+    Tasks on workers that predate the batched protocol automatically fall
+    back to one-element-per-RPC ``get_element`` (``metrics.fallback_tasks``
+    counts them); coordinated reads always use the single-element path
+    because rounds are element-indexed.
+    """
 
     _END = object()
 
@@ -67,6 +116,9 @@ class DataServiceClient:
         max_workers: int = 0,
         resume_offsets: bool = False,
         buffer_size: int = 8,
+        fetch_window: int = DEFAULT_FETCH_WINDOW,
+        max_batch: int = DEFAULT_MAX_BATCH,
+        prefer_batched: bool = True,
         heartbeat_interval: float = 0.3,
         optimize: bool = True,
     ):
@@ -86,14 +138,21 @@ class DataServiceClient:
         self._max_workers = max_workers
         self._resume_offsets = resume_offsets
         self._buffer_size = buffer_size
+        self._fetch_window = max(1, fetch_window)
+        self._max_batch = max(1, max_batch)
+        # False forces the v1 one-element-per-RPC path from the start:
+        # benchmark baseline and mixed-version deployment drills.
+        self._prefer_batched = prefer_batched
         self._hb_interval = heartbeat_interval
+        self.negotiated_compression: Optional[str] = None
 
         self._tasks: Dict[str, _TaskHandle] = {}
         self._tasks_lock = threading.Lock()
+        self._active_fetchers = 0  # window threads still running (all tasks)
         self._queue: "queue.Queue[Any]" = queue.Queue(maxsize=max(2, buffer_size))
         self._job_finished = threading.Event()
         self._closed = threading.Event()
-        self._fetchers: Dict[str, threading.Thread] = {}
+        self._fetchers: Dict[str, List[threading.Thread]] = {}
         self._job_id = ""
 
     # ------------------------------------------------------------------
@@ -114,8 +173,10 @@ class DataServiceClient:
             max_workers=self._max_workers,
             resume_offsets=self._resume_offsets,
             client_id=self.client_id,
+            client_codecs=available_codecs(),  # negotiation: what WE decode
         )
         self._job_id = view["job_id"]
+        self.negotiated_compression = view.get("compression")
         self._sync_tasks(view)
 
     def _sync_tasks(self, view: Dict[str, Any]) -> None:
@@ -131,13 +192,17 @@ class DataServiceClient:
                         worker_id=t["worker_id"],
                         worker_address=t["worker_address"],
                         stub=Stub(t["worker_address"]),
+                        batched=self._prefer_batched,
                     )
                     if self._m == 0 and not self._closed.is_set():
                         self._spawn_fetcher(h)
-                elif h.failed and not h.done:
+                elif h.failed and not h.done and not h.poisoned:
                     # the dispatcher re-listed a task we gave up on (e.g. the
                     # transient window right after a dispatcher restart when
                     # workers had not yet re-registered): resurrect it.
+                    # Poisoned tasks (undecodable responses from a healthy
+                    # worker) stay dead — resurrecting would drain-and-drop
+                    # the worker's elements in an endless loop.
                     h.failed = False
                     if self._m == 0 and not self._closed.is_set():
                         self._spawn_fetcher(h)
@@ -161,45 +226,122 @@ class DataServiceClient:
                 return
 
     # ------------------------------------------------------------------
-    # Parallel-fetch mode
+    # Parallel-fetch mode (pipelined, batched)
     # ------------------------------------------------------------------
     def _spawn_fetcher(self, handle: _TaskHandle) -> None:
-        th = threading.Thread(target=self._fetch_loop, args=(handle,), daemon=True)
-        self._fetchers[handle.task_id] = th
-        th.start()
+        """Start ``fetch_window`` fetcher threads for one task.
 
-    def _fetch_loop(self, handle: _TaskHandle) -> None:
+        Each thread owns a private ``Stub`` (its own connection over
+        ``tcp://``/``grpc://``), so the window's requests genuinely overlap
+        on the wire instead of serializing on one socket.
+        """
+        threads = []
+        for _ in range(self._fetch_window):
+            stub = Stub(handle.worker_address)
+            th = threading.Thread(
+                target=self._fetch_run, args=(handle, stub), daemon=True
+            )
+            threads.append(th)
+            self._active_fetchers += 1  # caller holds _tasks_lock
+            th.start()
+        self._fetchers[handle.task_id] = threads
+
+    def _fetch_run(self, handle: _TaskHandle, stub: Stub) -> None:
+        """Thread body: fetch loop + completion accounting.
+
+        The END sentinel may only be enqueued once NO fetcher thread is
+        still running: with ``fetch_window > 1`` a sibling thread can reach
+        END_OF_TASK while this thread still holds decoded elements it has
+        not enqueued yet — finishing on task state alone would drop them.
+        """
+        try:
+            self._fetch_loop(handle, stub)
+        finally:
+            with self._tasks_lock:
+                self._active_fetchers -= 1
+            self._maybe_finish()
+
+    def _fetch_loop(self, handle: _TaskHandle, stub: Stub) -> None:
+        """One slot of the task's prefetch window.
+
+        Prefers the batched ``get_elements`` RPC; demotes the whole task to
+        the single-element v1 path when the worker reports an unknown
+        method.  A transport failure marks the task failed — the dispatcher
+        notices the dead worker and re-lists tasks via heartbeat.
+        """
         backoff = 0.005
         while not self._closed.is_set() and not handle.done and not handle.failed:
             try:
                 t0 = time.perf_counter()
-                resp = handle.stub.call(
-                    "get_element", task_id=handle.task_id, job_id=self._job_id
-                )
+                if handle.batched:
+                    resp = stub.call(
+                        "get_elements",
+                        task_id=handle.task_id,
+                        job_id=self._job_id,
+                        max_batch=self._max_batch,
+                        timeout=DEFAULT_POLL_TIMEOUT,  # worker long-polls
+                    )
+                else:
+                    resp = stub.call(
+                        "get_element", task_id=handle.task_id, job_id=self._job_id
+                    )
                 self.metrics.fetch_time += time.perf_counter() - t0
                 self.metrics.rpcs += 1
-            except TransportError:
+            except (TransportError, ValueError) as e:
+                # ValueError surfaces directly over inproc://; TransportError
+                # wraps the remote repr over tcp:// and grpc://.
+                if handle.batched and "unknown method get_elements" in str(e):
+                    with self._tasks_lock:  # dedup across window threads
+                        if handle.batched:
+                            handle.batched = False
+                            self.metrics.fallback_tasks += 1
+                    continue
                 handle.failed = True  # worker died; dispatcher will notice
                 break
             status = resp["status"]
             if status == FetchStatus.OK.value:
                 backoff = 0.005
-                self._enqueue(self._decode(resp))
+                try:
+                    elems = self._decode_batch(resp)
+                except Exception as e:
+                    # corrupt/undecodable frame (e.g. codec tag this process
+                    # cannot handle): poison the task — permanently failed,
+                    # never resurrected — and surface the error to the
+                    # consumer instead of dying silently.
+                    handle.poisoned = True
+                    handle.failed = True
+                    self._enqueue(_FetchError(handle.task_id, e))
+                    break
+                for elem in elems:
+                    self._enqueue(elem)
             elif status == FetchStatus.PENDING.value:
                 self.metrics.retries += 1
                 time.sleep(backoff)
-                backoff = min(backoff * 2, 0.1)
+                # batched calls already long-polled worker-side, so PENDING
+                # means "genuinely dry" — keep the client-side pause short.
+                backoff = min(backoff * 2, 0.02 if handle.batched else 0.1)
             else:  # END_OF_TASK
                 handle.done = True
-        self._maybe_finish()
 
     def _decode(self, resp: Dict[str, Any]) -> Element:
+        """Decode a single-element (v1) response."""
         if "element_compressed" in resp:
             elem = decode_element(decompress(resp["element_compressed"]))
         else:
             elem = resp["element"]
         self.metrics.bytes_received += resp.get("nbytes", 0)
         return elem
+
+    def _decode_batch(self, resp: Dict[str, Any]) -> List[Element]:
+        """Decode a batched (v2) OR single-element (v1) OK response."""
+        if "batch_compressed" in resp:
+            elems = decode_elements(decompress(resp["batch_compressed"]))
+        elif "elements" in resp:
+            elems = resp["elements"]
+        else:
+            return [self._decode(resp)]
+        self.metrics.bytes_received += resp.get("nbytes", 0)
+        return elems
 
     def _enqueue(self, elem: Element) -> None:
         while not self._closed.is_set():
@@ -211,8 +353,10 @@ class DataServiceClient:
 
     def _maybe_finish(self) -> None:
         with self._tasks_lock:
-            all_done = self._tasks and all(
-                h.done or h.failed for h in self._tasks.values()
+            all_done = (
+                self._tasks
+                and self._active_fetchers == 0
+                and all(h.done or h.failed for h in self._tasks.values())
             )
         if all_done and self._job_finished.is_set():
             try:
@@ -244,8 +388,12 @@ class DataServiceClient:
             except queue.Empty:
                 self.metrics.stall_time += time.perf_counter() - t0
                 with self._tasks_lock:
-                    done = self._tasks and all(
-                        h.done or h.failed for h in self._tasks.values()
+                    # fetcher threads may still hold decoded elements after
+                    # their task flips done — wait for them to exit too
+                    done = (
+                        self._tasks
+                        and self._active_fetchers == 0
+                        and all(h.done or h.failed for h in self._tasks.values())
                     )
                 if done and self._job_finished.is_set() and self._queue.empty():
                     return
@@ -253,6 +401,12 @@ class DataServiceClient:
             self.metrics.stall_time += time.perf_counter() - t0
             if item is self._END:
                 return
+            if isinstance(item, _FetchError):
+                raise RuntimeError(
+                    f"task {item.task_id}: undecodable response "
+                    f"({item.error!r}) — client/worker codec registries "
+                    f"likely disagree"
+                ) from item.error
             self.metrics.batches += 1
             yield item
 
@@ -321,6 +475,9 @@ class DistributedDataset:
         max_workers: int = 0,
         resume_offsets: bool = False,
         buffer_size: int = 8,
+        fetch_window: int = DEFAULT_FETCH_WINDOW,
+        max_batch: int = DEFAULT_MAX_BATCH,
+        prefer_batched: bool = True,
     ):
         self._graph = graph
         address = getattr(service, "dispatcher_address", service)
@@ -338,6 +495,9 @@ class DistributedDataset:
             max_workers=max_workers,
             resume_offsets=resume_offsets,
             buffer_size=buffer_size,
+            fetch_window=fetch_window,
+            max_batch=max_batch,
+            prefer_batched=prefer_batched,
         )
         self.last_client: Optional[DataServiceClient] = None
 

@@ -1,0 +1,144 @@
+"""Pluggable compression codec registry for the data plane.
+
+The paper (§3.1) notes that worker→client payload compression is a
+deployment-dependent trade: it pays for itself on cross-region or
+bandwidth-constrained links and is usually OFF inside a datacenter.  Rather
+than hardcoding one algorithm, the data plane negotiates a *codec* per job:
+
+* the client requests a codec by name (or ``"auto"`` to let the service pick),
+* the dispatcher resolves the request against the codecs available in the
+  deployment (``resolve_codec``) and records the agreed name on the job,
+* workers compress each response frame once with the agreed codec,
+* clients decode by the self-describing one-byte tag on the frame, so a
+  client can always decode any frame a worker produced.
+
+Built-in codecs:
+
+========  ===  ==========================================================
+name      tag  notes
+========  ===  ==========================================================
+none      0x00 identity (default; in-datacenter deployments)
+zlib      0x01 stdlib, level 1 — cheap CPU, moderate ratio
+lz4       0x02 optional (``lz4.frame``); registered only when importable
+========  ===  ==========================================================
+
+New codecs register via :func:`register_codec`; tags must be unique and
+stable across versions because they appear on the wire.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Codec:
+    """One compression algorithm usable on the data plane."""
+
+    name: str
+    tag: bytes  # single wire byte prefixed to every compressed frame
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+
+
+_BY_NAME: Dict[str, Codec] = {}
+_BY_TAG: Dict[bytes, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    """Add a codec to the registry. Name and tag must be unused."""
+    if len(codec.tag) != 1:
+        raise ValueError(f"codec tag must be one byte, got {codec.tag!r}")
+    if codec.name in _BY_NAME:
+        raise ValueError(f"codec already registered: {codec.name}")
+    if codec.tag in _BY_TAG:
+        raise ValueError(f"codec tag already registered: {codec.tag!r}")
+    _BY_NAME[codec.name] = codec
+    _BY_TAG[codec.tag] = codec
+    return codec
+
+
+register_codec(Codec("none", b"\x00", lambda d: d, lambda d: d))
+register_codec(
+    Codec(
+        "zlib",
+        b"\x01",
+        lambda d: zlib.compress(d, 1),
+        zlib.decompress,
+    )
+)
+
+try:  # optional: not baked into every container
+    import lz4.frame as _lz4frame
+
+    register_codec(
+        Codec("lz4", b"\x02", _lz4frame.compress, _lz4frame.decompress)
+    )
+except Exception:  # pragma: no cover - environment-dependent
+    pass
+
+
+def available_codecs() -> List[str]:
+    """Names of codecs usable in this process, ``none`` first."""
+    return sorted(_BY_NAME, key=lambda n: _BY_NAME[n].tag)
+
+
+def get_codec(name: Optional[str]) -> Codec:
+    """Look up a codec by name (``None`` means ``none``)."""
+    c = _BY_NAME.get(name or "none")
+    if c is None:
+        raise ValueError(f"unknown codec: {name!r} (have {available_codecs()})")
+    return c
+
+
+# Names that are legitimate codecs even when the backing package is not
+# installed in this process — degrade instead of treating them as typos.
+_KNOWN_OPTIONAL = frozenset({"lz4", "zstd"})
+
+
+def resolve_codec(
+    requested: Optional[str], client_codecs: Optional[List[str]] = None
+) -> Optional[str]:
+    """Dispatcher-side negotiation: map a client's request to an agreed codec.
+
+    ``client_codecs`` is the requesting client's ``available_codecs()``;
+    the agreed codec must be decodable by the CLIENT as well as encodable
+    here, so the choice is restricted to the intersection (``None`` — e.g.
+    a pre-negotiation client — means "assume same registry as ours").
+
+    * ``None`` / ``"none"``   -> ``None`` (no compression).
+    * ``"auto"``              -> best non-identity codec both sides have
+      (``lz4`` when possible, else ``zlib``).
+    * a usable name           -> itself.
+    * a known name either side lacks (e.g. ``lz4`` without the package)
+      -> ``zlib`` (always present: stdlib) — degrade, don't fail the job.
+    * an unknown name         -> ``ValueError`` (caller bug).
+    """
+    if requested in (None, "none"):
+        return None
+    usable = set(_BY_NAME)
+    if client_codecs is not None:
+        usable &= set(client_codecs)
+    if requested == "auto":
+        return "lz4" if "lz4" in usable else "zlib"
+    if requested in usable:
+        return requested
+    if requested in _BY_NAME or requested in _KNOWN_OPTIONAL:
+        return "zlib"
+    raise ValueError(f"unknown compression codec: {requested!r}")
+
+
+def compress(data: bytes, method: Optional[str]) -> bytes:
+    """Compress ``data`` with the named codec; output is tag-prefixed."""
+    c = get_codec(method)
+    return c.tag + c.compress(data)
+
+
+def decompress(data: bytes) -> bytes:
+    """Decompress a tag-prefixed frame produced by :func:`compress`."""
+    tag, body = data[:1], data[1:]
+    c = _BY_TAG.get(tag)
+    if c is None:
+        raise ValueError(f"unknown compression tag {tag!r}")
+    return c.decompress(body)

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set
 
 from ..data.graph import Graph
+from .codecs import resolve_codec
 from .journal import Journal
 from .protocol import (
     FetchStatus,
@@ -145,6 +146,7 @@ class Dispatcher:
         max_workers: int = 0,
         resume_offsets: bool = False,
         client_id: Optional[str] = None,
+        client_codecs: Optional[List[str]] = None,
     ) -> Dict[str, Any]:
         with self._lock:
             if job_name and job_name in self._jobs_by_name:
@@ -159,7 +161,11 @@ class Dispatcher:
                 policy=str(ShardingPolicy.parse(policy).value),
                 num_consumers=num_consumers,
                 sharing=sharing,
-                compression=compression,
+                # codec negotiation (restricted to what the requesting
+                # client can decode): the journaled payload carries the
+                # RESOLVED codec so workers joining after a dispatcher
+                # restart compress with the same algorithm
+                compression=resolve_codec(compression, client_codecs),
                 max_workers=max_workers,
                 resume_offsets=resume_offsets,
                 # journaled so a restored dispatcher partitions the source

@@ -8,6 +8,19 @@ python/numpy values so both transports serialize them identically.
 Naming follows the paper's architecture (§3.1): clients register *datasets*
 and join *jobs*; the dispatcher creates per-worker *tasks*; workers serve
 *elements* (batches) to clients.
+
+Data-plane methods exposed by workers:
+
+* ``get_element``  — v1: one element per RPC (kept as the compatibility
+  fallback; also the coordinated-reads path, which is round-indexed).
+* ``get_elements`` — v2: drains up to ``max_batch`` ready elements per RPC.
+  When the job negotiated a compression codec, the worker encodes the whole
+  batch into one frame (``data.elements.encode_elements``) and compresses it
+  once; the response carries ``batch_compressed``.  Otherwise the response
+  carries the raw ``elements`` list (zero-copy over ``inproc://``).
+
+Clients discover a v1-only worker by the unknown-method error and fall back
+to ``get_element`` for that task (see ``client.DataServiceClient``).
 """
 from __future__ import annotations
 
@@ -39,6 +52,22 @@ class FetchStatus(str, enum.Enum):
     OK = "ok"
     PENDING = "pending"  # not yet produced; client should retry
     END_OF_TASK = "end_of_task"
+
+
+# Data-plane protocol version advertised by workers (2 = batched get_elements).
+DATA_PLANE_VERSION = 2
+
+# Default number of elements a worker may return per get_elements RPC.
+DEFAULT_MAX_BATCH = 16
+
+# Default number of overlapped outstanding get_elements requests a client
+# keeps in flight per worker task (each on its own connection).
+DEFAULT_FETCH_WINDOW = 2
+
+# Default worker-side long-poll: a get_elements call waits up to this many
+# seconds for the first element instead of bouncing PENDING back to the
+# client (kills the client-side retry/backoff latency on a hot path).
+DEFAULT_POLL_TIMEOUT = 0.05
 
 
 @dataclass

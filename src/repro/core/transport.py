@@ -26,11 +26,19 @@ import struct
 import threading
 from typing import Any, Callable, Dict, Optional, Protocol
 
-import zlib
+# Re-exported for backwards compatibility: payload compression used to live
+# here; it is now a pluggable registry (see codecs.py for negotiation rules).
+from .codecs import compress, decompress  # noqa: F401
 
 
 class TransportError(Exception):
-    pass
+    """Raised for any transport-level failure (connect, send, remote error).
+
+    Callers implement retry / failover on this: clients ride through
+    dispatcher downtime and mark worker tasks failed (paper §3.4).  Remote
+    exceptions raised by a handler are shipped back and re-raised as
+    ``TransportError`` with the remote ``repr`` in the message.
+    """
 
 
 class Handler(Protocol):
@@ -241,12 +249,30 @@ class _GrpcConnection:
 # Stub: uniform client handle over any transport
 # ---------------------------------------------------------------------------
 class Stub:
+    """Uniform client handle over any transport scheme.
+
+    One ``Stub`` owns at most one underlying connection and serializes calls
+    on it — a single stub gives strictly request/response semantics.  To
+    overlap multiple outstanding requests against the same endpoint (the
+    client's pipelined prefetch window), open one ``Stub`` per in-flight
+    request: each TCP/gRPC stub gets its own connection/channel, and inproc
+    stubs are free.
+    """
+
     def __init__(self, address: str):
         self.address = address
         self._conn: Optional[Any] = None
         self._lock = threading.Lock()
 
     def call(self, method: str, **payload: Any) -> Dict[str, Any]:
+        """Invoke ``method`` on the remote handler and return its response.
+
+        Connections are opened lazily and dropped on error so the next call
+        reconnects (simple failover).  Raises ``TransportError`` on any
+        failure, including exceptions raised by the remote handler —
+        EXCEPT over ``inproc://``, where handler exceptions propagate
+        natively (same-process call).
+        """
         if self.address.startswith("inproc://"):
             handler = INPROC.get(self.address[len("inproc://") :])
             return handler.handle(method, payload)
@@ -284,28 +310,8 @@ class Stub:
         raise TransportError(f"unsupported address scheme: {self.address}")
 
     def close(self) -> None:
+        """Drop the cached connection (if any); the stub stays usable."""
         with self._lock:
             if self._conn is not None:
                 self._conn.close()
                 self._conn = None
-
-
-# ---------------------------------------------------------------------------
-# Payload compression helpers (worker→client batches; paper §3.1 discusses
-# when compression pays for itself — it is off by default in-datacenter)
-# ---------------------------------------------------------------------------
-def compress(data: bytes, method: Optional[str]) -> bytes:
-    if method in (None, "none"):
-        return b"\x00" + data
-    if method == "zlib":
-        return b"\x01" + zlib.compress(data, level=1)
-    raise ValueError(f"unknown compression: {method}")
-
-
-def decompress(data: bytes) -> bytes:
-    tag, body = data[:1], data[1:]
-    if tag == b"\x00":
-        return body
-    if tag == b"\x01":
-        return zlib.decompress(body)
-    raise ValueError("unknown compression tag")

@@ -23,11 +23,22 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
 
-from ..data.elements import Element, element_nbytes, encode_element
+from ..data.elements import (
+    Element,
+    element_nbytes,
+    encode_element,
+    encode_elements,
+)
 from ..data.graph import Graph
 from ..data.iterators import ExecContext, build_iterator
 from .cache import SlidingWindowCache
-from .protocol import FetchStatus, ShardingPolicy, new_id
+from .protocol import (
+    DATA_PLANE_VERSION,
+    DEFAULT_MAX_BATCH,
+    FetchStatus,
+    ShardingPolicy,
+    new_id,
+)
 from .transport import INPROC, Stub, TCPServer, TransportError, compress
 
 
@@ -49,6 +60,26 @@ class _TaskRunner:
 
     def get(self, job_id: str, round_index: int, consumer_index: int):
         raise NotImplementedError
+
+    def get_many(self, job_id: str, max_batch: int, timeout: float = 0.0):
+        """Drain up to ``max_batch`` ready elements (batched data plane).
+
+        Returns ``(status, elements)``: OK with a non-empty list when
+        anything was ready, otherwise the blocking status (PENDING /
+        END_OF_TASK) with an empty list.  ``timeout`` is a long-poll bound:
+        implementations MAY wait up to that long for the first element
+        (the base implementation is non-blocking).
+        """
+        out: List[Element] = []
+        status = FetchStatus.PENDING
+        for _ in range(max_batch):
+            status, elem = self.get(job_id, -1, -1)
+            if status != FetchStatus.OK:
+                break
+            out.append(elem)
+        if out:
+            return FetchStatus.OK, out
+        return status, out
 
     def buffer_occupancy(self) -> float:
         return 0.0
@@ -115,6 +146,27 @@ class _BufferedRunner(_TaskRunner):
                 self.status = "done"
                 return FetchStatus.END_OF_TASK, None
             return FetchStatus.PENDING, None
+
+    def get_many(self, job_id: str, max_batch: int, timeout: float = 0.0):
+        # Single lock acquisition for the whole drain (vs. max_batch round
+        # trips through get()); the producer refills concurrently.  The
+        # long-poll wait releases the lock, so production proceeds while we
+        # wait for the first element.
+        deadline = time.perf_counter() + max(0.0, timeout)
+        with self._cond:
+            while not self._buffer and not self._done:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 or self._stopped.is_set():
+                    return FetchStatus.PENDING, []
+                self._cond.wait(remaining)
+            if not self._buffer:  # done and drained
+                self.status = "done"
+                return FetchStatus.END_OF_TASK, []
+            out = []
+            while self._buffer and len(out) < max_batch:
+                out.append(self._buffer.popleft())
+            self._cond.notify_all()
+            return FetchStatus.OK, out
 
     def buffer_occupancy(self) -> float:
         with self._cond:
@@ -295,6 +347,12 @@ class _CoordinatedRunner(_TaskRunner):
                 self._served_rounds.add(round_index)
             return FetchStatus.OK, elem
 
+    def get_many(self, job_id: str, max_batch: int, timeout: float = 0.0):
+        raise ValueError(
+            "coordinated tasks are round-indexed; use get_element with a "
+            "round_index (batched fetch would break same-bucket rounds)"
+        )
+
     def buffer_occupancy(self) -> float:
         with self._lock:
             return len(self._rounds) / self.MAX_BUFFERED_ROUNDS
@@ -460,13 +518,62 @@ class Worker:
     def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
         if self._failed.is_set():
             raise TransportError(f"worker {self.worker_id} is down")
+        if method == "get_elements":
+            return self._get_elements(**payload)
         if method == "get_element":
             return self._get_element(**payload)
         if method == "ping":
-            return {"worker_id": self.worker_id}
+            return {
+                "worker_id": self.worker_id,
+                "data_plane_version": DATA_PLANE_VERSION,
+            }
         if method == "stats":
             return self._stats()
         raise ValueError(f"worker: unknown method {method}")
+
+    def _get_elements(
+        self,
+        task_id: str,
+        job_id: str = "",
+        max_batch: int = DEFAULT_MAX_BATCH,
+        timeout: float = 0.0,
+    ) -> Dict[str, Any]:
+        """Batched fetch (data plane v2): drain up to ``max_batch`` elements.
+
+        ``timeout`` long-polls: the call may wait up to that many seconds
+        for the FIRST element before answering PENDING, sparing the client a
+        retry/backoff round trip.  With a negotiated codec the whole batch
+        is one compressed frame (compressed once, worker-side).
+        """
+        self.metrics.rpc_count += 1
+        with self._lock:
+            runner = self._tasks.get(task_id)
+            spec = self._task_specs.get(task_id)
+        if runner is None:
+            return {"status": FetchStatus.PENDING.value, "count": 0}
+        status, elems = runner.get_many(
+            job_id, max(1, int(max_batch)), timeout=min(1.0, float(timeout))
+        )
+        out: Dict[str, Any] = {"status": status.value, "count": len(elems)}
+        if elems:
+            self.metrics.batches_served += len(elems)
+            nbytes = sum(element_nbytes(e) for e in elems)
+            self.metrics.bytes_served += nbytes
+            out["nbytes"] = nbytes
+            if spec and spec.get("compression"):
+                encoded = encode_elements(elems)
+                try:
+                    frame = compress(encoded, spec["compression"])
+                except ValueError:
+                    # the negotiated codec is not in THIS worker's registry
+                    # (heterogeneous pool): ship uncompressed rather than
+                    # fail every fetch — frames are tag-prefixed, so the
+                    # client decodes either way.
+                    frame = compress(encoded, None)
+                out["batch_compressed"] = frame
+            else:
+                out["elements"] = elems
+        return out
 
     def _get_element(
         self,

@@ -5,8 +5,10 @@ from .graph import AUTOTUNE, Graph, Node
 from .registry import FnRef, register
 from .elements import (
     decode_element,
+    decode_elements,
     element_nbytes,
     encode_element,
+    encode_elements,
     padded_stack_elements,
     stack_elements,
 )
@@ -26,8 +28,10 @@ __all__ = [
     "RecordWriter",
     "build_iterator",
     "decode_element",
+    "decode_elements",
     "element_nbytes",
     "encode_element",
+    "encode_elements",
     "optimize_graph",
     "padded_stack_elements",
     "read_records",

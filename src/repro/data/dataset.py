@@ -155,13 +155,28 @@ class Dataset:
         max_workers: int = 0,
         resume_offsets: bool = False,
         buffer_size: int = 8,
+        fetch_window: Optional[int] = None,
+        max_batch: Optional[int] = None,
+        prefer_batched: bool = True,
     ) -> "Dataset":
         """Process this dataset in a tf.data-service-style deployment.
 
         ``service`` is a ``repro.core.service.ServiceHandle`` (or dispatcher
         address string for TCP deployments).  Mirrors the paper's Fig. 4 API.
+        ``fetch_window``/``max_batch`` tune the batched, pipelined data
+        plane (outstanding requests per worker task / elements per RPC;
+        ``None`` = the protocol defaults); ``prefer_batched=False`` forces
+        the v1 one-element-per-RPC path (baseline measurements, mixed-
+        version drills); ``compression`` names a codec (or ``"auto"``)
+        negotiated with the dispatcher.
         """
         from ..core.client import DistributedDataset  # lazy: avoid cycle
+        from ..core.protocol import DEFAULT_FETCH_WINDOW, DEFAULT_MAX_BATCH
+
+        if fetch_window is None:
+            fetch_window = DEFAULT_FETCH_WINDOW
+        if max_batch is None:
+            max_batch = DEFAULT_MAX_BATCH
 
         return DistributedDataset(
             graph=self.graph,
@@ -176,6 +191,9 @@ class Dataset:
             max_workers=max_workers,
             resume_offsets=resume_offsets,
             buffer_size=buffer_size,
+            fetch_window=fetch_window,
+            max_batch=max_batch,
+            prefer_batched=prefer_batched,
         )
 
     # -- execution --------------------------------------------------------------

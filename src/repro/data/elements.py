@@ -82,6 +82,35 @@ def decode_element(data: bytes) -> Element:
     raise ValueError(f"unknown element codec tag {tag!r}")
 
 
+def encode_elements(elems: List[Element], codec: str = "msgpack") -> bytes:
+    """Serialize a LIST of elements into one self-describing frame.
+
+    Frame layout: ``<u32 count> (<u32 len> <encoded element>)*``.  Used by
+    the batched data plane (``get_elements``): a worker encodes up to
+    ``max_batch`` elements into one frame and compresses the frame ONCE, so
+    per-RPC compression and framing overhead is amortized across the batch.
+    """
+    parts = [struct.pack("<I", len(elems))]
+    for e in elems:
+        b = encode_element(e, codec)
+        parts.append(struct.pack("<I", len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+def decode_elements(data: bytes) -> List[Element]:
+    """Inverse of :func:`encode_elements`."""
+    (count,) = struct.unpack_from("<I", data, 0)
+    off = 4
+    out: List[Element] = []
+    for _ in range(count):
+        (n,) = struct.unpack_from("<I", data, off)
+        off += 4
+        out.append(decode_element(data[off : off + n]))
+        off += n
+    return out
+
+
 def element_nbytes(elem: Element) -> int:
     """Approximate in-memory footprint of an element (for buffer accounting)."""
     if isinstance(elem, np.ndarray):

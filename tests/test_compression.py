@@ -1,4 +1,10 @@
 """Gradient compression (dist/compression.py): numerics + wire semantics."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional [test] dependency")
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (model-sharding layer) is not implemented yet"
+)
 import os
 import subprocess
 import sys

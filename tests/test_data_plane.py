@@ -1,0 +1,207 @@
+"""Batched, pipelined data plane: get_elements round-trips, codec registry,
+and the single-element compatibility fallback."""
+import numpy as np
+import pytest
+
+from repro.core import available_codecs, resolve_codec, start_service
+from repro.core.client import DataServiceClient
+from repro.core.codecs import compress, decompress, get_codec
+from repro.core.transport import INPROC
+from repro.data import Dataset, decode_elements, encode_elements
+
+
+def _graph(n=96):
+    return Dataset.range(n).map(lambda i: np.full((4,), i, dtype=np.int64)).graph
+
+
+def _consume_values(sess):
+    out = []
+    for elem in sess:
+        out.extend(np.asarray(elem).ravel().tolist())
+    return out
+
+
+EXPECT = sorted(v for i in range(96) for v in [i] * 4)
+
+
+# ---------------------------------------------------------------------------
+# Batched fetch round-trip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("transport", ["inproc", "tcp"])
+def test_batched_roundtrip_exactly_once(service_factory, transport):
+    svc = service_factory(num_workers=2, transport=transport)
+    sess = DataServiceClient(
+        svc.dispatcher_address,
+        _graph(),
+        processing_mode="dynamic",
+        fetch_window=2,
+        max_batch=8,
+    )
+    assert sorted(_consume_values(sess)) == EXPECT
+    # batching must actually batch: far fewer data RPCs than elements
+    assert sess.metrics.batches == 96
+    assert sess.metrics.rpcs < 96
+    assert sess.metrics.fallback_tasks == 0
+
+
+@pytest.mark.parametrize("codec", ["zlib", "auto", None])
+def test_batched_roundtrip_with_compression(service_factory, codec):
+    svc = service_factory(num_workers=2, transport="tcp")
+    sess = DataServiceClient(
+        svc.dispatcher_address,
+        _graph(),
+        processing_mode="dynamic",
+        compression=codec,
+        max_batch=8,
+    )
+    assert sorted(_consume_values(sess)) == EXPECT
+    if codec is not None:
+        assert sess.negotiated_compression in available_codecs()
+
+
+def test_pipelined_window_no_tail_drop_under_backpressure(service_factory):
+    """END may only surface after every window thread drained its batch.
+
+    Tiny client buffer + wide window maximizes the chance that one thread
+    holds decoded tail elements while a sibling observes END_OF_TASK; all
+    elements must still be delivered exactly once.
+    """
+    svc = service_factory(num_workers=2, transport="inproc")
+    for _ in range(5):
+        sess = DataServiceClient(
+            svc.dispatcher_address,
+            _graph(),
+            processing_mode="off",
+            job_name=None,
+            buffer_size=2,
+            fetch_window=4,
+            max_batch=4,
+        )
+        got = _consume_values(sess)
+        # OFF policy: each of the 2 workers serves the full dataset
+        assert sorted(got) == sorted(EXPECT * 2)
+
+
+def test_pipelined_window_multiple_outstanding(service_factory):
+    svc = service_factory(num_workers=1, transport="tcp")
+    sess = DataServiceClient(
+        svc.dispatcher_address,
+        _graph(),
+        processing_mode="dynamic",
+        fetch_window=4,
+        max_batch=4,
+    )
+    assert sorted(_consume_values(sess)) == EXPECT
+    # one thread (own connection) per window slot per task
+    assert all(len(ths) == 4 for ths in sess._fetchers.values())
+
+
+# ---------------------------------------------------------------------------
+# Codec registry
+# ---------------------------------------------------------------------------
+def test_codec_roundtrip_every_available_codec():
+    payload = bytes(range(256)) * 64
+    for name in available_codecs():
+        frame = compress(payload, name)
+        assert frame[:1] == get_codec(name).tag
+        assert decompress(frame) == payload
+
+
+def test_codec_negotiation_rules():
+    assert resolve_codec(None) is None
+    assert resolve_codec("none") is None
+    assert resolve_codec("zlib") == "zlib"
+    # auto picks the best available non-identity codec
+    assert resolve_codec("auto") in ("lz4", "zlib")
+    # known-but-uninstalled codecs degrade to zlib instead of failing the job
+    if "lz4" not in available_codecs():
+        assert resolve_codec("lz4") == "zlib"
+    with pytest.raises(ValueError):
+        resolve_codec("snappy9000")
+    with pytest.raises(ValueError):
+        compress(b"x", "snappy9000")
+
+
+def test_codec_negotiation_respects_client_capabilities():
+    # the agreed codec must be decodable by the requesting client: a client
+    # without lz4 never gets lz4, whatever the dispatcher has installed
+    assert resolve_codec("auto", ["none", "zlib"]) == "zlib"
+    assert resolve_codec("lz4", ["none", "zlib"]) == "zlib"
+    assert resolve_codec("zlib", ["none", "zlib"]) == "zlib"
+    with pytest.raises(ValueError):
+        resolve_codec("snappy9000", ["none", "zlib"])
+
+
+def test_batch_frame_roundtrip():
+    elems = [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        {"a": np.ones((2, 2)), "b": 7},
+        np.asarray([1, 2, 3], dtype=np.int64),
+    ]
+    out = decode_elements(encode_elements(elems))
+    assert len(out) == 3
+    np.testing.assert_array_equal(out[0], elems[0])
+    np.testing.assert_array_equal(out[1]["a"], elems[1]["a"])
+    assert out[1]["b"] == 7
+    np.testing.assert_array_equal(out[2], elems[2])
+    assert decode_elements(encode_elements([])) == []
+
+
+# ---------------------------------------------------------------------------
+# Compatibility fallbacks
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("transport", ["inproc", "tcp"])
+def test_single_element_path_against_batched_worker(service_factory, transport):
+    """A v1 client (one get_element per RPC) still works on a v2 worker."""
+    svc = service_factory(num_workers=2, transport=transport)
+    sess = DataServiceClient(
+        svc.dispatcher_address,
+        _graph(),
+        processing_mode="dynamic",
+        prefer_batched=False,
+    )
+    assert sorted(_consume_values(sess)) == EXPECT
+    # every element cost (at least) one RPC: genuinely the v1 wire shape
+    assert sess.metrics.rpcs >= 96
+
+
+def test_client_falls_back_when_worker_lacks_get_elements(service_factory):
+    """A v2 client demotes a task to get_element when the worker is v1."""
+    svc = service_factory(num_workers=1, transport="inproc")
+    [w] = svc.orchestrator.workers
+
+    class V1OnlyWorker:
+        def handle(self, method, payload):
+            if method == "get_elements":
+                raise ValueError(f"worker: unknown method {method}")
+            return w.handle(method, payload)
+
+    INPROC.bind(w.worker_id, V1OnlyWorker())
+    sess = DataServiceClient(
+        svc.dispatcher_address, _graph(), processing_mode="dynamic"
+    )
+    assert sorted(_consume_values(sess)) == EXPECT
+    assert sess.metrics.fallback_tasks == 1
+
+
+def test_undecodable_frame_raises_instead_of_hanging(service_factory):
+    """A frame the client cannot decode poisons the task and surfaces as an
+    error at the iterator — not a silent drain-and-drop loop."""
+    svc = service_factory(num_workers=1, transport="inproc")
+    [w] = svc.orchestrator.workers
+
+    class CorruptFrameWorker:
+        def handle(self, method, payload):
+            resp = w.handle(method, payload)
+            if method == "get_elements" and resp.get("count"):
+                resp.pop("elements", None)
+                resp["batch_compressed"] = b"\xffnot-a-frame"
+            return resp
+
+    INPROC.bind(w.worker_id, CorruptFrameWorker())
+    sess = DataServiceClient(
+        svc.dispatcher_address, _graph(), processing_mode="dynamic"
+    )
+    with pytest.raises(RuntimeError, match="undecodable response"):
+        for _ in sess:
+            pass

@@ -123,6 +123,14 @@ class TestDispatcherFaults:
 
 
 class TestCheckpointRestore:
+    @pytest.fixture(autouse=True)
+    def _requires_dist(self):
+        # repro.train -> repro.models -> repro.dist (not implemented yet)
+        pytest.importorskip(
+            "repro.dist",
+            reason="repro.dist (model-sharding layer) is not implemented yet",
+        )
+
     def test_train_state_roundtrip(self, tmp_path):
         import jax
         from repro.configs import get_config

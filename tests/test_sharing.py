@@ -1,5 +1,8 @@
 """Ephemeral data sharing (paper §3.5): sliding-window cache semantics and
 end-to-end multi-job sharing on one deployment."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional [test] dependency")
 import threading
 
 import numpy as np

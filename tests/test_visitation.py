@@ -8,6 +8,9 @@ Invariants under test:
                            full dataset, so totals are multiples of the set
   STATIC                -> exactly-once when all workers live
 """
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional [test] dependency")
 import numpy as np
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
