@@ -1,0 +1,208 @@
+"""Pallas kernel layer: correctness + timing vs the pure-jnp references.
+
+For each of the five kernel families the repo ships
+(flash_attention, decode_attention, ssd_scan, moe_router, fused_augment)
+this harness runs a representative shape through BOTH the Pallas kernel
+(interpret mode — this container has no TPU) and its ``ref.py`` oracle,
+reports the max abs error, and times each path.
+
+Honest-labeling note (mirrors benchmarks/data_plane.py): interpret mode
+executes the kernel body as traced Python/XLA on CPU, so the timing rows
+measure *interpreter overhead vs the XLA reference*, NOT TPU speedups —
+they are tier ``sim`` and exist to (a) catch perf cliffs in the kernel
+bodies and (b) give the disaggregation-ratio experiments a stable
+accelerator-side cost stand-in until real-TPU rows land.  The correctness
+rows are tier ``real``: identical math must hold on any backend.
+
+Run:  PYTHONPATH=src python benchmarks/kernels.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from common import Row, print_rows, time_fn  # noqa: E402
+
+RNG = np.random.default_rng(7)
+
+
+def _randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32) * scale, dtype)
+
+
+def _block(x):
+    jax.tree.map(lambda a: a.block_until_ready(), x)
+    return x
+
+
+def _case_flash_attention(quick: bool) -> Tuple[Callable, Callable, str]:
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    B, S, Hq, Hkv, D = (1, 128, 4, 2, 64) if quick else (2, 256, 8, 2, 64)
+    q, k, v = _randn((B, S, Hq, D)), _randn((B, S, Hkv, D)), _randn((B, S, Hkv, D))
+
+    def kern():
+        return _block(flash_attention(q, k, v, causal=True, interpret=True,
+                                      block_q=64, block_k=64))
+
+    jref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+
+    def ref():
+        return _block(jref(q, k, v))
+
+    return kern, ref, f"B{B} S{S} Hq{Hq} Hkv{Hkv} D{D} causal"
+
+
+def _case_decode_attention(quick: bool) -> Tuple[Callable, Callable, str]:
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    B, S, Hq, Hkv, D, ns = (2, 256, 4, 2, 64, 2) if quick else (2, 1024, 8, 2, 64, 4)
+    q = _randn((B, Hq, D))
+    k, v = _randn((B, S, Hkv, D)), _randn((B, S, Hkv, D))
+    lens = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+
+    def kern():
+        return _block(decode_attention(q, k, v, lens, num_splits=ns,
+                                       block_s=128, interpret=True))
+
+    jref = jax.jit(decode_attention_ref)
+
+    def ref():
+        return _block(jref(q, k, v, lens))
+
+    return kern, ref, f"B{B} S{S} Hq{Hq} Hkv{Hkv} D{D} splits{ns}"
+
+
+def _case_ssd_scan(quick: bool) -> Tuple[Callable, Callable, str]:
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    B, L, H, P, N, chunk = (1, 64, 2, 32, 16, 16) if quick else (2, 256, 4, 64, 32, 64)
+    x = _randn((B, L, H, P), scale=0.5)
+    dt = jnp.abs(_randn((B, L, H), scale=0.1))
+    a = -jnp.abs(_randn((H,)))
+    Bm, Cm = _randn((B, L, H, N), scale=0.3), _randn((B, L, H, N), scale=0.3)
+    D = _randn((H,))
+
+    def kern():
+        return _block(ssd_scan(x, dt, a, Bm, Cm, D, chunk=chunk, interpret=True))
+
+    jref = jax.jit(ssd_scan_ref)
+
+    def ref():
+        return _block(jref(x, dt, a, Bm, Cm, D))
+
+    return kern, ref, f"B{B} L{L} H{H} P{P} N{N} chunk{chunk}"
+
+
+def _case_moe_router(quick: bool) -> Tuple[Callable, Callable, str]:
+    from repro.kernels.moe_router.ops import moe_router
+    from repro.kernels.moe_router.ref import moe_router_ref
+
+    T, E, k, bt = (64, 8, 2, 32) if quick else (256, 64, 6, 64)
+    logits = _randn((T, E))
+
+    def kern():
+        return _block(moe_router(logits, k=k, capacity=T, block_t=bt,
+                                 interpret=True))
+
+    jref = jax.jit(lambda logits: moe_router_ref(logits, k, T))
+
+    def ref():
+        return _block(jref(logits))
+
+    return kern, ref, f"T{T} E{E} k{k} block_t{bt}"
+
+
+def _case_fused_augment(quick: bool) -> Tuple[Callable, Callable, str]:
+    from repro.kernels.fused_augment.ops import fused_augment
+    from repro.kernels.fused_augment.ref import fused_augment_ref
+
+    B, H, W, C, oh, ow = (2, 64, 64, 3, 32, 32) if quick else (4, 224, 224, 3, 192, 192)
+    img = jnp.asarray(RNG.integers(0, 256, (B, H, W, C)), jnp.uint8)
+    crops = jnp.stack(
+        [jnp.asarray(RNG.integers(0, H - oh + 1, B), jnp.int32),
+         jnp.asarray(RNG.integers(0, W - ow + 1, B), jnp.int32)], axis=-1)
+    flips = jnp.asarray(RNG.integers(0, 2, B), jnp.int32)
+    mean = jnp.asarray([0.485, 0.456, 0.406], jnp.float32)
+    std = jnp.asarray([0.229, 0.224, 0.225], jnp.float32)
+
+    def kern():
+        return _block(fused_augment(img, crops, flips, mean, std,
+                                    out_h=oh, out_w=ow, interpret=True))
+
+    jref = jax.jit(lambda img, crops, flips: fused_augment_ref(
+        img, crops, flips, mean, std, oh, ow))
+
+    def ref():
+        return _block(jref(img, crops, flips))
+
+    return kern, ref, f"B{B} {H}x{W}x{C} -> {oh}x{ow}"
+
+
+CASES = {
+    "flash_attention": _case_flash_attention,
+    "decode_attention": _case_decode_attention,
+    "ssd_scan": _case_ssd_scan,
+    "moe_router": _case_moe_router,
+    "fused_augment": _case_fused_augment,
+}
+
+
+def _max_err(a, b) -> float:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(la, lb)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small shapes")
+    ap.add_argument("--kernels", default=",".join(CASES),
+                    help="comma-separated subset")
+    args = ap.parse_args()
+    repeat = 3 if args.quick else 5
+
+    rows: List[Row] = []
+    failures = []
+    for name in args.kernels.split(","):
+        kern, ref, detail = CASES[name](args.quick)
+        err = _max_err(kern(), ref())
+        tol = 5e-4 if name == "ssd_scan" else 2e-5
+        ok = err <= tol
+        if not ok:
+            failures.append((name, err, tol))
+        rows.append(Row(f"kernels/{name}/max_abs_err", err, "abs",
+                        tier="real", detail=f"{detail} tol={tol} "
+                        f"{'OK' if ok else 'FAIL'}"))
+        t_k = time_fn(kern, repeat=repeat)
+        t_r = time_fn(ref, repeat=repeat)
+        rows.append(Row(f"kernels/{name}/interpret_s", t_k, "s", tier="sim",
+                        detail=detail))
+        rows.append(Row(f"kernels/{name}/ref_xla_s", t_r, "s", tier="sim",
+                        detail=detail))
+        rows.append(Row(f"kernels/{name}/interpret_over_ref", t_k / t_r,
+                        "x", tier="sim",
+                        detail="interpreter overhead, NOT a TPU speedup"))
+    print_rows(rows, "pallas kernels: interpret-mode correctness + timing vs ref")
+    if failures:
+        for name, err, tol in failures:
+            print(f"FAIL {name}: max_abs_err {err:.3e} > tol {tol:.0e}",
+                  file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,4 +19,6 @@ CONFIG = ModelConfig(
     rope_theta=50_000.0,
     mlp_act="swiglu",
     param_dtype="bfloat16",  # 1T params: bf16 + sharded state
+    fsdp_over_pod=True,
+    opt_state_dtype="bfloat16",
 )

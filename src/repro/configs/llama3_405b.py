@@ -18,4 +18,6 @@ CONFIG = ModelConfig(
     rope_theta=500_000.0,
     mlp_act="swiglu",
     param_dtype="bfloat16",  # 405B f32 params would not fit 256 chips
+    fsdp_over_pod=True,
+    opt_state_dtype="bfloat16",
 )

@@ -1,0 +1,19 @@
+"""repro.dist — the model-sharding layer.
+
+The paper's disaggregation argument only matters relative to a real
+consumer: a sharded model on a mesh whose input pipeline must keep up.
+This package owns everything about HOW that model is laid out:
+
+  * ``context``        — ShardingPlan (logical axis assignment), the active
+                         plan context (``use_plan``), and the
+                         ``shard_activations`` constraint hook the model
+                         layers call.
+  * ``sharding_rules`` — parameter / optimizer-state / batch / KV-cache
+                         PartitionSpec derivation (Megatron-style tensor
+                         parallel + FSDP over the data axis).
+  * ``compression``    — int8 gradient wire compression (stochastic
+                         rounding) and a compressed psum collective.
+"""
+from .context import ShardingPlan, shard_activations, use_plan
+
+__all__ = ["ShardingPlan", "shard_activations", "use_plan"]

@@ -1,0 +1,82 @@
+"""int8 gradient wire compression + a compressed psum collective.
+
+Per-tensor symmetric int8 quantization (scale = max|x| / 127).  With a PRNG
+key, rounding is stochastic — floor(x/s + u), u ~ U[0,1) — which makes the
+dequantized value an unbiased estimator of x (E[dq(q(x))] = x), the
+property SGD-family optimizers need for compressed gradients to converge.
+Without a key, round-to-nearest halves the worst-case error.
+
+``compressed_psum`` is the wire story: inside shard_map, each shard
+quantizes its local partial, all-gathers the int8 payload + f32 scales
+(4.06 bytes/elem/shard on the wire vs 4 bytes for f32 ring all-reduce —
+but the payload term is 4x smaller), then dequantizes and reduces locally.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _scale_of(x: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    return jnp.where(s > 0.0, s, 1.0)
+
+
+def quantize_int8(
+    x: jnp.ndarray, key: Optional[jax.Array] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, f32 scalar scale). Stochastic rounding iff ``key``."""
+    x32 = x.astype(jnp.float32)
+    s = _scale_of(x32)
+    y = x32 / s
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, x32.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), s
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compression_error_bound(x: jnp.ndarray) -> float:
+    """Worst-case |dq(q(x)) - x| (covers stochastic rounding; deterministic
+    rounding achieves half of this)."""
+    return float(jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0)
+
+
+def quantize_tree(
+    tree: Any, key: Optional[jax.Array] = None
+) -> Tuple[Any, Any]:
+    """Quantize every leaf; returns (codes tree, scales tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = (
+        list(jax.random.split(key, len(leaves)))
+        if key is not None
+        else [None] * len(leaves)
+    )
+    pairs = [quantize_int8(x, k) for x, k in zip(leaves, keys)]
+    return (
+        treedef.unflatten([p[0] for p in pairs]),
+        treedef.unflatten([p[1] for p in pairs]),
+    )
+
+
+def dequantize_tree(qtree: Any, stree: Any) -> Any:
+    return jax.tree.map(dequantize_int8, qtree, stree)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Sum ``x`` over a shard_map mesh axis with int8 wire compression.
+
+    all_gather(int8 codes + scalar scales) then dequantize-and-reduce
+    locally; every shard returns the identical (replicated) sum.
+    """
+    q, s = quantize_int8(x)
+    gq = jax.lax.all_gather(q, axis_name)  # (n, *x.shape) int8
+    gs = jax.lax.all_gather(s, axis_name)  # (n,) f32
+    scales = gs.reshape((-1,) + (1,) * x.ndim)
+    return jnp.sum(gq.astype(jnp.float32) * scales, axis=0)

@@ -1,0 +1,159 @@
+"""Sharding plan + activation-constraint context.
+
+A ``ShardingPlan`` maps LOGICAL tensor roles onto PHYSICAL mesh axes.  The
+model code never names mesh axes directly — layers call
+``shard_activations(x, "bsd")`` with a role string (one character per dim)
+and the active plan decides which mesh axis, if any, each role pins to:
+
+  role  meaning                      default axis
+  ----  ---------------------------  -------------------------------
+  b     global batch                 plan.data_axes
+  s     sequence                     plan.seq_axis (None unless
+                                     sequence parallelism is on)
+  d     d_model / hidden             None (replicated)
+  g     MoE dispatch group           plan.data_axes (groups align
+                                     with dp shards by construction)
+  t     tokens within a group        None
+  e     expert                       plan.moe_expert_axis (subject to
+                                     plan.moe_pin)
+  c     expert capacity slot         None
+  h     heads                        plan.model_axis
+
+Outside an active plan (unit tests, single-host runs) the hook is an exact
+no-op, so model code is runnable with zero mesh setup.  Constraints are
+also dropped per-dim when the dim size does not divide the axis size —
+sharding falls back to replication rather than crashing (see
+tests/test_dist.py::test_indivisible_dims_fall_back_to_replication for the
+parameter-side contract).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """Logical-axis → mesh-axis assignment for one launch.
+
+    ``data_axes`` may span multiple mesh axes (("pod", "data") on the
+    multi-pod mesh).  ``fsdp_axis`` is the axis parameters are
+    fully-sharded over (ZeRO-3 style); it may equal the data axis or
+    extend over ("pod", "data") for the 1T-param configs.
+    """
+
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_axis: Optional[Axis] = "data"
+    seq_axis: Optional[str] = None
+    # MoE dispatch-buffer pinning: "auto"/"group_ep" pins (G→data, E→expert
+    # axis); "group" pins only G and lets SPMD place E.
+    moe_pin: str = "auto"
+    moe_expert_axis: str = "model"
+
+    @property
+    def fsdp_axes(self) -> Tuple[str, ...]:
+        if self.fsdp_axis is None:
+            return ()
+        if isinstance(self.fsdp_axis, str):
+            return (self.fsdp_axis,)
+        return tuple(self.fsdp_axis)
+
+
+class _PlanState(threading.local):
+    def __init__(self) -> None:
+        self.plan: Optional[ShardingPlan] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _PlanState()
+
+
+@contextlib.contextmanager
+def use_plan(plan: ShardingPlan, mesh: Optional[Mesh] = None):
+    """Activate ``plan`` for the dynamic extent (usually alongside a mesh
+    context: ``with mesh, use_plan(plan): ...``)."""
+    prev_plan, prev_mesh = _STATE.plan, _STATE.mesh
+    _STATE.plan, _STATE.mesh = plan, mesh
+    try:
+        yield plan
+    finally:
+        _STATE.plan, _STATE.mesh = prev_plan, prev_mesh
+
+
+def current_plan() -> Optional[ShardingPlan]:
+    return _STATE.plan
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    if _STATE.mesh is not None:
+        return _STATE.mesh
+    try:  # the `with mesh:` context manager
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def _role_axes(role: str, plan: ShardingPlan) -> Optional[Tuple[str, ...]]:
+    if role == "b" or role == "g":
+        return tuple(plan.data_axes)
+    if role == "s":
+        return (plan.seq_axis,) if plan.seq_axis else None
+    if role == "h":
+        return (plan.model_axis,)
+    if role == "e":
+        if plan.moe_pin in ("auto", "group_ep"):
+            return (plan.moe_expert_axis,)
+        return None
+    return None  # d, t, c, and anything unrecognized: replicate
+
+
+def plan_spec(roles: str, plan: ShardingPlan,
+              shape: Optional[Sequence[int]] = None,
+              mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a role string, dropping axes that don't divide."""
+    parts = []
+    used: set = set()
+    for i, role in enumerate(roles):
+        axes = _role_axes(role, plan)
+        if axes and not (set(axes) & used):
+            if mesh is not None and shape is not None:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape.get(a, 0) or 0
+                if size == 0 or shape[i] % size:
+                    parts.append(None)
+                    continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else tuple(axes))
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard_activations(x: jax.Array, roles: str) -> jax.Array:
+    """Constrain an activation's sharding per the active plan (no-op when
+    no plan is active — model code stays mesh-free in unit tests)."""
+    plan = _STATE.plan
+    if plan is None:
+        return x
+    mesh = _ambient_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    spec = plan_spec(roles, plan, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,228 @@
+"""Parameter / optimizer / batch / cache PartitionSpec derivation.
+
+Megatron-style tensor parallelism over ``plan.model_axis`` plus FSDP
+(ZeRO-3) over ``plan.fsdp_axis``:
+
+  * projections IN to a wide space (wq/wk/wv, mlp w1/w3, ssm in_proj,
+    lm_head) shard the wide output dim over the model axis and the d_model
+    input dim over the fsdp axis;
+  * projections OUT of the wide space (wo, mlp w2, ssm out_proj) shard the
+    wide input dim over the model axis and d_model over fsdp;
+  * MoE expert stacks shard the expert dim over ``plan.moe_expert_axis``
+    (the ff dim additionally over the model axis when the expert axis is a
+    different mesh axis);
+  * the embedding shards vocab over the model axis (Megatron vocab
+    parallelism), d_model over fsdp;
+  * 1-D params (norm scales, biases, A_log/D/dt_bias) replicate — they are
+    O(d) and not worth collective traffic.
+
+Every axis assignment is divisibility-gated: a dim that the mesh axis does
+not evenly divide falls back to replication for that dim instead of
+crashing (head_dim 7 on a 4-way axis must degrade, not abort a launch).
+Stacked scan-over-layers leaves are handled by aligning each rule to the
+TRAILING dims and replicating the leading layer-stack dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .context import ShardingPlan
+
+# role tokens for trailing dims: F = fsdp axis, M = model axis,
+# E = expert axis, X = model axis only if the expert axis differs from it,
+# None = replicate
+_Role = Optional[str]
+
+_IN_PROJ: Tuple[_Role, ...] = ("F", "M")
+_OUT_PROJ: Tuple[_Role, ...] = ("M", "F")
+
+_LEAF_RULES: Dict[str, Tuple[_Role, ...]] = {
+    "wq": _IN_PROJ,
+    "wk": _IN_PROJ,
+    "wv": _IN_PROJ,
+    "wo": _OUT_PROJ,
+    "in_proj": _IN_PROJ,
+    "out_proj": _OUT_PROJ,
+    "lm_head": _IN_PROJ,
+    "embed": ("M", "F"),  # Megatron vocab-parallel embedding
+    "router": ("F", None),
+    "conv_w": (None, None),
+}
+
+_MOE_RULES: Dict[str, Tuple[_Role, ...]] = {
+    "w1": ("E", "F", "X"),
+    "w3": ("E", "F", "X"),
+    "w2": ("E", "X", "F"),
+}
+
+_MLP_RULES: Dict[str, Tuple[_Role, ...]] = {
+    "w1": _IN_PROJ,
+    "w3": _IN_PROJ,
+    "w2": _OUT_PROJ,
+}
+
+
+def _path_names(path: Sequence[Any]) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        name = getattr(k, "key", None)
+        if name is None:
+            name = getattr(k, "name", None)
+        if isinstance(name, str):
+            names.append(name)
+    return tuple(names)
+
+
+def _trailing_roles(names: Tuple[str, ...]) -> Optional[Tuple[_Role, ...]]:
+    leaf = names[-1] if names else ""
+    if leaf in ("w1", "w2", "w3"):
+        return _MOE_RULES[leaf] if "moe" in names else _MLP_RULES[leaf]
+    return _LEAF_RULES.get(leaf)
+
+
+def _role_to_axes(role: _Role, plan: ShardingPlan) -> Tuple[str, ...]:
+    if role == "F":
+        return plan.fsdp_axes
+    if role == "M":
+        return (plan.model_axis,)
+    if role == "E":
+        return (plan.moe_expert_axis,)
+    if role == "X":
+        if plan.moe_expert_axis != plan.model_axis:
+            return (plan.model_axis,)
+    return ()
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape.get(a, 0) or 0)
+    return size
+
+
+def _build_spec(
+    shape: Sequence[int],
+    roles: Tuple[_Role, ...],
+    plan: ShardingPlan,
+    mesh: Mesh,
+) -> P:
+    """Align ``roles`` to the trailing dims; divisibility-gate each axis."""
+    ndim = len(shape)
+    lead = ndim - len(roles)
+    if lead < 0:  # rule written for more dims than the leaf has: replicate
+        return P()
+    parts: list = [None] * lead
+    used: set = set()
+    for dim, role in zip(shape[lead:], roles):
+        axes = _role_to_axes(role, plan)
+        size = _axes_size(mesh, axes) if axes else 0
+        if axes and size > 0 and dim % size == 0 and not (set(axes) & used):
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else tuple(axes))
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_spec(
+    path: Sequence[Any],
+    leaf: Any,
+    cfg: ModelConfig,
+    plan: ShardingPlan,
+    mesh: Mesh,
+) -> NamedSharding:
+    """Sharding for one parameter leaf, identified by its tree path."""
+    shape = tuple(getattr(leaf, "shape", ()))
+    names = _path_names(path)
+    roles = _trailing_roles(names)
+    if roles is None:
+        if len(shape) >= 2:  # unknown matrix: generic (fsdp, model) split
+            roles = _IN_PROJ
+        else:  # scalars / vectors replicate
+            return NamedSharding(mesh, P())
+    return NamedSharding(mesh, _build_spec(shape, roles, plan, mesh))
+
+
+def make_param_shardings(
+    mesh: Mesh, pshape: Any, cfg: ModelConfig, plan: ShardingPlan
+) -> Any:
+    """A NamedSharding for every leaf of the params (shape-)tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, cfg, plan, mesh), pshape
+    )
+
+
+def make_opt_shardings(
+    mesh: Mesh, oshape: Any, cfg: ModelConfig, plan: ShardingPlan
+) -> Any:
+    """Optimizer-state shardings: the m/v moment trees mirror the param
+    shardings (moments co-locate with their param shards); counters and any
+    other scalars replicate."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("m", "v", "mu", "nu"):
+            return param_spec(path[1:], leaf, cfg, plan, mesh)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, oshape)
+
+
+def batch_sharding(mesh: Mesh, plan: ShardingPlan, in_specs: Any) -> Any:
+    """Input batches shard their leading (global batch) dim over the data
+    axes; all other dims replicate."""
+    data = tuple(plan.data_axes)
+    dsize = _axes_size(mesh, data)
+
+    def one(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if shape and dsize > 0 and shape[0] % dsize == 0:
+            spec = P(data[0] if len(data) == 1 else data)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, in_specs)
+
+
+# cache leaf name -> index of its heads dim (the dim sharded over the
+# model axis): KV caches are (B, S, Hkv, D), SSM state is (B, H, N, P).
+# Conv tails ("conv": (B, K-1, Ch)) and anything unrecognized get batch-only.
+_CACHE_HEAD_DIM = {"k": 2, "v": 2, "h": 1}
+
+
+def cache_sharding(
+    mesh: Mesh, plan: ShardingPlan, cache_shape: Any, cfg: ModelConfig
+) -> Any:
+    """KV / SSM decode caches: batch over the data axes; the heads dim —
+    identified by leaf NAME, the same way param_spec keys its rules — over
+    the model axis when it divides."""
+    data = tuple(plan.data_axes)
+    dsize = _axes_size(mesh, data)
+    msize = _axes_size(mesh, (plan.model_axis,))
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        parts: list = [None] * len(shape)
+        if shape and dsize > 0 and shape[0] % dsize == 0:
+            parts[0] = data[0] if len(data) == 1 else data
+        names = _path_names(path)
+        hdim = _CACHE_HEAD_DIM.get(names[-1]) if names else None
+        if (
+            hdim is not None
+            and hdim < len(shape)
+            and msize > 1
+            and shape[hdim] % msize == 0
+        ):
+            parts[hdim] = plan.model_axis
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

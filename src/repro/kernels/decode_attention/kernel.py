@@ -25,7 +25,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 NEG_INF = -1e30
 
@@ -147,7 +147,7 @@ def decode_attention_fwd(
             jax.ShapeDtypeStruct((B, Hkv, num_splits, G), jnp.float32),
             jax.ShapeDtypeStruct((B, Hkv, num_splits, G), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

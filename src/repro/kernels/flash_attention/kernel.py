@@ -26,7 +26,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 MINOR = 128  # TPU vector lane width; scratch minor dim
 NEG_INF = -1e30  # avoids -inf NaN propagation inside masked blocks
@@ -167,7 +167,7 @@ def flash_attention_fwd(
             pltpu.VMEM((block_q, MINOR), jnp.float32),
             pltpu.VMEM((block_q, MINOR), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _augment_kernel(
@@ -82,7 +82,7 @@ def fused_augment_fwd(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((B, out_h, out_w, C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

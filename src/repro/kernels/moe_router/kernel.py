@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _router_kernel(
@@ -116,7 +116,7 @@ def moe_router_fwd(
             jax.ShapeDtypeStruct((Tp, k), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, E), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

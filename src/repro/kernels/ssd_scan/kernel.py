@@ -24,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 NEG_INF = -1e30
 
@@ -144,7 +144,7 @@ def ssd_scan_fwd(
             jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

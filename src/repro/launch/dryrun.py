@@ -28,10 +28,8 @@ import traceback
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
-# archs whose optimizer moments must be bf16 to fit the mesh (4×params rule)
-BF16_STATE_ARCHS = {"llama3_405b", "kimi_k2_1t_a32b"}
-# archs where FSDP must extend over the pod axis on the multi-pod mesh
-FSDP_OVER_POD = {"llama3_405b", "kimi_k2_1t_a32b"}
+# Sharding-plan hints (bf16 moments, FSDP over the pod axis) are declared
+# per-config: ModelConfig.opt_state_dtype / ModelConfig.fsdp_over_pod.
 
 
 def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
@@ -83,7 +81,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     multi = mesh_name == "multi"
     mesh = make_production_mesh(multi_pod=multi)
     chips = int(mesh.size)
-    plan = make_plan(mesh, fsdp_over_pod=arch in FSDP_OVER_POD,
+    plan = make_plan(mesh, fsdp_over_pod=cfg.fsdp_over_pod,
                      seq_shard=seq_shard)
     if moe_pin != "auto" or moe_expert_axis != "model":
         import dataclasses
@@ -95,9 +93,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
 
     t0 = time.time()
     if shape.kind == "train":
-        oc = AdamWConfig(
-            state_dtype="bfloat16" if arch in BF16_STATE_ARCHS else "float32"
-        )
+        oc = AdamWConfig(state_dtype=cfg.opt_state_dtype)
         oshape = jax.eval_shape(lambda: opt.init_state(pshape, oc))
         state_shape = {"params": pshape, "opt": oshape}
         in_specs = S.train_input_specs(cfg, shape)

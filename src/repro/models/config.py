@@ -65,6 +65,12 @@ class ModelConfig:
     # modality frontend stubs ([audio]/[vlm]: precomputed embeddings)
     frontend: str = "none"  # none | audio_stub | vision_stub
 
+    # launch-time sharding plan hints, consumed by launch/dryrun via
+    # repro.dist: FSDP extended over the DCN pod axis and bf16 optimizer
+    # moments are what let the 405B/1T configs fit a 256-chip pod.
+    fsdp_over_pod: bool = False
+    opt_state_dtype: str = "float32"
+
     # numerics / runtime
     dtype: str = "bfloat16"
     param_dtype: str = "float32"

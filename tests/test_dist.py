@@ -2,9 +2,7 @@
 correctness (trip counts, 6·N·D anchoring), serve engine behavior."""
 import pytest
 
-pytest.importorskip(
-    "repro.dist", reason="repro.dist (model-sharding layer) is not implemented yet"
-)
+pytest.importorskip("jax", reason="optional [test] dependency")
 import jax
 import jax.numpy as jnp
 import numpy as np

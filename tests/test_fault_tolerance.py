@@ -124,12 +124,8 @@ class TestDispatcherFaults:
 
 class TestCheckpointRestore:
     @pytest.fixture(autouse=True)
-    def _requires_dist(self):
-        # repro.train -> repro.models -> repro.dist (not implemented yet)
-        pytest.importorskip(
-            "repro.dist",
-            reason="repro.dist (model-sharding layer) is not implemented yet",
-        )
+    def _requires_jax(self):
+        pytest.importorskip("jax", reason="optional [test] dependency")
 
     def test_train_state_roundtrip(self, tmp_path):
         import jax

@@ -1,4 +1,7 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import pytest
+
+pytest.importorskip("jax", reason="optional [test] dependency")
 import jax
 import jax.numpy as jnp
 import numpy as np

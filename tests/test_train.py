@@ -2,9 +2,7 @@
 elastic checkpoint resume."""
 import pytest
 
-pytest.importorskip(
-    "repro.dist", reason="repro.dist (model-sharding layer) is not implemented yet"
-)
+pytest.importorskip("jax", reason="optional [test] dependency")
 import jax
 import jax.numpy as jnp
 import numpy as np
