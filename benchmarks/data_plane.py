@@ -30,7 +30,10 @@ sys.path.insert(0, "src")
 from repro.core import available_codecs, start_service  # noqa: E402
 from repro.data import Dataset  # noqa: E402
 
-from common import Row, print_rows  # noqa: E402
+try:
+    from .common import Row, print_rows  # running under benchmarks.run
+except ImportError:
+    from common import Row, print_rows  # noqa: E402  (direct script run)
 
 # ~32 KiB of incompressible-ish payload per element, pre-generated so the
 # map fn costs ~nothing (isolates transfer from production).
@@ -84,11 +87,11 @@ def measure(
         svc.orchestrator.stop()
 
 
-def main() -> None:
+def main() -> List[Row]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer elements")
     ap.add_argument("--transports", default="inproc,tcp")
-    args = ap.parse_args()
+    args, _ = ap.parse_known_args()
     # --quick still needs enough elements that the ~1k-eps single-element
     # baseline runs ≥1 s per cell; shorter and scheduler noise dominates.
     n = 512 if args.quick else 1024
@@ -130,6 +133,7 @@ def main() -> None:
                         )
                     )
     print_rows(rows, "data plane: elements/sec by transport x codec x shape")
+    return rows
 
 
 if __name__ == "__main__":

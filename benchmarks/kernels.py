@@ -29,7 +29,10 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from common import Row, print_rows, time_fn  # noqa: E402
+try:
+    from .common import Row, print_rows, time_fn  # running under benchmarks.run
+except ImportError:
+    from common import Row, print_rows, time_fn  # noqa: E402  (direct run)
 
 RNG = np.random.default_rng(7)
 
@@ -167,12 +170,12 @@ def _max_err(a, b) -> float:
     )
 
 
-def main() -> None:
+def main() -> List[Row]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small shapes")
     ap.add_argument("--kernels", default=",".join(CASES),
                     help="comma-separated subset")
-    args = ap.parse_args()
+    args, _ = ap.parse_known_args()
     repeat = 3 if args.quick else 5
 
     rows: List[Row] = []
@@ -201,7 +204,10 @@ def main() -> None:
         for name, err, tol in failures:
             print(f"FAIL {name}: max_abs_err {err:.3e} > tol {tol:.0e}",
                   file=sys.stderr)
-        sys.exit(1)
+        # RuntimeError (not sys.exit) so benchmarks.run records the suite as
+        # failed instead of dying; direct runs still exit nonzero
+        raise RuntimeError(f"{len(failures)} kernel correctness failures")
+    return rows
 
 
 if __name__ == "__main__":

@@ -16,6 +16,9 @@ SUITES = (
     ("S33_visitation", "benchmarks.visitation"),
     ("S42_cross_region", "benchmarks.cross_region"),
     ("TPU_bucket_compile", "benchmarks.bucket_compile"),
+    ("DataPlane_throughput", "benchmarks.data_plane"),
+    ("Pallas_kernels", "benchmarks.kernels"),
+    ("Snapshot_materialization", "benchmarks.snapshot"),
 )
 
 
@@ -30,7 +33,7 @@ def main() -> None:
         try:
             mod = importlib.import_module(mod_name)
             rows = mod.main()
-            all_rows[name] = {r.name: r for r in rows}
+            all_rows[name] = {r.name: r for r in rows or ()}
         except Exception:
             traceback.print_exc()
             failed.append(name)

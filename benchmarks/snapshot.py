@@ -1,0 +1,131 @@
+"""Snapshot materialization: read-path vs compute-path throughput.
+
+The economic claim behind materialization (Cachew; tf.data's `snapshot`;
+§3.5's compute-vs-cache trade): once a CPU-bound pipeline's output is
+persisted, later jobs read committed batches instead of re-running the
+preprocessing.  This harness measures, through a REAL deployment
+(dispatcher + 2 workers, inproc transport):
+
+  compute   — job drains the CPU-bound vision pipeline (DYNAMIC sharding).
+  write     — materializing the same pipeline to a snapshot (compute +
+              chunk encode/compress/fsync: the one-time overhead).
+  read      — a second job drains ``from_snapshot`` through the service
+              (chunk-granularity DYNAMIC sharding).
+  read_local— detached read straight off the shared FS (no service hop).
+
+All rows are tier ``real``.  Target (ISSUE acceptance): read >= 2x compute
+for a CPU-bound pipeline.
+
+Run:  PYTHONPATH=src python benchmarks/snapshot.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+try:
+    from .common import Row, print_rows
+except ImportError:  # direct script invocation
+    from common import Row, print_rows
+
+from repro.core import materialize, start_service  # noqa: E402
+from repro.data import Dataset  # noqa: E402
+from repro.data.pipelines import vision_pipeline  # noqa: E402
+from repro.snapshot import iterate_snapshot, snapshot_status  # noqa: E402
+
+
+def _drain(iterable) -> int:
+    return sum(1 for _ in iterable)
+
+
+def _timed_drain(dds):
+    """(batches, seconds) with the clock starting at the FIRST element —
+    job rollout (~0.3 s of heartbeat task delivery) would otherwise swamp
+    small reads (same convention as benchmarks/data_plane.py)."""
+    it = iter(dds)
+    next(it)
+    t0 = time.perf_counter()
+    n = 1 + sum(1 for _ in it)
+    return n, time.perf_counter() - t0
+
+
+def main() -> List[Row]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller pipeline")
+    args, _ = ap.parse_known_args()
+    n = 128 if args.quick else 384
+    work = 1 if args.quick else 2
+    pipe = vision_pipeline(
+        num_elements=n, batch_size=8, image_size=48, crop=40,
+        work_factor=work, parallelism=0, shuffle_buffer=64,
+    )
+    expected_batches = n // 8
+
+    tmp = tempfile.mkdtemp(prefix="repro-snap-bench-")
+    snap = os.path.join(tmp, "snap")
+    rows: List[Row] = []
+    svc = start_service(num_workers=2, worker_buffer_size=64)
+    try:
+        # -- compute path ---------------------------------------------------
+        got, compute_s = _timed_drain(
+            pipe.distribute(service=svc, processing_mode="dynamic")
+        )
+        compute_eps = got * 8 / compute_s
+        rows.append(Row("snapshot/compute_path", compute_eps, "elements/s",
+                        "real", f"{got} batches, work_factor={work}"))
+
+        # -- write (one-time materialization cost) --------------------------
+        t0 = time.perf_counter()
+        st = materialize(svc, pipe, snap, timeout=600)
+        write_s = time.perf_counter() - t0
+        assert st["finished"], st
+        n_batches = st and sum(s["elements"] for s in st["streams"])
+        rows.append(Row("snapshot/write_path", n_batches * 8 / write_s,
+                        "elements/s", "real",
+                        f"{n_batches} batches, {snapshot_status(snap)['bytes']} B"))
+
+        # -- read paths ------------------------------------------------------
+        got_r, read_s = _timed_drain(
+            Dataset.from_snapshot(snap).distribute(
+                service=svc, processing_mode="dynamic"
+            )
+        )
+        read_eps = got_r * 8 / read_s
+        rows.append(Row("snapshot/read_path", read_eps, "elements/s", "real",
+                        f"{got_r} batches via service, chunk-sharded"))
+
+        t0 = time.perf_counter()
+        got_l = _drain(iterate_snapshot(snap))
+        local_s = time.perf_counter() - t0
+        rows.append(Row("snapshot/read_local", got_l * 8 / local_s,
+                        "elements/s", "real", "detached read, no service hop"))
+
+        rows.append(Row("snapshot/read_over_compute", read_eps / compute_eps,
+                        "x", "real",
+                        "ISSUE target >= 2x for a CPU-bound pipeline"))
+        rows.append(Row("snapshot/write_overhead", write_s / compute_s, "x",
+                        "real", "materialization cost vs one compute pass"))
+        assert got >= expected_batches // 2, f"compute path starved: {got}"
+    finally:
+        svc.orchestrator.stop()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    print_rows(rows, "snapshot: materialized read path vs compute path")
+    ratio = next(r for r in rows if r.name == "snapshot/read_over_compute")
+    if ratio.value < 2.0:
+        print(f"WARNING: read/compute ratio {ratio.value:.2f}x below 2x target",
+              file=sys.stderr)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,9 @@
 processing service (dispatcher + stateless workers + clients), with
 horizontal scale-out, ephemeral data sharing, coordinated reads, relaxed
 data-visitation guarantees, and journal-based dispatcher fault tolerance."""
-from .autoscaler import Autoscaler, AutoscalerConfig
+from .autoscaler import Autoscaler, AutoscalerConfig, ScalableOrchestrator
 from .cache import SlidingWindowCache
-from .client import DataServiceClient, DistributedDataset
+from .client import DataServiceClient, DistributedDataset, materialize
 from .codecs import available_codecs, register_codec, resolve_codec
 from .cost import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
 from .dispatcher import Dispatcher
@@ -27,6 +27,7 @@ __all__ = [
     "Journal",
     "JobResources",
     "LocalOrchestrator",
+    "ScalableOrchestrator",
     "ServiceHandle",
     "ShardManager",
     "ShardingPolicy",
@@ -42,6 +43,7 @@ __all__ = [
     "cost_saving",
     "guarantee_for",
     "job_cost",
+    "materialize",
     "register_codec",
     "resolve_codec",
     "start_service",

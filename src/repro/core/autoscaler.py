@@ -4,16 +4,37 @@ Policy (Cachew-style, batch-latency driven): scale OUT while clients starve
 (worker buffers run empty — the service is the bottleneck); scale IN when
 buffers sit full (over-provisioned).  Hysteresis + cooldown prevent flapping;
 min/max bound the pool.  The scaler observes only dispatcher-aggregated
-signals, so it works unchanged over any transport.
+signals, so it works unchanged over any transport — and against ANY
+orchestrator exposing the small signal interface below (the in-process
+``LocalOrchestrator``, a snapshot-write worker pool, a k8s shim, ...).
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
 
-from .service import LocalOrchestrator
+
+@runtime_checkable
+class ScalableOrchestrator(Protocol):
+    """The signal/actuation surface the autoscaler needs — nothing more.
+
+    ``stats()`` must return a dict with a ``"workers"`` mapping whose values
+    carry ``"buffer_occupancy"``; ``live_workers`` sizes the pool;
+    ``add_worker``/``remove_worker`` actuate.  ``LocalOrchestrator``
+    satisfies this structurally; so can any deployment-specific pool
+    (e.g. a dedicated snapshot-write pool).
+    """
+
+    def stats(self) -> Dict[str, Any]: ...
+
+    def add_worker(self) -> Any: ...
+
+    def remove_worker(self, worker: Any) -> None: ...
+
+    @property
+    def live_workers(self) -> List[Any]: ...
 
 
 @dataclass
@@ -28,7 +49,7 @@ class AutoscalerConfig:
 
 
 class Autoscaler:
-    def __init__(self, orch: LocalOrchestrator, config: Optional[AutoscalerConfig] = None):
+    def __init__(self, orch: ScalableOrchestrator, config: Optional[AutoscalerConfig] = None):
         self._orch = orch
         self.config = config or AutoscalerConfig()
         self._last_action = 0.0

@@ -115,6 +115,7 @@ class DataServiceClient:
         target_workers: str = "any",
         max_workers: int = 0,
         resume_offsets: bool = False,
+        autocache: bool = False,
         buffer_size: int = 8,
         fetch_window: int = DEFAULT_FETCH_WINDOW,
         max_batch: int = DEFAULT_MAX_BATCH,
@@ -137,6 +138,7 @@ class DataServiceClient:
         self._target_workers = target_workers
         self._max_workers = max_workers
         self._resume_offsets = resume_offsets
+        self._autocache = autocache
         self._buffer_size = buffer_size
         self._fetch_window = max(1, fetch_window)
         self._max_batch = max(1, max_batch)
@@ -145,6 +147,9 @@ class DataServiceClient:
         self._prefer_batched = prefer_batched
         self._hb_interval = heartbeat_interval
         self.negotiated_compression: Optional[str] = None
+        # the dispatcher's autocache verdict for this job, once registered:
+        # "compute" | "write_through" | "read" | None (autocache off)
+        self.autocache_decision: Optional[str] = None
 
         self._tasks: Dict[str, _TaskHandle] = {}
         self._tasks_lock = threading.Lock()
@@ -174,9 +179,11 @@ class DataServiceClient:
             resume_offsets=self._resume_offsets,
             client_id=self.client_id,
             client_codecs=available_codecs(),  # negotiation: what WE decode
+            autocache=self._autocache,
         )
         self._job_id = view["job_id"]
         self.negotiated_compression = view.get("compression")
+        self.autocache_decision = view.get("autocache")
         self._sync_tasks(view)
 
     def _sync_tasks(self, view: Dict[str, Any]) -> None:
@@ -474,6 +481,7 @@ class DistributedDataset:
         target_workers: str = "any",
         max_workers: int = 0,
         resume_offsets: bool = False,
+        autocache: bool = False,
         buffer_size: int = 8,
         fetch_window: int = DEFAULT_FETCH_WINDOW,
         max_batch: int = DEFAULT_MAX_BATCH,
@@ -494,6 +502,7 @@ class DistributedDataset:
             target_workers=target_workers,
             max_workers=max_workers,
             resume_offsets=resume_offsets,
+            autocache=autocache,
             buffer_size=buffer_size,
             fetch_window=fetch_window,
             max_batch=max_batch,
@@ -507,3 +516,59 @@ class DistributedDataset:
 
     def __iter__(self) -> Iterator[Element]:
         return iter(self.session())
+
+
+def materialize(
+    service: Any,
+    dataset: Any,
+    path: str,
+    num_streams: int = 0,
+    compression: Optional[str] = None,
+    chunk_bytes: int = 0,
+    wait: bool = True,
+    timeout: float = 300.0,
+    poll_interval: float = 0.05,
+) -> Dict[str, Any]:
+    """Materialize a pipeline into a snapshot through the service.
+
+    Registers the dataset with the dispatcher and starts (or joins — the
+    call is idempotent per path) a distributed snapshot write: the
+    dispatcher partitions the source into streams, workers execute the
+    pipeline and append committed chunks under ``path``.  With ``wait``
+    the call polls until the snapshot is finalized (riding through
+    dispatcher downtime like any client, §3.4) and returns the final
+    status; otherwise it returns the initial status view immediately.
+
+    Consume the result with ``Dataset.from_snapshot(path)`` — including
+    mid-write via ``tail=True``.
+    """
+    address = getattr(service, "dispatcher_address", service)
+    if not isinstance(address, str):
+        raise TypeError("service must be a ServiceHandle or dispatcher address")
+    graph: Graph = dataset.graph if hasattr(dataset, "graph") else dataset
+    stub = Stub(address)
+    resp = stub.call(
+        "start_snapshot",
+        path=path,
+        graph_bytes=graph.to_bytes(),
+        num_streams=num_streams,
+        compression=compression,
+        client_codecs=available_codecs(),
+        chunk_bytes=chunk_bytes,
+    )
+    if not wait or resp.get("finished"):
+        return resp
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            st = stub.call("snapshot_status", snapshot_id=resp["snapshot_id"])
+        except TransportError:
+            st = {}  # dispatcher down: keep polling (it restarts in place)
+        if st.get("finished"):
+            return st
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"snapshot {resp['snapshot_id']} at {path} not finished "
+                f"after {timeout:.0f}s: {st}"
+            )
+        time.sleep(poll_interval)

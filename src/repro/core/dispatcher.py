@@ -13,15 +13,25 @@ clients to workers — the dispatcher is deliberately off the data path).
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set
 
-from ..data.graph import Graph
+from ..data.graph import Graph, Node
+from ..snapshot.format import write_done, write_metadata
+from ..snapshot.manager import (
+    SnapshotState,
+    StreamState,
+    apply_chunk_committed,
+    partition_streams,
+)
+from ..snapshot.policy import AutocacheConfig, AutocachePolicy, Decision
 from .codecs import resolve_codec
 from .journal import Journal
 from .protocol import (
+    DEFAULT_CHUNK_BYTES,
     FetchStatus,
     JobView,
     ShardingPolicy,
@@ -58,6 +68,7 @@ class _Job:
     clients: Set[str] = field(default_factory=set)
     seq: int = 0  # task seeds
     static_assignment: Optional[Dict[str, List[Dict[str, Any]]]] = None
+    autocache_decision: Optional[str] = None  # compute | write_through | read
 
 
 @dataclass
@@ -67,6 +78,12 @@ class _Worker:
     buffer_occupancy: float = 0.0
     cpu_busy: float = 0.0
     delivered: Set[str] = field(default_factory=set)  # task ids shipped
+    # (snapshot_id, stream_id) assignments shipped to this worker
+    delivered_streams: Set[Any] = field(default_factory=set)
+    # latest heartbeat-reported SlidingWindowCache counters, by cache key
+    # (pipeline fingerprint) — feeds sharing-efficiency introspection and
+    # the autocache policy's hot-pipeline signal
+    cache_stats: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
 
 class Dispatcher:
@@ -75,6 +92,8 @@ class Dispatcher:
         journal_path: Optional[str] = None,
         heartbeat_timeout: float = 5.0,
         overpartition: int = 4,
+        snapshot_root: Optional[str] = None,
+        autocache_config: Optional[AutocacheConfig] = None,
     ):
         self._lock = threading.RLock()
         self._datasets: Dict[str, _Dataset] = {}
@@ -82,6 +101,15 @@ class Dispatcher:
         self._jobs: Dict[str, _Job] = {}
         self._jobs_by_name: Dict[str, str] = {}
         self._workers: Dict[str, _Worker] = {}
+        self._snapshots: Dict[str, SnapshotState] = {}
+        self._snapshots_by_path: Dict[str, str] = {}
+        # autocache: jobs opting in get a compute / write-through / read
+        # decision keyed by pipeline fingerprint (requires snapshot_root)
+        self._autocache: Optional[AutocachePolicy] = (
+            AutocachePolicy(snapshot_root, autocache_config)
+            if snapshot_root
+            else None
+        )
         self._worker_list_version = 0
         self._heartbeat_timeout = heartbeat_timeout
         self._overpartition = overpartition
@@ -147,6 +175,7 @@ class Dispatcher:
         resume_offsets: bool = False,
         client_id: Optional[str] = None,
         client_codecs: Optional[List[str]] = None,
+        autocache: bool = False,
     ) -> Dict[str, Any]:
         with self._lock:
             if job_name and job_name in self._jobs_by_name:
@@ -154,6 +183,11 @@ class Dispatcher:
                 if client_id:
                     job.clients.add(client_id)
                 return self._job_view(job)
+            decision = None
+            if autocache and self._autocache is not None:
+                dataset_id, decision = self._autocache_decide(
+                    dataset_id, compression=compression, client_codecs=client_codecs
+                )
             payload = dict(
                 job_id=new_id("job"),
                 job_name=job_name or "",
@@ -171,12 +205,59 @@ class Dispatcher:
                 # journaled so a restored dispatcher partitions the source
                 # into the SAME shards (ids must stay aligned with the log)
                 shard_hint=max(1, len(self._workers)) * self._overpartition,
+                autocache_decision=decision,
             )
             self._journal.append("job_created", payload)
             job = self._apply_job(payload)
             if client_id:
                 job.clients.add(client_id)
             return self._job_view(job)
+
+    def _autocache_decide(
+        self,
+        dataset_id: str,
+        compression: Optional[str],
+        client_codecs: Optional[List[str]],
+    ) -> "tuple[str, Optional[str]]":
+        """Resolve an autocache job's effective dataset.
+
+        READ swaps the job onto a snapshot-source dataset (registered and
+        journaled like any other); WRITE_THROUGH starts materializing the
+        pipeline (get-or-start) while the job computes as usual.
+        """
+        ds = self._datasets[dataset_id]
+        d = self._autocache.decide(
+            ds.fingerprint, cache_stats=self._aggregate_cache_stats(ds.fingerprint)
+        )
+        if d.decision == Decision.READ:
+            snap_graph = Graph([Node("snapshot", {"path": d.snapshot_path})])
+            resp = self.rpc_get_or_register_dataset(snap_graph.to_bytes())
+            return resp["dataset_id"], d.value
+        if d.decision == Decision.WRITE_THROUGH:
+            self.rpc_start_snapshot(
+                path=d.snapshot_path,
+                dataset_id=dataset_id,
+                compression=compression,
+                client_codecs=client_codecs,
+                # the policy only answers WRITE_THROUGH for an existing dir
+                # when the write is abandoned — allow clearing it
+                replace_stale_s=self._autocache.config.stale_write_timeout_s,
+            )
+        return dataset_id, d.value
+
+    def _aggregate_cache_stats(self, cache_key: str) -> Optional[Dict[str, Any]]:
+        """Sum heartbeat-reported SlidingWindowCache counters for one key."""
+        agg: Dict[str, float] = {}
+        found = False
+        for w in self._workers.values():
+            st = w.cache_stats.get(cache_key)
+            if not st:
+                continue
+            found = True
+            for k, v in st.items():
+                if isinstance(v, (int, float)):
+                    agg[k] = agg.get(k, 0) + v
+        return agg if found else None
 
     def _apply_job(self, p: Dict[str, Any]) -> _Job:
         job = _Job(
@@ -189,6 +270,7 @@ class Dispatcher:
             compression=p.get("compression"),
             max_workers=p.get("max_workers", 0),
             resume_offsets=p.get("resume_offsets", False),
+            autocache_decision=p.get("autocache_decision"),
         )
         if job.policy in (ShardingPolicy.DYNAMIC, ShardingPolicy.STATIC):
             graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
@@ -247,6 +329,7 @@ class Dispatcher:
             "finished": job.finished,
             "worker_list_version": self._worker_list_version,
             "compression": job.compression,
+            "autocache": job.autocache_decision,
             "tasks": [vars(t) for t in self._active_tasks(job)],
         }
 
@@ -289,7 +372,12 @@ class Dispatcher:
                 self._worker_list_version += 1
             w = self._workers[worker_id]
             tasks = self._undelivered_tasks(w)
-            return {"tasks": tasks, "worker_list_version": self._worker_list_version}
+            self._assign_snapshot_streams(worker_id)
+            return {
+                "tasks": tasks,
+                "snapshot_streams": self._undelivered_snapshot_streams(w),
+                "worker_list_version": self._worker_list_version,
+            }
 
     def _undelivered_tasks(self, w: _Worker) -> List[Dict[str, Any]]:
         """Tasks for every active job not yet shipped to this worker."""
@@ -335,6 +423,8 @@ class Dispatcher:
         buffer_occupancy: float = 0.0,
         cpu_busy: float = 0.0,
         completed_tasks: Optional[List[str]] = None,
+        cache_stats: Optional[Dict[str, Dict[str, Any]]] = None,
+        failed_streams: Optional[List[List[Any]]] = None,
     ) -> Dict[str, Any]:
         with self._lock:
             w = self._workers.get(worker_id)
@@ -344,9 +434,17 @@ class Dispatcher:
             w.last_heartbeat = time.monotonic()
             w.buffer_occupancy = buffer_occupancy
             w.cpu_busy = cpu_busy
+            if cache_stats is not None:
+                w.cache_stats = cache_stats
             for tid in completed_tasks or []:
                 self._complete_task(tid, journal=True)
+            for sid, stream_id in failed_streams or []:
+                # the worker's writer died on an exception: release the
+                # stream so it can be retried (here or elsewhere) from the
+                # last committed offset
+                self._release_failed_stream(sid, int(stream_id), worker_id)
             new_tasks = self._undelivered_tasks(w)
+            self._assign_snapshot_streams(worker_id)
             valid = [
                 job.tasks_by_worker[worker_id]
                 for job in self._jobs.values()
@@ -354,6 +452,7 @@ class Dispatcher:
             ]
             return {
                 "new_tasks": new_tasks,
+                "snapshot_streams": self._undelivered_snapshot_streams(w),
                 "valid_tasks": valid,
                 "worker_list_version": self._worker_list_version,
                 "reregister": False,
@@ -399,13 +498,25 @@ class Dispatcher:
         return removed
 
     def _sweep_orphan_shards(self, now: float) -> None:
-        """Reclaim shards assigned (pre-restart, per the journal) to workers
-        that never re-registered.  check_workers can't see them — they are
-        not in self._workers — so without this sweep such shards stay
-        in-flight forever and the job never finishes."""
+        """Reclaim shards AND snapshot streams assigned (pre-restart, per
+        the journal) to workers that never re-registered.  check_workers
+        can't see them — they are not in self._workers — so without this
+        sweep such shards stay in-flight forever and the job (or snapshot)
+        never finishes."""
         if self._orphan_sweep_deadline is None or now < self._orphan_sweep_deadline:
             return
         self._orphan_sweep_deadline = None
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            orphan_owners = {
+                s.assigned_to
+                for s in snap.streams
+                if s.assigned_to and not s.done
+                and s.assigned_to not in self._workers
+            }
+            for wid in orphan_owners:
+                self._release_worker_streams(wid)
         for job in self._jobs.values():
             mgr = job.shard_mgr
             if mgr is None or job.finished:
@@ -437,6 +548,7 @@ class Dispatcher:
         self._journal.append("worker_removed", {"worker_id": worker_id})
         del self._workers[worker_id]
         self._worker_list_version += 1
+        self._release_worker_streams(worker_id)
         for job in self._jobs.values():
             if job.shard_mgr is not None:
                 lost = job.shard_mgr.worker_failed(worker_id)
@@ -497,6 +609,320 @@ class Dispatcher:
             return {"ok": True}
 
     # ------------------------------------------------------------------
+    # Snapshots / materialization (repro.snapshot): the committer layer
+    # ------------------------------------------------------------------
+    def rpc_start_snapshot(
+        self,
+        path: str,
+        dataset_id: Optional[str] = None,
+        graph_bytes: Optional[bytes] = None,
+        num_streams: int = 0,
+        compression: Optional[str] = None,
+        client_codecs: Optional[List[str]] = None,
+        chunk_bytes: int = 0,
+        seed_base: int = 0,
+        replace_stale_s: Optional[float] = None,
+    ) -> Dict[str, Any]:
+        """Get-or-start materializing a dataset to ``path`` (idempotent
+        per (path, pipeline fingerprint)).
+
+        Partitions the source into ``num_streams`` streams (default: one
+        per registered worker), journals the plan, and assigns streams to
+        workers round-robin; workers receive their assignments via
+        heartbeat and start appending committed chunks.
+
+        A path already holding a DIFFERENT pipeline's snapshot is an error
+        (manifests merge by seq — mixing pipelines would silently
+        interleave their batches).  A path with an unfinished snapshot no
+        dispatcher tracks (a dead deployment's partial write) is refused
+        unless ``replace_stale_s`` is given and the write has been idle at
+        least that long, in which case the stale directory is cleared and
+        the snapshot restarts.
+        """
+        from ..snapshot.format import read_metadata
+        from ..snapshot.reader import last_progress_unix, snapshot_finished
+
+        with self._lock:
+            path = os.path.abspath(path)
+            if dataset_id is None:
+                if graph_bytes is None:
+                    raise ValueError("start_snapshot needs dataset_id or graph_bytes")
+                dataset_id = self.rpc_get_or_register_dataset(graph_bytes)["dataset_id"]
+            ds = self._datasets[dataset_id]
+            if path in self._snapshots_by_path:
+                snap = self._snapshots[self._snapshots_by_path[path]]
+                if snap.fingerprint != ds.fingerprint:
+                    raise ValueError(
+                        f"snapshot path {path} already materializes pipeline "
+                        f"{snap.fingerprint}, not {ds.fingerprint} — use a "
+                        f"different path per pipeline"
+                    )
+                return dict(snap.view(), existing=True)
+            meta = read_metadata(path)
+            if meta is not None:  # on-disk snapshot this dispatcher doesn't track
+                if meta.get("fingerprint") != ds.fingerprint:
+                    raise ValueError(
+                        f"snapshot path {path} holds pipeline "
+                        f"{meta.get('fingerprint')}, not {ds.fingerprint}"
+                    )
+                if snapshot_finished(path):
+                    # adopt the finished snapshot read-only: report success
+                    from ..snapshot.reader import snapshot_status
+
+                    return dict(snapshot_status(path), existing=True, path=path)
+                idle = time.time() - last_progress_unix(path)
+                if replace_stale_s is None or idle < replace_stale_s:
+                    raise ValueError(
+                        f"snapshot path {path} holds an unfinished write this "
+                        f"dispatcher doesn't track (idle {idle:.0f}s); pass "
+                        f"replace_stale_s to restart it or use a fresh path"
+                    )
+                import shutil
+
+                shutil.rmtree(path, ignore_errors=True)
+            num_streams = int(num_streams) or max(1, len(self._workers))
+            streams = partition_streams(
+                Graph.from_bytes(ds.graph_bytes), num_streams, self._overpartition
+            )
+            payload = {
+                "snapshot_id": new_id("snap"),
+                "path": path,
+                "dataset_id": dataset_id,
+                "fingerprint": ds.fingerprint,
+                "codec": resolve_codec(compression, client_codecs),
+                "chunk_bytes": int(chunk_bytes) or DEFAULT_CHUNK_BYTES,
+                "seed_base": int(seed_base),
+                "streams": streams,
+            }
+            self._journal.append("snapshot_started", payload, sync=True)
+            snap = self._apply_snapshot_started(payload)
+            # initial round-robin assignment over the current worker pool;
+            # workers registering later pick up unassigned streams on
+            # heartbeat (and reassignment after failures does the same)
+            workers = sorted(self._workers)
+            for i, stream in enumerate(snap.streams):
+                if workers:
+                    self._assign_stream(snap, stream, workers[i % len(workers)])
+            return dict(snap.view(), existing=False)
+
+    def _apply_snapshot_started(self, p: Dict[str, Any]) -> SnapshotState:
+        snap = SnapshotState(
+            snapshot_id=p["snapshot_id"],
+            path=p["path"],
+            dataset_id=p["dataset_id"],
+            fingerprint=p["fingerprint"],
+            codec=p.get("codec"),
+            chunk_bytes=p["chunk_bytes"],
+            seed_base=p.get("seed_base", 0),
+            streams=[
+                StreamState(stream_id=i, shards=shards)
+                for i, shards in enumerate(p["streams"])
+            ],
+        )
+        self._snapshots[snap.snapshot_id] = snap
+        self._snapshots_by_path[snap.path] = snap.snapshot_id
+        # idempotent: (re)write the immutable on-disk metadata so readers on
+        # the shared FS can discover the snapshot without the dispatcher
+        write_metadata(
+            snap.path,
+            snap.snapshot_id,
+            snap.fingerprint,
+            snap.codec,
+            snap.chunk_bytes,
+            len(snap.streams),
+            snap.seed_base,
+        )
+        return snap
+
+    def _assign_stream(
+        self, snap: SnapshotState, stream: StreamState, worker_id: str
+    ) -> None:
+        self._journal.append(
+            "snapshot_stream_assigned",
+            {
+                "snapshot_id": snap.snapshot_id,
+                "stream_id": stream.stream_id,
+                "worker_id": worker_id,
+            },
+        )
+        stream.assigned_to = worker_id
+        # the spec must be (re)shipped with fresh resume state
+        key = (snap.snapshot_id, stream.stream_id)
+        for w in self._workers.values():
+            w.delivered_streams.discard(key)
+
+    def _assign_snapshot_streams(self, worker_id: str) -> None:
+        """Hand unowned streams to a live worker, keeping the load fair.
+
+        Streams lose their owner on worker failure (or were never assigned
+        because no worker was registered at start).  Each heartbeat tops the
+        calling worker up to its fair share of the remaining streams.  A
+        stream whose recorded owner has not (re-)registered is NOT up for
+        grabs here: after a dispatcher restart the owner usually comes back
+        within a heartbeat, and the orphan sweep reclaims it after the
+        grace period if it doesn't (stealing a live writer's stream would
+        force a pointless re-production of its whole uncommitted suffix).
+        """
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            unowned = [s for s in snap.streams if not s.done and s.assigned_to is None]
+            if not unowned:
+                continue
+            fair = -(-len(snap.undone_streams()) // max(1, len(self._workers)))
+            owned = len(snap.streams_for_worker(worker_id))
+            for s in unowned:
+                if owned >= fair:
+                    break
+                self._assign_stream(snap, s, worker_id)
+                owned += 1
+
+    def _undelivered_snapshot_streams(self, w: _Worker) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            ds = self._datasets[snap.dataset_id]
+            for s in snap.streams:
+                if s.done or s.assigned_to != w.info.worker_id:
+                    continue
+                key = (snap.snapshot_id, s.stream_id)
+                if key in w.delivered_streams:
+                    continue
+                w.delivered_streams.add(key)
+                out.append(snap.stream_spec(s, ds.graph_bytes))
+        return out
+
+    def rpc_snapshot_commit_chunk(
+        self,
+        snapshot_id: str,
+        stream_id: int,
+        worker_id: str,
+        seq: int,
+        count: int,
+        nbytes: int = 0,
+    ) -> Dict[str, Any]:
+        """Acknowledge one committed chunk (journaled with fsync BEFORE the
+        ack — the ack is the writer's license to treat the chunk as durable
+        committer state).  A non-owner report means the stream was
+        reassigned: the (zombie) writer must stop."""
+        with self._lock:
+            snap = self._snapshots.get(snapshot_id)
+            if snap is None or stream_id >= len(snap.streams):
+                return {"ok": False, "reassigned": True}
+            stream = snap.streams[stream_id]
+            if stream.done or stream.assigned_to != worker_id:
+                return {"ok": False, "reassigned": True}
+            if seq < stream.next_seq:
+                return {"ok": True, "dup": True}  # redelivered report
+            if seq != stream.next_seq:
+                # gap: acks for earlier chunks are still in flight (queued
+                # worker-side while the dispatcher was down, draining via
+                # heartbeat) — tell the writer to re-queue this one BEHIND
+                # them rather than treating the stream as lost
+                return {"ok": False, "retry": True}
+            self._journal.append(
+                "snapshot_chunk_committed",
+                {
+                    "snapshot_id": snapshot_id,
+                    "stream_id": stream_id,
+                    "seq": seq,
+                    "count": count,
+                    "nbytes": nbytes,
+                },
+                sync=True,
+            )
+            apply_chunk_committed(stream, seq, count, nbytes)
+            return {"ok": True}
+
+    def rpc_snapshot_stream_done(
+        self, snapshot_id: str, stream_id: int, worker_id: str
+    ) -> Dict[str, Any]:
+        with self._lock:
+            snap = self._snapshots.get(snapshot_id)
+            if snap is None or stream_id >= len(snap.streams):
+                return {"ok": False, "reassigned": True}
+            stream = snap.streams[stream_id]
+            if stream.done:
+                return {"ok": True, "dup": True}
+            if stream.assigned_to != worker_id:
+                return {"ok": False, "reassigned": True}
+            self._journal.append(
+                "snapshot_stream_done",
+                {"snapshot_id": snapshot_id, "stream_id": stream_id},
+                sync=True,
+            )
+            self._apply_stream_done(snap, stream_id)
+            return {"ok": True}
+
+    def _apply_stream_done(self, snap: SnapshotState, stream_id: int) -> None:
+        stream = snap.streams[stream_id]
+        stream.done = True
+        stream.assigned_to = None
+        if snap.all_streams_done and not snap.finished:
+            self._journal.append(
+                "snapshot_finished", {"snapshot_id": snap.snapshot_id}, sync=True
+            )
+            self._finalize_snapshot(snap)
+
+    def _finalize_snapshot(self, snap: SnapshotState) -> None:
+        snap.finished = True
+        # the DONE marker is what detached readers key "finished" off;
+        # idempotent so a restored dispatcher can re-run it
+        write_done(snap.path, snap.summary())
+
+    def rpc_snapshot_status(
+        self, snapshot_id: Optional[str] = None, path: Optional[str] = None
+    ) -> Dict[str, Any]:
+        with self._lock:
+            if snapshot_id is None and path is not None:
+                snapshot_id = self._snapshots_by_path.get(os.path.abspath(path))
+            snap = self._snapshots.get(snapshot_id or "")
+            if snap is None:
+                return {"exists": False, "finished": False}
+            return dict(snap.view(), exists=True)
+
+    def _release_failed_stream(
+        self, snapshot_id: str, stream_id: int, worker_id: str
+    ) -> None:
+        snap = self._snapshots.get(snapshot_id)
+        if snap is None or snap.finished or stream_id >= len(snap.streams):
+            return
+        stream = snap.streams[stream_id]
+        if stream.done or stream.assigned_to != worker_id:
+            return
+        self._journal.append(
+            "snapshot_stream_released",
+            {"snapshot_id": snapshot_id, "stream_id": stream_id},
+        )
+        stream.assigned_to = None
+        key = (snapshot_id, stream_id)
+        for w in self._workers.values():
+            w.delivered_streams.discard(key)
+        # reassignment happens via _assign_snapshot_streams on the next
+        # heartbeat of any worker (including the one that just failed)
+
+    def _release_worker_streams(self, worker_id: str) -> None:
+        """Worker died: orphan its streams and reassign them immediately so
+        materialization continues (replacements resume at the committed
+        offset — the journal has every acknowledged chunk)."""
+        survivors = sorted(self._workers)
+        i = 0
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            for s in snap.streams:
+                if s.assigned_to == worker_id and not s.done:
+                    self._journal.append(
+                        "snapshot_stream_released",
+                        {"snapshot_id": snap.snapshot_id, "stream_id": s.stream_id},
+                    )
+                    s.assigned_to = None
+                    if survivors:
+                        self._assign_stream(snap, s, survivors[i % len(survivors)])
+                        i += 1
+
+    # ------------------------------------------------------------------
     # Introspection
     # ------------------------------------------------------------------
     def rpc_stats(self) -> Dict[str, Any]:
@@ -522,8 +948,20 @@ class Dispatcher:
                         "address": w.info.address,
                         "buffer_occupancy": w.buffer_occupancy,
                         "cpu_busy": w.cpu_busy,
+                        "cache_stats": w.cache_stats,
                     }
                     for wid, w in self._workers.items()
+                },
+                # sharing efficiency per pipeline fingerprint, aggregated
+                # from worker heartbeats (feeds the autocache hot signal)
+                "sharing": {
+                    key: self._aggregate_cache_stats(key)
+                    for key in sorted(
+                        {k for w in self._workers.values() for k in w.cache_stats}
+                    )
+                },
+                "snapshots": {
+                    s.snapshot_id: s.view() for s in self._snapshots.values()
                 },
             }
 
@@ -596,6 +1034,40 @@ class Dispatcher:
                         for st in job.shard_mgr._states:
                             if st.shard_id == p["shard_id"]:
                                 st.offset = max(st.offset, p["offset"])
+                elif etype == "snapshot_started":
+                    self._apply_snapshot_started(p)
+                elif etype == "snapshot_stream_assigned":
+                    snap = self._snapshots.get(p["snapshot_id"])
+                    if snap is not None:
+                        # keep the assignment: a live writer continues
+                        # seamlessly; a dead one is reclaimed by the orphan
+                        # sweep / check_workers like in-flight shards
+                        snap.streams[p["stream_id"]].assigned_to = p["worker_id"]
+                elif etype == "snapshot_stream_released":
+                    snap = self._snapshots.get(p["snapshot_id"])
+                    if snap is not None:
+                        snap.streams[p["stream_id"]].assigned_to = None
+                elif etype == "snapshot_chunk_committed":
+                    snap = self._snapshots.get(p["snapshot_id"])
+                    if snap is not None:
+                        apply_chunk_committed(
+                            snap.streams[p["stream_id"]],
+                            p["seq"],
+                            p["count"],
+                            p.get("nbytes", 0),
+                        )
+                elif etype == "snapshot_stream_done":
+                    snap = self._snapshots.get(p["snapshot_id"])
+                    if snap is not None:
+                        stream = snap.streams[p["stream_id"]]
+                        stream.done = True
+                        stream.assigned_to = None
+                elif etype == "snapshot_finished":
+                    snap = self._snapshots.get(p["snapshot_id"])
+                    if snap is not None:
+                        # re-runs write_done: idempotent, covers a crash
+                        # between the journal append and the DONE marker
+                        self._finalize_snapshot(snap)
                 # worker_registered/worker_removed: workers are transient; they
                 # re-register via heartbeat after a dispatcher restart.  Tasks
                 # and in-flight shard assignments are preserved verbatim: live
@@ -603,11 +1075,24 @@ class Dispatcher:
                 # are invisible to check_workers (not in self._workers), so
                 # arm the orphan sweep: one heartbeat-timeout of grace, then
                 # their in-flight shards are reclaimed (lost / re-queued).
+            # crash window between the last stream_done and snapshot_finished:
+            # finish the finalization the dead dispatcher never got to
+            for snap in self._snapshots.values():
+                if snap.all_streams_done and not snap.finished:
+                    self._journal.append(
+                        "snapshot_finished", {"snapshot_id": snap.snapshot_id}, sync=True
+                    )
+                    self._finalize_snapshot(snap)
             if any(
                 st.assigned_to and not st.completed
                 for job in self._jobs.values()
                 if job.shard_mgr is not None
                 for st in job.shard_mgr._states
+            ) or any(
+                s.assigned_to and not s.done
+                for snap in self._snapshots.values()
+                if not snap.finished
+                for s in snap.streams
             ):
                 self._orphan_sweep_deadline = (
                     time.monotonic() + self._heartbeat_timeout
@@ -622,6 +1107,10 @@ class Dispatcher:
             if jp.get("shard_mgr") and job.shard_mgr is not None:
                 graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
                 job.shard_mgr = ShardManager.from_payload(graph, jp["shard_mgr"])
+        for sp in p.get("snapshots", []):
+            snap = SnapshotState.from_payload(sp)
+            self._snapshots[snap.snapshot_id] = snap
+            self._snapshots_by_path[snap.path] = snap.snapshot_id
 
     def snapshot(self) -> None:
         with self._lock:
@@ -639,12 +1128,14 @@ class Dispatcher:
                             "compression": j.compression,
                             "max_workers": j.max_workers,
                             "resume_offsets": j.resume_offsets,
+                            "autocache_decision": j.autocache_decision,
                         },
                         "finished": j.finished,
                         "shard_mgr": j.shard_mgr.to_payload() if j.shard_mgr else None,
                     }
                     for j in self._jobs.values()
                 ],
+                "snapshots": [s.to_payload() for s in self._snapshots.values()],
             }
             self._journal.snapshot(payload)
 

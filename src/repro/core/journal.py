@@ -33,7 +33,11 @@ class Journal:
             self._f = open(path, "ab")
 
     # -- append -----------------------------------------------------------
-    def append(self, event_type: str, payload: Dict[str, Any]) -> int:
+    def append(self, event_type: str, payload: Dict[str, Any], sync: bool = False) -> int:
+        """Append one event.  ``sync=True`` forces an fsync for THIS record
+        regardless of the journal-wide default — used for records whose loss
+        would desynchronize external durable state (e.g. snapshot chunk
+        commits, which acknowledge bytes already fsync'd on shared storage)."""
         with self._lock:
             self._seq += 1
             if self._f is not None:
@@ -43,7 +47,7 @@ class Journal:
                 self._f.write(struct.pack("<I", len(rec)))
                 self._f.write(rec)
                 self._f.flush()
-                if self._fsync:
+                if self._fsync or sync:
                     os.fsync(self._f.fileno())
             return self._seq
 

@@ -21,6 +21,23 @@ Data-plane methods exposed by workers:
 
 Clients discover a v1-only worker by the unknown-method error and fall back
 to ``get_element`` for that task (see ``client.DataServiceClient``).
+
+Snapshot / materialization RPCs (dispatcher-side, see ``repro.snapshot``):
+
+* ``start_snapshot``        — partition a dataset into streams and begin
+  materializing it to shared storage (get-or-start: idempotent per path).
+* ``snapshot_status``       — progress view (streams, chunks, finished).
+* ``snapshot_commit_chunk`` — a worker's chunk-commit report; the dispatcher
+  validates stream ownership + sequence, journals it (fsync'd), and acks.
+  A negative ack tells a zombie writer its stream was reassigned.
+* ``snapshot_stream_done``  — a worker finished a stream; when the last
+  stream completes the dispatcher finalizes the snapshot (DONE marker).
+
+Workers receive snapshot stream assignments alongside tasks in
+``register_worker`` / ``worker_heartbeat`` responses
+(``snapshot_streams``), and worker heartbeats additionally carry
+SlidingWindowCache counters (``cache_stats``) so the dispatcher and the
+autocache policy can observe sharing efficiency per pipeline fingerprint.
 """
 from __future__ import annotations
 
@@ -68,6 +85,10 @@ DEFAULT_FETCH_WINDOW = 2
 # seconds for the first element instead of bouncing PENDING back to the
 # client (kills the client-side retry/backoff latency on a hot path).
 DEFAULT_POLL_TIMEOUT = 0.05
+
+# Default size bound for one snapshot chunk file (compressed payload grows
+# until the ENCODED pending elements exceed this, then the chunk commits).
+DEFAULT_CHUNK_BYTES = 1 << 20
 
 
 @dataclass

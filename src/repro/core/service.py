@@ -39,6 +39,8 @@ class LocalOrchestrator:
         worker_buffer_size: int = 8,
         cache_capacity: int = 16,
         overpartition: int = 4,
+        snapshot_root: Optional[str] = None,
+        autocache_config: Optional[Any] = None,
     ):
         self._transport = transport
         if journal and journal_path is None:
@@ -46,6 +48,8 @@ class LocalOrchestrator:
                 tempfile.mkdtemp(prefix="repro-dispatcher-"), "journal.bin"
             )
         self._journal_path = journal_path
+        self._snapshot_root = snapshot_root
+        self._autocache_config = autocache_config
         self._hb_timeout = heartbeat_timeout
         self._worker_hb = worker_heartbeat_interval
         self._gc_interval = gc_interval
@@ -76,6 +80,8 @@ class LocalOrchestrator:
             journal_path=self._journal_path,
             heartbeat_timeout=self._hb_timeout,
             overpartition=self._overpartition,
+            snapshot_root=self._snapshot_root,
+            autocache_config=self._autocache_config,
         )
         if self._transport == "tcp":
             self._tcp_dispatcher = TCPServer(self.dispatcher).start()
@@ -157,6 +163,8 @@ class LocalOrchestrator:
             journal_path=self._journal_path,
             heartbeat_timeout=self._hb_timeout,
             overpartition=self._overpartition,
+            snapshot_root=self._snapshot_root,
+            autocache_config=self._autocache_config,
         )
         if self._transport == "tcp":
             # rebind on a fresh port is not transparent; for TCP tests use

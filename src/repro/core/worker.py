@@ -31,6 +31,8 @@ from ..data.elements import (
 )
 from ..data.graph import Graph
 from ..data.iterators import ExecContext, build_iterator
+from ..snapshot.format import ChunkRecord
+from ..snapshot.writer import StreamReassigned, StreamWriter
 from .cache import SlidingWindowCache
 from .protocol import (
     DATA_PLANE_VERSION,
@@ -358,6 +360,116 @@ class _CoordinatedRunner(_TaskRunner):
             return len(self._rounds) / self.MAX_BUFFERED_ROUNDS
 
 
+class _SnapshotStreamRunner:
+    """Materializes ONE snapshot stream on this worker (repro.snapshot).
+
+    Runs the stream's pipeline shards through the normal execution engine
+    and appends the output into a ``StreamWriter`` (size-bounded chunks,
+    atomic commit, manifest update, dispatcher ack).  ``resume_offset``
+    skips the element prefix a previous owner already committed — streams
+    are seeded per STREAM (not per worker), so a replacement re-produces
+    the identical element sequence and commit races converge bytewise.
+    """
+
+    def __init__(self, worker: "Worker", spec: Dict[str, Any]):
+        self._worker = worker
+        self._spec = spec
+        self.status = "running"  # running | done | stopped | failed
+        self.error: Optional[str] = None
+        self._stopped = threading.Event()
+        self.writer = StreamWriter(
+            spec["path"],
+            spec["stream_id"],
+            codec=spec.get("codec"),
+            chunk_bytes=spec["chunk_bytes"],
+            committed=[ChunkRecord(*c) for c in spec.get("committed", [])],
+            on_commit=self._report_commit,
+        )
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stopped.set()
+
+    def _should_stop(self) -> bool:
+        return self._worker._stopping.is_set() or self._stopped.is_set()
+
+    def _report_commit(self, rec: ChunkRecord) -> bool:
+        sp = self._spec
+        kw = dict(
+            snapshot_id=sp["snapshot_id"],
+            stream_id=sp["stream_id"],
+            worker_id=self._worker.worker_id,
+            seq=rec.seq,
+            count=rec.count,
+            nbytes=rec.nbytes,
+        )
+        if self._worker._pending_control:
+            # earlier acks are still queued (dispatcher was down): keep this
+            # one BEHIND them so the dispatcher sees seqs in order
+            self._worker._pending_control.append(("snapshot_commit_chunk", kw))
+            return True
+        try:
+            resp = self._worker._dispatcher.call("snapshot_commit_chunk", **kw)
+        except TransportError:
+            # dispatcher down: the chunk is already durable on shared
+            # storage; queue the ack for redelivery (heartbeat loop drains
+            # in order once the dispatcher is back) and keep writing —
+            # the restored dispatcher validates seqs consecutively.
+            self._worker._pending_control.append(("snapshot_commit_chunk", kw))
+            return True
+        if resp.get("ok"):
+            return True
+        if resp.get("retry"):
+            # seq gap dispatcher-side: queued acks haven't drained yet
+            self._worker._pending_control.append(("snapshot_commit_chunk", kw))
+            return True
+        return False  # reassigned: a replacement owns this stream now
+
+    def _run(self) -> None:
+        sp = self._spec
+        graph = Graph.from_bytes(sp["graph_bytes"])
+        skip = int(sp.get("resume_offset", 0))
+        produced = 0
+        try:
+            for shard in sp["shards"]:
+                g = graph.bind_shard(shard).bind_seed(sp["seed"])
+                for elem in build_iterator(g, ExecContext()):
+                    if self._should_stop():
+                        self.writer.abort()
+                        self.status = "stopped"
+                        return
+                    produced += 1
+                    if produced <= skip:
+                        continue  # committed by a previous owner
+                    t0 = time.perf_counter()
+                    self.writer.append(elem)
+                    self._worker.metrics.busy_time += time.perf_counter() - t0
+            self.writer.finish()
+            self.status = "done"
+            self._report_done()
+        except StreamReassigned:
+            self.status = "stopped"  # a replacement owns the stream now
+        except Exception as e:  # surface in worker stats, don't kill the worker
+            self.status = "failed"
+            self.error = repr(e)
+
+    def _report_done(self) -> None:
+        kw = dict(
+            snapshot_id=self._spec["snapshot_id"],
+            stream_id=self._spec["stream_id"],
+            worker_id=self._worker.worker_id,
+        )
+        if self._worker._pending_control:
+            # keep the done-report ordered behind any queued chunk acks
+            self._worker._pending_control.append(("snapshot_stream_done", kw))
+            return
+        try:
+            self._worker._dispatcher.call("snapshot_stream_done", **kw)
+        except TransportError:
+            self._worker._pending_control.append(("snapshot_stream_done", kw))
+
+
 class Worker:
     def __init__(
         self,
@@ -380,6 +492,8 @@ class Worker:
         self._tasks: Dict[str, _TaskRunner] = {}
         self._task_specs: Dict[str, Dict[str, Any]] = {}
         self._caches: Dict[str, SlidingWindowCache] = {}
+        # (snapshot_id, stream_id) -> runner materializing that stream
+        self._snapshot_writers: Dict[Any, _SnapshotStreamRunner] = {}
         self._pending_control: deque = deque()  # control calls to redeliver
         self._lock = threading.RLock()
         self._stopping = threading.Event()
@@ -410,6 +524,8 @@ class Worker:
         )
         for spec in resp.get("tasks", []):
             self._add_task(spec)
+        for spec in resp.get("snapshot_streams", []):
+            self._add_snapshot_stream(spec)
         self._hb_thread = threading.Thread(target=self._heartbeat_loop, daemon=True)
         self._hb_thread.start()
         return self
@@ -419,6 +535,8 @@ class Worker:
         with self._lock:
             for r in self._tasks.values():
                 r.stop()
+            for sr in self._snapshot_writers.values():
+                sr.stop()
         if self._tcp is not None:
             self._tcp.stop()
         elif self.address:
@@ -453,6 +571,14 @@ class Worker:
             self._tasks[tid] = runner
             self._task_specs[tid] = spec
 
+    def _add_snapshot_stream(self, spec: Dict[str, Any]) -> None:
+        key = (spec["snapshot_id"], spec["stream_id"])
+        with self._lock:
+            existing = self._snapshot_writers.get(key)
+            if existing is not None and existing.status in ("running", "done"):
+                return  # re-delivery (e.g. after a dispatcher restart)
+            self._snapshot_writers[key] = _SnapshotStreamRunner(self, spec)
+
     def _get_or_create_cache(self, spec: Dict[str, Any]) -> SlidingWindowCache:
         key = spec["cache_key"] or spec["dataset_id"]
         with self._lock:
@@ -471,12 +597,38 @@ class Worker:
             try:
                 while self._pending_control:
                     method, kw = self._pending_control[0]
-                    self._dispatcher.call(method, **kw)  # raises if still down
+                    resp = self._dispatcher.call(method, **kw)  # raises if still down
                     self._pending_control.popleft()
+                    if resp and resp.get("reassigned") and "snapshot_id" in kw:
+                        # a queued snapshot ack answered "reassigned": a
+                        # replacement owns the stream — stop our writer
+                        # (the direct-call path learns this in _report_commit;
+                        # the queued path must honor it too)
+                        with self._lock:
+                            r = self._snapshot_writers.get(
+                                (kw["snapshot_id"], kw["stream_id"])
+                            )
+                        if r is not None:
+                            r.stop()
                 with self._lock:
                     occ = [r.buffer_occupancy() for r in self._tasks.values()]
                     completed = [
                         tid for tid, r in self._tasks.items() if r.status == "done"
+                    ]
+                    # sharing-efficiency counters ride along with every
+                    # heartbeat so the dispatcher (and the autocache policy)
+                    # can observe per-fingerprint cache behavior (§3.5)
+                    cache_stats = {
+                        k: dict(vars(c.stats), num_jobs=c.num_jobs)
+                        for k, c in self._caches.items()
+                    }
+                    # streams whose writer died on an exception: hand them
+                    # back so the dispatcher can reassign (possibly to us —
+                    # a fresh runner retries from the committed offset)
+                    failed_streams = [
+                        list(key)
+                        for key, r in self._snapshot_writers.items()
+                        if r.status == "failed"
                     ]
                 resp = self._dispatcher.call(
                     "worker_heartbeat",
@@ -484,7 +636,17 @@ class Worker:
                     buffer_occupancy=sum(occ) / len(occ) if occ else 0.0,
                     cpu_busy=self.metrics.busy_time,
                     completed_tasks=completed,
+                    cache_stats=cache_stats,
+                    failed_streams=failed_streams,
                 )
+                if failed_streams:
+                    # the dispatcher has released them; drop the dead
+                    # runners so a re-assignment starts a fresh one
+                    with self._lock:
+                        for key in failed_streams:
+                            r = self._snapshot_writers.get(tuple(key))
+                            if r is not None and r.status == "failed":
+                                del self._snapshot_writers[tuple(key)]
                 if resp.get("reregister"):
                     resp = self._dispatcher.call(
                         "register_worker",
@@ -494,9 +656,13 @@ class Worker:
                     )
                     for spec in resp.get("tasks", []):
                         self._add_task(spec)
+                    for spec in resp.get("snapshot_streams", []):
+                        self._add_snapshot_stream(spec)
                     continue
                 for spec in resp.get("new_tasks", []):
                     self._add_task(spec)
+                for spec in resp.get("snapshot_streams", []):
+                    self._add_snapshot_stream(spec)
                 valid = resp.get("valid_tasks")
                 if valid is not None:
                     self._prune_tasks(set(valid))
@@ -619,5 +785,15 @@ class Worker:
                 },
                 "caches": {
                     k: vars(c.stats).copy() for k, c in self._caches.items()
+                },
+                "snapshot_streams": {
+                    f"{sid}/{stream_id}": {
+                        "status": r.status,
+                        "elements": r.writer.stats.elements,
+                        "chunks": r.writer.stats.chunks,
+                        "bytes": r.writer.stats.bytes_written,
+                        "error": r.error,
+                    }
+                    for (sid, stream_id), r in self._snapshot_writers.items()
                 },
             }

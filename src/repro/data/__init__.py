@@ -15,7 +15,7 @@ from .elements import (
 from .iterators import ExecContext, build_iterator
 from .optimizer import optimize_graph
 from .autotune import Autotuner
-from .sources import RecordWriter, read_records, write_record_shards
+from .sources import RecordWriter, from_snapshot, read_records, write_record_shards
 
 __all__ = [
     "AUTOTUNE",
@@ -32,6 +32,7 @@ __all__ = [
     "element_nbytes",
     "encode_element",
     "encode_elements",
+    "from_snapshot",
     "optimize_graph",
     "padded_stack_elements",
     "read_records",

@@ -39,6 +39,19 @@ class Dataset:
             Graph([Node("generator", {"fn": FnRef.from_callable(fn, **kwargs)})])
         )
 
+    @staticmethod
+    def from_snapshot(path: str, tail: bool = False, timeout: Optional[float] = None) -> "Dataset":
+        """Read a materialized snapshot (repro.snapshot) as a dataset source.
+
+        Elements are the snapshotted pipeline's OUTPUT batches — consuming
+        them re-runs none of the original preprocessing.  ``tail=True``
+        follows a snapshot still being written (read committed chunks, then
+        tail the live stream until finalization).
+        """
+        from .sources import from_snapshot as _from_snapshot
+
+        return _from_snapshot(path, tail=tail, timeout=timeout)
+
     # -- transforms ----------------------------------------------------------
     def _with(self, op: str, **params: Any) -> "Dataset":
         return Dataset(self.graph.appended(Node(op, params)))
@@ -154,6 +167,7 @@ class Dataset:
         target_workers: str = "any",
         max_workers: int = 0,
         resume_offsets: bool = False,
+        autocache: bool = False,
         buffer_size: int = 8,
         fetch_window: Optional[int] = None,
         max_batch: Optional[int] = None,
@@ -168,7 +182,10 @@ class Dataset:
         ``None`` = the protocol defaults); ``prefer_batched=False`` forces
         the v1 one-element-per-RPC path (baseline measurements, mixed-
         version drills); ``compression`` names a codec (or ``"auto"``)
-        negotiated with the dispatcher.
+        negotiated with the dispatcher; ``autocache=True`` lets the
+        dispatcher's snapshot policy (repro.snapshot) decide per job
+        whether to compute, write-through a snapshot, or read a finished
+        one (requires a deployment configured with ``snapshot_root``).
         """
         from ..core.client import DistributedDataset  # lazy: avoid cycle
         from ..core.protocol import DEFAULT_FETCH_WINDOW, DEFAULT_MAX_BATCH
@@ -190,6 +207,7 @@ class Dataset:
             target_workers=target_workers,
             max_workers=max_workers,
             resume_offsets=resume_offsets,
+            autocache=autocache,
             buffer_size=buffer_size,
             fetch_window=fetch_window,
             max_batch=max_batch,

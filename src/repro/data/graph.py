@@ -16,7 +16,7 @@ from typing import Any, Dict, List, Optional
 
 AUTOTUNE = -1  # sentinel for "let the runtime tune this parameter"
 
-SOURCE_OPS = ("range", "files", "generator", "from_list")
+SOURCE_OPS = ("range", "files", "generator", "from_list", "snapshot")
 # Ops whose per-element cost may warrant parallelism / autotuning.
 PARALLELIZABLE_OPS = ("map",)
 

@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 import numpy as np
 
 from .elements import Element, padded_stack_elements, stack_elements
-from .graph import AUTOTUNE, Graph, Node
+from .graph import AUTOTUNE, SOURCE_OPS, Graph, Node
 
 _END = object()
 
@@ -331,7 +331,7 @@ def _build_from(graph: Graph, upto: int, ctx: ExecContext) -> Iterator[Element]:
         op, p = node.op, node.params
         stats = ctx.stat(idx, node.describe())
 
-        if op in ("range", "files", "generator", "from_list"):
+        if op in SOURCE_OPS:
             it = iterate_source(p, op)
         elif op == "map":
             fn = p["fn"].resolve()

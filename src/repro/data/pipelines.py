@@ -203,3 +203,21 @@ def nlp_pipeline(
         )
         ds = ds.flat_map(identity_window)
     return ds
+
+
+def materialized(ds: Dataset, snapshot_path: str, tail: bool = False) -> Dataset:
+    """Swap a pipeline for its materialized snapshot when one is available.
+
+    The manual (policy-free) entry point to snapshot reuse: if a finished
+    snapshot exists at ``snapshot_path`` — or any snapshot exists and
+    ``tail=True`` — return a dataset reading it (zero recomputation);
+    otherwise return ``ds`` unchanged so the caller computes as usual.
+    Pair with ``repro.core.materialize`` to write the snapshot; use
+    ``autocache=True`` on ``Dataset.distribute`` for the cost-model-driven
+    version of this decision.
+    """
+    from ..snapshot.reader import snapshot_exists, snapshot_finished
+
+    if snapshot_finished(snapshot_path) or (tail and snapshot_exists(snapshot_path)):
+        return Dataset.from_snapshot(snapshot_path, tail=tail)
+    return ds

@@ -122,6 +122,25 @@ def iterate_source(params: Dict[str, Any], op: str) -> Iterator[Element]:
             it = fn()
         yield from it
         return
+    if op == "snapshot":
+        # materialized preprocessed data (repro.snapshot): elements here are
+        # the PIPELINE'S OUTPUT (typically batches) — no recomputation.
+        from ..snapshot import reader as snap_reader  # lazy: optional layer
+
+        if shard is not None:
+            if shard["kind"] == "snapshot_chunk":
+                from ..snapshot.format import read_chunk
+
+                yield from read_chunk(shard["path"])
+                return
+            raise ValueError(f"snapshot source cannot apply shard kind {shard['kind']}")
+        yield from snap_reader.iterate_snapshot(
+            params["path"],
+            tail=bool(params.get("tail", False)),
+            poll_interval=float(params.get("poll", 0.05)),
+            timeout=params.get("timeout"),
+        )
+        return
     raise ValueError(f"unknown source op {op}")
 
 
@@ -150,4 +169,33 @@ def list_shards(params: Dict[str, Any], op: str, num_shards_hint: int = 0) -> Li
             return list(fn_params)
         k = max(1, num_shards_hint or 1)
         return [{"kind": "mod", "num": k, "index": i} for i in range(k)]
+    if op == "snapshot":
+        # committed chunks are the shard granularity — the materialized
+        # analogue of file shards.  For a finished snapshot this is the
+        # complete element set; for an in-progress one it is a point-in-time
+        # cut (use tail mode / a non-sharded read to follow a live write).
+        from ..snapshot.reader import list_snapshot_shards
+
+        return list_snapshot_shards(params["path"])
     raise ValueError(f"unknown source op {op}")
+
+
+# ---------------------------------------------------------------------------
+# Snapshot source factory (repro.snapshot's read path as a Dataset)
+# ---------------------------------------------------------------------------
+def from_snapshot(path: str, tail: bool = False, timeout: Optional[float] = None):
+    """A Dataset over a materialized snapshot's committed batches.
+
+    ``tail=True`` lets a job consume a snapshot MID-WRITE: committed chunks
+    are read immediately and the live stream is followed until the
+    committer finalizes the snapshot.  Elements are the original pipeline's
+    OUTPUT (typically batches): no preprocessing re-runs.
+    """
+    from .dataset import Dataset  # lazy: avoid cycle
+
+    params: Dict[str, Any] = {"path": path, "tail": bool(tail)}
+    if timeout is not None:
+        params["timeout"] = float(timeout)
+    from .graph import Graph, Node
+
+    return Dataset(Graph([Node("snapshot", params)]))

@@ -1,0 +1,60 @@
+"""repro.snapshot — distributed snapshot & materialization.
+
+Persists preprocessed batches to chunked, codec-compressed shard files on
+shared storage and serves them back as a first-class dataset source, so
+later jobs and restarted jobs skip redundant CPU work entirely (the
+production tf.data service's materialization mode; cf. Cachew and
+tf.data's `snapshot` transformation).
+
+Layers:
+  format   — on-disk chunk/manifest/metadata formats (atomic commits)
+  writer   — worker-side size-bounded chunk writer with resume support
+  reader   — committed-chunk iteration, tail-the-live-write, shard listing
+  manager  — dispatcher-side stream partitioning/assignment/commit state
+  policy   — autocache: compute vs write-through vs read, via core.cost
+"""
+from .format import (
+    ChunkRecord,
+    StreamManifest,
+    read_chunk,
+    read_manifest,
+    read_metadata,
+    write_chunk,
+    write_manifest,
+    write_metadata,
+)
+from .manager import SnapshotState, StreamState, partition_streams
+from .policy import AutocacheConfig, AutocacheDecision, AutocachePolicy, Decision
+from .reader import (
+    iterate_snapshot,
+    list_snapshot_shards,
+    snapshot_exists,
+    snapshot_finished,
+    snapshot_status,
+)
+from .writer import StreamReassigned, StreamWriter
+
+__all__ = [
+    "AutocacheConfig",
+    "AutocacheDecision",
+    "AutocachePolicy",
+    "ChunkRecord",
+    "Decision",
+    "SnapshotState",
+    "StreamManifest",
+    "StreamReassigned",
+    "StreamState",
+    "StreamWriter",
+    "iterate_snapshot",
+    "list_snapshot_shards",
+    "partition_streams",
+    "read_chunk",
+    "read_manifest",
+    "read_metadata",
+    "snapshot_exists",
+    "snapshot_finished",
+    "snapshot_status",
+    "write_chunk",
+    "write_manifest",
+    "write_metadata",
+]

@@ -1,0 +1,293 @@
+"""On-disk layout of a materialized snapshot (distributed-FS friendly).
+
+A snapshot persists the OUTPUT of a preprocessing pipeline — the batches a
+worker would have served over the data plane — so later jobs and restarted
+jobs skip the CPU work entirely (the production tf.data service's
+materialization mode; cf. Cachew and the `snapshot` transformation of
+tf.data).  Everything is plain files under one directory so any process
+that can reach the shared filesystem can read it, with no dispatcher in
+the loop:
+
+    <snapshot_dir>/
+      SNAPSHOT.json                    # immutable metadata, written at start
+      DONE.json                        # committer's finalization marker
+      streams/
+        stream_00000/
+          MANIFEST.json                # committed-chunk index (atomic rewrite)
+          chunk_0000000000_000128.chk  # seq 0, 128 elements
+          chunk_0000000001_000130.chk
+          ...
+
+Chunk files carry a magic header followed by ONE codec-compressed frame of
+``data.elements.encode_elements`` — the exact framing + codec registry the
+live data plane uses, so snapshot bytes and wire bytes share one code path.
+Chunks become visible only on atomic commit: the writer stages to a
+``.tmp-<nonce>`` sibling, fsyncs, renames, then rewrites the manifest.
+Readers trust the MANIFEST (never a directory glob), so a half-written or
+orphaned chunk file can never be observed.
+
+Crash-safety contract: chunk content is a *deterministic* function of
+(stream shards, stream seed, chunk_bytes) — pipelines re-seed stochastic
+ops per stream, not per worker — so a replacement writer resuming a dead
+worker's stream re-produces byte-identical chunks for any suffix the
+dispatcher had not acknowledged.  Every commit race (stale tmp files,
+re-written chunks, manifest rewrites racing a zombie writer) therefore
+converges to identical bytes; manifests are merged by chunk seq on rewrite.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..data.elements import Element, decode_elements, encode_elements
+
+# NOTE: repro.core imports this package from its own __init__ chain
+# (dispatcher/worker), so core imports here must stay function-local to
+# keep repro.snapshot importable from either direction.
+
+SNAPSHOT_FORMAT_VERSION = 1
+
+CHUNK_MAGIC = b"RSNP1\x00"
+METADATA_FILE = "SNAPSHOT.json"
+DONE_FILE = "DONE.json"
+MANIFEST_FILE = "MANIFEST.json"
+STREAMS_DIR = "streams"
+
+
+@dataclass(frozen=True)
+class ChunkRecord:
+    """One committed chunk of a stream."""
+
+    seq: int
+    count: int  # elements in the chunk
+    nbytes: int  # compressed payload bytes (for storage accounting)
+
+    @property
+    def filename(self) -> str:
+        return f"chunk_{self.seq:010d}_{self.count:06d}.chk"
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"seq": self.seq, "count": self.count, "nbytes": self.nbytes}
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "ChunkRecord":
+        return ChunkRecord(int(d["seq"]), int(d["count"]), int(d.get("nbytes", 0)))
+
+
+@dataclass
+class StreamManifest:
+    """Committed-chunk index for one stream. Atomically rewritten on commit."""
+
+    stream_id: int
+    chunks: List[ChunkRecord] = field(default_factory=list)
+    done: bool = False
+
+    @property
+    def num_elements(self) -> int:
+        return sum(c.count for c in self.chunks)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "stream_id": self.stream_id,
+            "done": self.done,
+            "chunks": [c.to_json() for c in sorted(self.chunks, key=lambda c: c.seq)],
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "StreamManifest":
+        return StreamManifest(
+            stream_id=int(d["stream_id"]),
+            chunks=[ChunkRecord.from_json(c) for c in d.get("chunks", [])],
+            done=bool(d.get("done", False)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Path helpers
+# ---------------------------------------------------------------------------
+def stream_dir(root: str, stream_id: int) -> str:
+    return os.path.join(root, STREAMS_DIR, f"stream_{stream_id:05d}")
+
+def chunk_path(root: str, stream_id: int, rec: ChunkRecord) -> str:
+    return os.path.join(stream_dir(root, stream_id), rec.filename)
+
+def metadata_path(root: str) -> str:
+    return os.path.join(root, METADATA_FILE)
+
+def done_path(root: str) -> str:
+    return os.path.join(root, DONE_FILE)
+
+def manifest_path(root: str, stream_id: int) -> str:
+    return os.path.join(stream_dir(root, stream_id), MANIFEST_FILE)
+
+
+# ---------------------------------------------------------------------------
+# Atomic small-file writes (metadata / manifests / DONE marker)
+# ---------------------------------------------------------------------------
+def _write_json_atomic(path: str, payload: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = f"{path}.tmp-{uuid.uuid4().hex[:8]}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _read_json(path: str) -> Optional[Dict[str, Any]]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Snapshot-level metadata
+# ---------------------------------------------------------------------------
+def write_metadata(
+    root: str,
+    snapshot_id: str,
+    fingerprint: str,
+    codec: Optional[str],
+    chunk_bytes: int,
+    num_streams: int,
+    seed_base: int,
+) -> None:
+    _write_json_atomic(
+        metadata_path(root),
+        {
+            "version": SNAPSHOT_FORMAT_VERSION,
+            "snapshot_id": snapshot_id,
+            "fingerprint": fingerprint,
+            "codec": codec,
+            "chunk_bytes": chunk_bytes,
+            "num_streams": num_streams,
+            "seed_base": seed_base,
+            "created_unix": time.time(),
+        },
+    )
+
+
+def read_metadata(root: str) -> Optional[Dict[str, Any]]:
+    return _read_json(metadata_path(root))
+
+
+def write_done(root: str, summary: Dict[str, Any]) -> None:
+    _write_json_atomic(done_path(root), dict(summary, finished=True))
+
+
+def read_done(root: str) -> Optional[Dict[str, Any]]:
+    return _read_json(done_path(root))
+
+
+# ---------------------------------------------------------------------------
+# Manifests
+# ---------------------------------------------------------------------------
+def read_manifest(root: str, stream_id: int) -> StreamManifest:
+    d = _read_json(manifest_path(root, stream_id))
+    if d is None:
+        return StreamManifest(stream_id=stream_id)
+    return StreamManifest.from_json(d)
+
+
+def write_manifest(root: str, manifest: StreamManifest) -> None:
+    """Atomically rewrite a stream manifest, MERGING with the on-disk copy.
+
+    The merge (union by chunk seq, done is sticky) makes concurrent rewrites
+    by a zombie writer and its replacement commute: chunk content is
+    deterministic, so entries for the same seq are interchangeable and the
+    union never loses a committed chunk.
+    """
+    existing = read_manifest(root, manifest.stream_id)
+    by_seq = {c.seq: c for c in existing.chunks}
+    by_seq.update({c.seq: c for c in manifest.chunks})
+    merged = StreamManifest(
+        stream_id=manifest.stream_id,
+        chunks=[by_seq[s] for s in sorted(by_seq)],
+        done=manifest.done or existing.done,
+    )
+    _write_json_atomic(manifest_path(root, manifest.stream_id), merged.to_json())
+
+
+# ---------------------------------------------------------------------------
+# Chunk files
+# ---------------------------------------------------------------------------
+def frame_encoded(encoded: List[bytes]) -> bytes:
+    """Assemble an ``encode_elements``-identical frame from pre-encoded
+    elements (the writer sizes each element at append time; re-encoding the
+    whole buffer at commit would double the serialization CPU)."""
+    parts = [struct.pack("<I", len(encoded))]
+    for b in encoded:
+        parts.append(struct.pack("<I", len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+def write_chunk(
+    root: str,
+    stream_id: int,
+    seq: int,
+    elements: List[Element],
+    codec: Optional[str],
+    encoded: Optional[List[bytes]] = None,
+) -> ChunkRecord:
+    """Stage, fsync, and atomically commit one chunk file.
+
+    Returns the ChunkRecord the caller must add to the manifest — the chunk
+    is invisible to readers until the manifest names it.  ``encoded``
+    supplies the elements pre-serialized (same order as ``elements``) so
+    callers that already encoded them don't pay twice.
+    """
+    from ..core.codecs import compress  # deferred: avoid core<->snapshot cycle
+
+    count = len(encoded if encoded is not None else elements)
+    frame = frame_encoded(encoded) if encoded is not None else encode_elements(elements)
+    payload = compress(frame, codec)
+    rec = ChunkRecord(seq=seq, count=count, nbytes=len(payload))
+    final = chunk_path(root, stream_id, rec)
+    os.makedirs(os.path.dirname(final), exist_ok=True)
+    tmp = f"{final}.tmp-{uuid.uuid4().hex[:8]}"
+    with open(tmp, "wb") as f:
+        f.write(CHUNK_MAGIC)
+        f.write(struct.pack("<I", len(payload)))
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    return rec
+
+
+def read_chunk(path: str) -> List[Element]:
+    from ..core.codecs import decompress  # deferred: avoid core<->snapshot cycle
+
+    with open(path, "rb") as f:
+        magic = f.read(len(CHUNK_MAGIC))
+        if magic != CHUNK_MAGIC:
+            raise ValueError(f"{path}: not a snapshot chunk file")
+        (n,) = struct.unpack("<I", f.read(4))
+        payload = f.read(n)
+        if len(payload) < n:
+            raise ValueError(f"{path}: truncated chunk payload")
+    return decode_elements(decompress(payload))
+
+
+def clean_stale_tmp(root: str, stream_id: int) -> int:
+    """Remove staged-but-never-committed files left by a dead writer."""
+    d = stream_dir(root, stream_id)
+    removed = 0
+    if not os.path.isdir(d):
+        return 0
+    for name in os.listdir(d):
+        if ".tmp-" in name:
+            try:
+                os.remove(os.path.join(d, name))
+                removed += 1
+            except OSError:
+                pass
+    return removed

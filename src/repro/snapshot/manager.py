@@ -1,0 +1,197 @@
+"""Dispatcher-side snapshot bookkeeping (the committer / metadata layer).
+
+The dispatcher partitions a snapshot into ``num_streams`` streams (each a
+round-robin slice of the source's shards), assigns streams to workers, and
+acknowledges chunk commits.  Every state change is journaled through the
+dispatcher's write-ahead journal BEFORE it is applied, so a restarted
+dispatcher recovers exactly which chunks were acknowledged, which streams
+are done, and which worker owns each stream — the snapshot-specific
+analogue of the job/shard recovery in §3.4.
+
+This module is deliberately dispatcher-agnostic: pure state + transition
+helpers, with the Dispatcher wiring them to RPCs, the journal, and the
+heartbeat/failure machinery.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..data.graph import Graph
+from ..data.sources import list_shards
+from .format import ChunkRecord
+
+
+@dataclass
+class StreamState:
+    stream_id: int
+    shards: List[Dict[str, Any]]
+    assigned_to: Optional[str] = None  # worker_id
+    committed: List[Tuple[int, int, int]] = field(default_factory=list)  # (seq, count, nbytes)
+    done: bool = False
+
+    @property
+    def elements_committed(self) -> int:
+        return sum(count for _, count, _ in self.committed)
+
+    @property
+    def next_seq(self) -> int:
+        return self.committed[-1][0] + 1 if self.committed else 0
+
+
+@dataclass
+class SnapshotState:
+    snapshot_id: str
+    path: str
+    dataset_id: str
+    fingerprint: str
+    codec: Optional[str]
+    chunk_bytes: int
+    seed_base: int
+    streams: List[StreamState] = field(default_factory=list)
+    finished: bool = False
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def all_streams_done(self) -> bool:
+        return bool(self.streams) and all(s.done for s in self.streams)
+
+    def undone_streams(self) -> List[StreamState]:
+        return [s for s in self.streams if not s.done]
+
+    def streams_for_worker(self, worker_id: str) -> List[StreamState]:
+        return [
+            s for s in self.streams if s.assigned_to == worker_id and not s.done
+        ]
+
+    def view(self) -> Dict[str, Any]:
+        return {
+            "snapshot_id": self.snapshot_id,
+            "path": self.path,
+            "dataset_id": self.dataset_id,
+            "fingerprint": self.fingerprint,
+            "codec": self.codec,
+            "finished": self.finished,
+            "num_streams": len(self.streams),
+            "streams": [
+                {
+                    "stream_id": s.stream_id,
+                    "assigned_to": s.assigned_to,
+                    "done": s.done,
+                    "chunks": len(s.committed),
+                    "elements": s.elements_committed,
+                }
+                for s in self.streams
+            ],
+        }
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "snapshot_id": self.snapshot_id,
+            "fingerprint": self.fingerprint,
+            "num_streams": len(self.streams),
+            "chunks": sum(len(s.committed) for s in self.streams),
+            "elements": sum(s.elements_committed for s in self.streams),
+        }
+
+    # -- wire payload for a worker's stream assignment ----------------------
+    def stream_spec(self, stream: StreamState, graph_bytes: bytes) -> Dict[str, Any]:
+        """Everything a worker needs to (re)start writing one stream.
+
+        ``resume_offset``/``next_seq``/``committed`` come from the journal:
+        a replacement worker skips the acknowledged element prefix and
+        continues the chunk sequence without duplicating committed chunks.
+        """
+        return {
+            "snapshot_id": self.snapshot_id,
+            "path": self.path,
+            "stream_id": stream.stream_id,
+            "graph_bytes": graph_bytes,
+            "shards": [dict(sh) for sh in stream.shards],
+            "codec": self.codec,
+            "chunk_bytes": self.chunk_bytes,
+            "seed": self.seed_base + stream.stream_id,
+            "resume_offset": stream.elements_committed,
+            "next_seq": stream.next_seq,
+            "committed": list(stream.committed),
+        }
+
+    # -- journal (de)hydration ----------------------------------------------
+    def to_payload(self) -> Dict[str, Any]:
+        return {
+            "snapshot_id": self.snapshot_id,
+            "path": self.path,
+            "dataset_id": self.dataset_id,
+            "fingerprint": self.fingerprint,
+            "codec": self.codec,
+            "chunk_bytes": self.chunk_bytes,
+            "seed_base": self.seed_base,
+            "finished": self.finished,
+            "streams": [
+                {
+                    "stream_id": s.stream_id,
+                    "shards": s.shards,
+                    "assigned_to": s.assigned_to,
+                    "committed": list(s.committed),
+                    "done": s.done,
+                }
+                for s in self.streams
+            ],
+        }
+
+    @staticmethod
+    def from_payload(p: Dict[str, Any]) -> "SnapshotState":
+        return SnapshotState(
+            snapshot_id=p["snapshot_id"],
+            path=p["path"],
+            dataset_id=p["dataset_id"],
+            fingerprint=p["fingerprint"],
+            codec=p.get("codec"),
+            chunk_bytes=p["chunk_bytes"],
+            seed_base=p.get("seed_base", 0),
+            finished=p.get("finished", False),
+            streams=[
+                StreamState(
+                    stream_id=s["stream_id"],
+                    shards=s["shards"],
+                    assigned_to=s.get("assigned_to"),
+                    committed=[tuple(c) for c in s.get("committed", [])],
+                    done=s.get("done", False),
+                )
+                for s in p.get("streams", [])
+            ],
+        )
+
+
+def partition_streams(
+    graph: Graph, num_streams: int, overpartition: int = 4
+) -> List[List[Dict[str, Any]]]:
+    """Slice the source's shards round-robin into ``num_streams`` streams.
+
+    Over-partitioning the source (more shards than streams) keeps stream
+    sizes balanced for uneven sources, mirroring the dispatcher's shard
+    hand-out hint (§3.3).  Streams may come out empty for tiny sources —
+    the writer then just commits an empty stream.
+    """
+    num_streams = max(1, num_streams)
+    src = graph.source
+    shards = list_shards(
+        src.params, src.op, num_shards_hint=num_streams * max(1, overpartition)
+    )
+    return [shards[i::num_streams] for i in range(num_streams)]
+
+
+def apply_chunk_committed(stream: StreamState, seq: int, count: int, nbytes: int) -> bool:
+    """Idempotently record an acknowledged chunk. Returns False on a gap
+    (a commit for a seq later than the next expected — caller bug or a
+    writer that desynced from the journal; reject so it resets)."""
+    if seq < stream.next_seq:
+        return True  # duplicate ack (redelivered report) — already recorded
+    if seq != stream.next_seq:
+        return False
+    stream.committed.append((seq, count, nbytes))
+    return True
+
+
+def chunk_records(stream: StreamState) -> List[ChunkRecord]:
+    return [ChunkRecord(seq, count, nbytes) for seq, count, nbytes in stream.committed]

@@ -1,0 +1,169 @@
+"""Autocache: compute / write-through / read decisions per job.
+
+The live ``SlidingWindowCache`` only helps jobs that OVERLAP in time;
+materialization helps jobs separated in time — the compute-vs-cache trade
+Cachew automates.  The policy keys on the pipeline content fingerprint
+(the same key ephemeral sharing uses, §3.5) and decides per job:
+
+* ``READ``          — a finished snapshot exists: consume it, skip the CPU.
+* ``WRITE_THROUGH`` — compute AND materialize, so future jobs can READ.
+* ``COMPUTE``       — just compute (snapshot in progress elsewhere, or the
+                      expected reuse doesn't pay for the write).
+
+The write-through call is an Eq.-1 (core.cost) comparison: materialize when
+the preprocessing cost future jobs would re-pay exceeds the one-time write
+overhead.  Observed sharing efficiency feeds in as a demand signal: worker
+heartbeats surface SlidingWindowCache stats, and a fingerprint whose
+batches are served far more often than produced is demonstrably hot —
+jobs are already re-reading this pipeline, so persist it.
+"""
+from __future__ import annotations
+
+import enum
+import os
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Dict, Optional
+
+from .reader import snapshot_exists, snapshot_finished
+
+if TYPE_CHECKING:  # runtime import is deferred (core<->snapshot import cycle)
+    from ..core.cost import CostRates, JobResources  # noqa: F401
+
+
+def _default_compute_resources():
+    from ..core.cost import JobResources
+
+    return JobResources(
+        duration_hours=1.0,
+        num_workers=4,
+        worker_cpu_util_cores=6.0,
+        worker_mem_util_gb=16.0,
+        num_trainers=0,
+        accelerators_per_trainer=0,
+    )
+
+
+class Decision(str, enum.Enum):
+    COMPUTE = "compute"
+    WRITE_THROUGH = "write_through"
+    READ = "read"
+
+
+@dataclass
+class AutocacheConfig:
+    # expected number of FUTURE jobs that would re-run this pipeline
+    # (restarts, hparam sweeps, eval re-runs); the paper's fleet data and
+    # 2501.10546 both put typical input-pipeline reuse well above 1.
+    expected_future_jobs: float = 2.0
+    # reading a snapshot costs roughly compute/read_speedup worker-CPU
+    # (decompress + deserialize instead of the full pipeline).
+    read_speedup: float = 4.0
+    # one-time write overhead as a fraction of one compute pass (encode +
+    # compress + fsync ride along with production).
+    write_overhead_frac: float = 0.25
+    # served/produced ratio above which a fingerprint counts as hot
+    # (multiple jobs demonstrably consuming one pipeline's output).
+    hot_share_ratio: float = 1.5
+    # an unfinished snapshot with no manifest progress for this long is
+    # considered abandoned (its deployment died and lost the journal) and
+    # gets restarted instead of pinning the policy to COMPUTE forever
+    stale_write_timeout_s: float = 3600.0
+    # assumed resource profile of one compute pass, for the Eq.-1 comparison
+    compute_resources: "JobResources" = field(default_factory=_default_compute_resources)
+
+
+@dataclass
+class AutocacheDecision:
+    decision: Decision
+    snapshot_path: str
+    reason: str
+
+    @property
+    def value(self) -> str:
+        return self.decision.value
+
+
+class AutocachePolicy:
+    def __init__(
+        self,
+        root: str,
+        config: Optional[AutocacheConfig] = None,
+        rates: Optional["CostRates"] = None,
+    ):
+        from ..core.cost import GCP_RATES
+
+        self.root = root
+        self.config = config or AutocacheConfig()
+        self.rates = rates or GCP_RATES
+
+    def path_for(self, fingerprint: str) -> str:
+        return os.path.join(self.root, f"snap-{fingerprint}")
+
+    # ------------------------------------------------------------------
+    def decide(
+        self,
+        fingerprint: str,
+        cache_stats: Optional[Dict[str, Any]] = None,
+        resources: Optional["JobResources"] = None,
+    ) -> AutocacheDecision:
+        """Pick a mode for one job keyed by its pipeline fingerprint.
+
+        ``cache_stats`` is the dispatcher's heartbeat-aggregated
+        SlidingWindowCache counters for this fingerprint
+        (produced/served/evicted/skipped), when ephemeral sharing has
+        observed the pipeline before.
+        """
+        import time
+
+        from .reader import last_progress_unix
+
+        cfg = self.config
+        path = self.path_for(fingerprint)
+        if snapshot_finished(path):
+            return AutocacheDecision(Decision.READ, path, "finished snapshot on disk")
+        if snapshot_exists(path):
+            idle = time.time() - last_progress_unix(path)
+            if idle > cfg.stale_write_timeout_s:
+                # abandoned write (owning deployment died): restart it —
+                # the dispatcher clears the stale directory on start
+                return AutocacheDecision(
+                    Decision.WRITE_THROUGH,
+                    path,
+                    f"unfinished write idle {idle:.0f}s > "
+                    f"{cfg.stale_write_timeout_s:.0f}s: restarting",
+                )
+            # someone is actively materializing it: don't double-write; the
+            # job computes (and shares ephemerally) while the write finishes
+            return AutocacheDecision(
+                Decision.COMPUTE, path, "snapshot write already in progress"
+            )
+        if cache_stats:
+            produced = float(cache_stats.get("produced", 0))
+            served = float(cache_stats.get("served", 0))
+            if produced > 0 and served / produced >= cfg.hot_share_ratio:
+                return AutocacheDecision(
+                    Decision.WRITE_THROUGH,
+                    path,
+                    f"hot pipeline: served/produced={served / produced:.2f} "
+                    f">= {cfg.hot_share_ratio}",
+                )
+        res = resources or cfg.compute_resources
+        from ..core.cost import job_cost
+
+        one_pass = job_cost(res, self.rates)
+        compute_cost = one_pass["cpu_cost"] + one_pass["mem_cost"]
+        read_cost = compute_cost / max(1.0, cfg.read_speedup)
+        saved = cfg.expected_future_jobs * (compute_cost - read_cost)
+        write_overhead = cfg.write_overhead_frac * compute_cost
+        if saved > write_overhead:
+            return AutocacheDecision(
+                Decision.WRITE_THROUGH,
+                path,
+                f"expected saving ${saved:.4f} > write overhead ${write_overhead:.4f} "
+                f"(Eq. 1, {cfg.expected_future_jobs:g} future jobs)",
+            )
+        return AutocacheDecision(
+            Decision.COMPUTE,
+            path,
+            f"expected saving ${saved:.4f} <= write overhead ${write_overhead:.4f}",
+        )

@@ -1,0 +1,177 @@
+"""Snapshot read path: committed chunks as a first-class dataset source.
+
+Readers need only the shared filesystem — no dispatcher.  Two modes:
+
+* **finished snapshot** — iterate every committed chunk; with a service job
+  on top, ``list_snapshot_shards`` exposes chunk-granularity shards so the
+  DYNAMIC policy load-balances chunks across workers exactly like source
+  files (paper §3.3), and ``resume_offsets`` element-offset recovery works
+  unchanged (offsets index into a chunk's element list).
+* **tail mode** — a job may consume a snapshot MID-WRITE: read all chunks
+  committed so far, then poll the manifests for newly committed chunks
+  until the committer's DONE marker appears.  Chunks are interleaved
+  round-robin across streams (order across streams is unspecified — the
+  paper's relaxed-visitation stance).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+from ..data.elements import Element
+from .format import (
+    ChunkRecord,
+    chunk_path,
+    read_chunk,
+    read_done,
+    read_manifest,
+    read_metadata,
+)
+
+
+def snapshot_exists(root: str) -> bool:
+    return read_metadata(root) is not None
+
+
+def last_progress_unix(root: str) -> float:
+    """Wall time of the newest metadata/manifest write under ``root``.
+
+    The staleness signal for unfinished snapshots: manifests are rewritten
+    on every chunk commit, so an idle mtime means no writer is making
+    progress (e.g. the owning deployment died and lost its journal).
+    Returns 0.0 when nothing is on disk.
+    """
+    meta = read_metadata(root)
+    if meta is None:
+        return 0.0
+    from .format import manifest_path, metadata_path
+
+    latest = 0.0
+    candidates = [metadata_path(root)]
+    for sid in range(int(meta.get("num_streams", 0))):
+        candidates.append(manifest_path(root, sid))
+    for p in candidates:
+        try:
+            latest = max(latest, os.path.getmtime(p))
+        except OSError:
+            continue
+    return latest
+
+
+def snapshot_finished(root: str) -> bool:
+    return read_done(root) is not None
+
+
+def snapshot_status(root: str) -> Dict[str, Any]:
+    """Point-in-time view assembled purely from on-disk state."""
+    meta = read_metadata(root)
+    if meta is None:
+        return {"exists": False, "finished": False, "streams": [], "elements": 0}
+    streams = []
+    total_elements = total_chunks = total_bytes = 0
+    for sid in range(int(meta.get("num_streams", 0))):
+        m = read_manifest(root, sid)
+        streams.append(
+            {
+                "stream_id": sid,
+                "done": m.done,
+                "chunks": len(m.chunks),
+                "elements": m.num_elements,
+            }
+        )
+        total_elements += m.num_elements
+        total_chunks += len(m.chunks)
+        total_bytes += sum(c.nbytes for c in m.chunks)
+    return {
+        "exists": True,
+        "finished": snapshot_finished(root),
+        "fingerprint": meta.get("fingerprint"),
+        "codec": meta.get("codec"),
+        "num_streams": int(meta.get("num_streams", 0)),
+        "streams": streams,
+        "elements": total_elements,
+        "chunks": total_chunks,
+        "bytes": total_bytes,
+    }
+
+
+def committed_chunks(root: str, stream_id: int) -> List[ChunkRecord]:
+    return read_manifest(root, stream_id).chunks
+
+
+def list_snapshot_shards(root: str) -> List[Dict[str, Any]]:
+    """Chunk-granularity shard descriptors for the dispatcher.
+
+    For a FINISHED snapshot this is the complete, stable element set.  For
+    an in-progress snapshot it is the committed prefix at call time — a
+    sharded job sees a point-in-time cut; use tail mode (a non-sharded
+    read) to follow a live write.
+    """
+    meta = read_metadata(root)
+    if meta is None:
+        raise FileNotFoundError(f"no snapshot at {root}")
+    shards: List[Dict[str, Any]] = []
+    for sid in range(int(meta.get("num_streams", 0))):
+        for rec in committed_chunks(root, sid):
+            shards.append(
+                {
+                    "kind": "snapshot_chunk",
+                    "path": chunk_path(root, sid, rec),
+                    "stream": sid,
+                    "seq": rec.seq,
+                    "count": rec.count,
+                }
+            )
+    return shards
+
+
+def iterate_snapshot(
+    root: str,
+    tail: bool = False,
+    poll_interval: float = 0.05,
+    timeout: Optional[float] = None,
+) -> Iterator[Element]:
+    """Yield every element of a snapshot, interleaving streams round-robin.
+
+    ``tail=True`` keeps polling for new chunks while the snapshot is being
+    written, returning once the DONE marker appears and all committed
+    chunks have been drained.  ``timeout`` bounds the total wait for a
+    tailing read (None = wait forever).
+    """
+    meta = read_metadata(root)
+    if meta is None:
+        raise FileNotFoundError(f"no snapshot at {root}")
+    num_streams = int(meta.get("num_streams", 0))
+    next_seq = [0] * num_streams  # next chunk seq to read per stream
+    deadline = time.monotonic() + timeout if timeout is not None else None
+    while True:
+        progressed = False
+        all_done = True
+        for sid in range(num_streams):
+            m = read_manifest(root, sid)
+            by_seq = {c.seq: c for c in m.chunks}
+            while next_seq[sid] in by_seq:
+                rec = by_seq[next_seq[sid]]
+                yield from read_chunk(chunk_path(root, sid, rec))
+                next_seq[sid] += 1
+                progressed = True
+            if not m.done or next_seq[sid] < len(m.chunks):
+                all_done = False
+        if snapshot_finished(root) or (all_done and not tail):
+            # drain any chunks committed between the stream scan and the
+            # DONE check, then stop
+            for sid in range(num_streams):
+                m = read_manifest(root, sid)
+                by_seq = {c.seq: c for c in m.chunks}
+                while next_seq[sid] in by_seq:
+                    rec = by_seq[next_seq[sid]]
+                    yield from read_chunk(chunk_path(root, sid, rec))
+                    next_seq[sid] += 1
+            return
+        if not tail:
+            return  # in-progress snapshot, point-in-time read
+        if not progressed:
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(f"tailing {root}: no progress before timeout")
+            time.sleep(poll_interval)

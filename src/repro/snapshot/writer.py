@@ -1,0 +1,127 @@
+"""Worker-side snapshot stream writer.
+
+A ``StreamWriter`` turns a stream of pipeline elements into size-bounded,
+atomically-committed chunk files.  Commit order per chunk:
+
+  1. stage + fsync + rename the chunk file       (format.write_chunk)
+  2. rewrite the stream MANIFEST naming it        (format.write_manifest)
+  3. report the commit to the committer via the ``on_commit`` callback
+     (the dispatcher journals it; a False return means the stream was
+     reassigned away from this writer — stop immediately)
+
+Local-commit-before-report means a crash between (2) and (3) leaves the
+manifest AHEAD of the dispatcher's journal; the replacement writer then
+re-produces the unacknowledged suffix deterministically and the manifest
+merge converges (see format.py's crash-safety contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+from ..data.elements import Element, encode_element
+from .format import (
+    ChunkRecord,
+    StreamManifest,
+    clean_stale_tmp,
+    write_chunk,
+    write_manifest,
+)
+
+
+class StreamReassigned(RuntimeError):
+    """The committer no longer recognizes this writer as the stream owner."""
+
+
+@dataclass
+class WriterStats:
+    elements: int = 0
+    chunks: int = 0
+    bytes_written: int = 0
+
+
+class StreamWriter:
+    def __init__(
+        self,
+        root: str,
+        stream_id: int,
+        codec: Optional[str] = None,
+        chunk_bytes: int = 1 << 20,
+        committed: Optional[List[ChunkRecord]] = None,
+        on_commit: Optional[Callable[[ChunkRecord], bool]] = None,
+    ):
+        self._root = root
+        self._stream_id = stream_id
+        self._codec = codec
+        self._chunk_bytes = max(1, int(chunk_bytes))
+        # resume support: the committed prefix (from the dispatcher's journal)
+        # fixes the next chunk seq; the caller skips the already-committed
+        # element prefix before appending.
+        self._committed: List[ChunkRecord] = list(committed or [])
+        self._on_commit = on_commit
+        self._pending: List[bytes] = []  # elements pre-encoded at append time
+        self._pending_bytes = 0
+        self.stats = WriterStats()
+        clean_stale_tmp(root, stream_id)
+
+    @property
+    def next_seq(self) -> int:
+        return self._committed[-1].seq + 1 if self._committed else 0
+
+    @property
+    def elements_committed(self) -> int:
+        return sum(c.count for c in self._committed)
+
+    # ------------------------------------------------------------------
+    def append(self, elem: Element) -> Optional[ChunkRecord]:
+        """Buffer one element; commit a chunk when the size bound is hit.
+
+        Chunk boundaries depend only on the element stream and
+        ``chunk_bytes`` (the encoded size is deterministic), which is what
+        lets a resumed stream re-produce identical chunks.  Elements are
+        encoded ONCE here; the commit assembles the chunk frame from the
+        stored bytes.
+        """
+        enc = encode_element(elem)
+        self._pending.append(enc)
+        self._pending_bytes += len(enc)
+        self.stats.elements += 1
+        if self._pending_bytes >= self._chunk_bytes:
+            return self._commit_chunk()
+        return None
+
+    def finish(self) -> StreamManifest:
+        """Commit any partial tail chunk and mark the stream done."""
+        if self._pending:
+            self._commit_chunk()
+        manifest = StreamManifest(
+            stream_id=self._stream_id, chunks=list(self._committed), done=True
+        )
+        write_manifest(self._root, manifest)
+        return manifest
+
+    def abort(self) -> None:
+        """Drop uncommitted buffered elements (worker shutting down)."""
+        self._pending.clear()
+        self._pending_bytes = 0
+
+    # ------------------------------------------------------------------
+    def _commit_chunk(self) -> ChunkRecord:
+        rec = write_chunk(
+            self._root, self._stream_id, self.next_seq, [], self._codec,
+            encoded=self._pending,
+        )
+        self._committed.append(rec)
+        self._pending.clear()
+        self._pending_bytes = 0
+        self.stats.chunks += 1
+        self.stats.bytes_written += rec.nbytes
+        write_manifest(
+            self._root,
+            StreamManifest(stream_id=self._stream_id, chunks=list(self._committed)),
+        )
+        if self._on_commit is not None and not self._on_commit(rec):
+            raise StreamReassigned(
+                f"stream {self._stream_id}: committer rejected chunk {rec.seq}"
+            )
+        return rec

@@ -1,0 +1,250 @@
+"""Autocache policy (compute / write-through / read), sharing-stats
+surfacing through worker heartbeats, and the Autoscaler's orchestrator
+signal interface."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Autoscaler, AutoscalerConfig
+from repro.core.cost import JobResources
+from repro.data import Dataset, register
+from repro.data.pipelines import materialized
+from repro.snapshot import (
+    AutocacheConfig,
+    AutocachePolicy,
+    Decision,
+    StreamWriter,
+    snapshot_finished,
+    write_metadata,
+)
+from repro.snapshot.format import write_done
+
+_COUNTS = {"runs": 0}
+
+
+@register("autocache_transform")
+def autocache_transform(x):
+    _COUNTS["runs"] += 1
+    return np.asarray(x, dtype=np.int64) + 7
+
+
+def _pipeline(n=60):
+    return Dataset.range(n).map(autocache_transform).batch(2)
+
+
+# ---------------------------------------------------------------------------
+# Policy unit behavior
+# ---------------------------------------------------------------------------
+class TestAutocachePolicy:
+    def test_read_when_snapshot_finished(self, tmp_path):
+        pol = AutocachePolicy(str(tmp_path))
+        path = pol.path_for("fp1")
+        write_metadata(path, "s", "fp1", None, 100, 1, 0)
+        w = StreamWriter(path, 0)
+        w.append(np.arange(3))
+        w.finish()
+        write_done(path, {})
+        d = pol.decide("fp1")
+        assert d.decision == Decision.READ
+        assert d.snapshot_path == path
+
+    def test_compute_while_write_in_progress(self, tmp_path):
+        pol = AutocachePolicy(str(tmp_path))
+        path = pol.path_for("fp2")
+        write_metadata(path, "s", "fp2", None, 100, 1, 0)  # exists, unfinished
+        assert pol.decide("fp2").decision == Decision.COMPUTE
+
+    def test_write_through_when_reuse_pays(self, tmp_path):
+        pol = AutocachePolicy(
+            str(tmp_path), AutocacheConfig(expected_future_jobs=3.0)
+        )
+        d = pol.decide("fp3")
+        assert d.decision == Decision.WRITE_THROUGH
+        assert "Eq. 1" in d.reason
+
+    def test_compute_when_reuse_does_not_pay(self, tmp_path):
+        pol = AutocachePolicy(
+            str(tmp_path),
+            AutocacheConfig(
+                expected_future_jobs=0.0,
+                # cheap pipeline: nothing to save
+                compute_resources=JobResources(
+                    duration_hours=0.01, num_workers=1,
+                    worker_cpu_util_cores=0.1, worker_mem_util_gb=0.1,
+                    num_trainers=0, accelerators_per_trainer=0,
+                ),
+            ),
+        )
+        assert pol.decide("fp4").decision == Decision.COMPUTE
+
+    def test_stale_abandoned_write_restarts(self, tmp_path):
+        """An unfinished snapshot with no recent manifest progress (its
+        deployment died) must not pin the policy to COMPUTE forever."""
+        pol = AutocachePolicy(
+            str(tmp_path),
+            AutocacheConfig(expected_future_jobs=3.0, stale_write_timeout_s=0.2),
+        )
+        path = pol.path_for("fp-stale")
+        write_metadata(path, "s", "fp-stale", None, 100, 1, 0)
+        assert pol.decide("fp-stale").decision == Decision.COMPUTE  # fresh write
+        old = time.time() - 60
+        os.utime(os.path.join(path, "SNAPSHOT.json"), (old, old))
+        d = pol.decide("fp-stale")
+        assert d.decision == Decision.WRITE_THROUGH
+        assert "restarting" in d.reason
+
+    def test_hot_sharing_signal_forces_write_through(self, tmp_path):
+        """A fingerprint whose cached batches are served >> produced is
+        demonstrably reused — materialize regardless of the estimate."""
+        pol = AutocachePolicy(
+            str(tmp_path), AutocacheConfig(expected_future_jobs=0.0)
+        )
+        cold = pol.decide("fp5", cache_stats={"produced": 100, "served": 100})
+        assert cold.decision == Decision.COMPUTE
+        hot = pol.decide("fp5", cache_stats={"produced": 100, "served": 250})
+        assert hot.decision == Decision.WRITE_THROUGH
+        assert "hot pipeline" in hot.reason
+
+
+# ---------------------------------------------------------------------------
+# Sharing stats through heartbeats (dispatcher-side observability)
+# ---------------------------------------------------------------------------
+class TestCacheStatsHeartbeat:
+    def test_worker_heartbeats_surface_cache_stats(self, service_factory):
+        svc = service_factory(
+            num_workers=1, cache_capacity=16, worker_heartbeat_interval=0.1
+        )
+        dds = Dataset.range(30).batch(2).distribute(
+            service=svc, processing_mode="off", sharing=True, job_name="stats-job"
+        )
+        _ = list(dds)
+        # wait for at least one post-drain heartbeat to carry the counters
+        deadline = time.monotonic() + 5
+        sharing = {}
+        while time.monotonic() < deadline:
+            sharing = svc.orchestrator.stats().get("sharing", {})
+            if sharing:
+                break
+            time.sleep(0.05)
+        assert sharing, "no cache stats aggregated from heartbeats"
+        agg = next(iter(sharing.values()))
+        assert agg["produced"] > 0
+        assert agg["served"] >= agg["produced"]
+        # per-worker breakdown is visible too
+        workers = svc.orchestrator.stats()["workers"]
+        assert any(w["cache_stats"] for w in workers.values())
+
+
+# ---------------------------------------------------------------------------
+# Autocache end-to-end: first job writes through, second job reads
+# ---------------------------------------------------------------------------
+class TestAutocacheE2E:
+    def test_write_through_then_read(self, service_factory, tmp_path):
+        root = str(tmp_path / "autocache")
+        svc = service_factory(
+            num_workers=2, snapshot_root=root, worker_heartbeat_interval=0.1
+        )
+        pipe = _pipeline()
+        snap_path = os.path.join(root, f"snap-{pipe.graph.fingerprint()}")
+
+        # job 1: no snapshot yet -> policy says write-through; the job
+        # computes normally while workers materialize in the background
+        dds = pipe.distribute(service=svc, processing_mode="dynamic", autocache=True)
+        sess = dds.session()
+        got1 = sorted(int(v) for b in sess for v in np.ravel(b))
+        assert got1 == sorted(x + 7 for x in range(60))
+        assert sess.autocache_decision == "write_through"
+
+        deadline = time.monotonic() + 60
+        while not snapshot_finished(snap_path):
+            assert time.monotonic() < deadline, "write-through snapshot never finished"
+            time.sleep(0.05)
+
+        # job 2 (same pipeline, later in time): policy swaps it onto the
+        # snapshot — byte-equal data, zero pipeline recomputation
+        _COUNTS["runs"] = 0
+        sess2 = _pipeline().distribute(
+            service=svc, processing_mode="dynamic", autocache=True
+        ).session()
+        got2 = sorted(int(v) for b in sess2 for v in np.ravel(b))
+        assert sess2.autocache_decision == "read"
+        assert got2 == got1
+        assert _COUNTS["runs"] == 0, "autocache READ job re-ran the pipeline"
+
+    def test_autocache_off_without_snapshot_root(self, service_factory):
+        svc = service_factory(num_workers=1)
+        sess = _pipeline(20).distribute(
+            service=svc, processing_mode="dynamic", autocache=True
+        ).session()
+        vals = sorted(int(v) for b in sess for v in np.ravel(b))
+        assert vals == sorted(x + 7 for x in range(20))
+        assert sess.autocache_decision is None  # no root -> no policy
+
+
+# ---------------------------------------------------------------------------
+# materialized() helper (policy-free reuse entry point)
+# ---------------------------------------------------------------------------
+class TestMaterializedHelper:
+    def test_swaps_only_when_finished(self, tmp_path):
+        pipe = _pipeline(10)
+        path = str(tmp_path / "snap")
+        assert materialized(pipe, path) is pipe  # nothing on disk
+        write_metadata(path, "s", "fp", None, 100, 1, 0)
+        w = StreamWriter(path, 0)
+        w.append(np.arange(2))
+        w.finish()
+        assert materialized(pipe, path) is pipe  # unfinished, no tail
+        assert materialized(pipe, path, tail=True) is not pipe
+        write_done(path, {})
+        swapped = materialized(pipe, path)
+        assert swapped.graph.source.op == "snapshot"
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler: duck-typed orchestrator interface (snapshot-write pools etc.)
+# ---------------------------------------------------------------------------
+class _FakePool:
+    """Anything exposing the signal interface can be autoscaled."""
+
+    def __init__(self, occupancy):
+        self._occ = occupancy
+        self.workers = ["w0"]
+
+    def stats(self):
+        return {
+            "workers": {
+                w: {"buffer_occupancy": self._occ} for w in self.workers
+            }
+        }
+
+    def add_worker(self):
+        self.workers.append(f"w{len(self.workers)}")
+
+    def remove_worker(self, worker):
+        self.workers.remove(worker)
+
+    @property
+    def live_workers(self):
+        return list(self.workers)
+
+
+class TestAutoscalerInterface:
+    def test_constructible_against_any_signal_provider(self):
+        pool = _FakePool(occupancy=0.0)  # starved -> scale out
+        scaler = Autoscaler(pool, AutoscalerConfig(cooldown_s=0.0, max_workers=4))
+        assert scaler.step() == 1
+        assert len(pool.workers) == 2
+
+    def test_scale_in_on_full_buffers(self):
+        pool = _FakePool(occupancy=1.0)
+        pool.workers = ["w0", "w1", "w2"]
+        scaler = Autoscaler(pool, AutoscalerConfig(cooldown_s=0.0, min_workers=1))
+        assert scaler.step() == -1
+        assert len(pool.workers) == 2
+
+    def test_protocol_check(self):
+        from repro.core import ScalableOrchestrator
+
+        assert isinstance(_FakePool(0.5), ScalableOrchestrator)

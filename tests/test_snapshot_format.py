@@ -1,0 +1,202 @@
+"""repro.snapshot unit layer: chunk/manifest formats, StreamWriter
+chunking + resume determinism, reader iteration/tailing, shard listing."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import Dataset
+from repro.data.elements import encode_element
+from repro.snapshot import (
+    ChunkRecord,
+    StreamManifest,
+    StreamWriter,
+    iterate_snapshot,
+    list_snapshot_shards,
+    read_chunk,
+    read_manifest,
+    snapshot_finished,
+    snapshot_status,
+    write_chunk,
+    write_manifest,
+    write_metadata,
+)
+from repro.snapshot.format import chunk_path, write_done
+from repro.snapshot.writer import StreamReassigned
+
+
+def _elems(n, base=0):
+    return [np.arange(4, dtype=np.int64) + base + i for i in range(n)]
+
+
+class TestChunkFormat:
+    @pytest.mark.parametrize("codec", [None, "zlib"])
+    def test_chunk_roundtrip(self, tmp_path, codec):
+        elems = _elems(10)
+        rec = write_chunk(str(tmp_path), 0, 0, elems, codec)
+        assert rec.count == 10
+        got = read_chunk(chunk_path(str(tmp_path), 0, rec))
+        for a, b in zip(elems, got):
+            np.testing.assert_array_equal(a, b)
+
+    def test_chunk_commit_is_atomic(self, tmp_path):
+        """No partially-visible files: before commit the final name does not
+        exist; after commit no tmp residue remains for that write."""
+        rec = write_chunk(str(tmp_path), 0, 0, _elems(3), None)
+        d = os.path.dirname(chunk_path(str(tmp_path), 0, rec))
+        assert os.path.exists(chunk_path(str(tmp_path), 0, rec))
+        assert not [f for f in os.listdir(d) if ".tmp-" in f]
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = tmp_path / "bogus.chk"
+        p.write_bytes(b"NOTACHUNK")
+        with pytest.raises(ValueError, match="not a snapshot chunk"):
+            read_chunk(str(p))
+
+
+class TestManifest:
+    def test_manifest_merge_union_by_seq(self, tmp_path):
+        """Concurrent rewrites (zombie writer vs replacement) must commute:
+        the on-disk manifest is the union by chunk seq, done is sticky."""
+        root = str(tmp_path)
+        write_manifest(root, StreamManifest(0, [ChunkRecord(0, 5, 100)]))
+        # replacement knows chunks 0..2
+        write_manifest(
+            root,
+            StreamManifest(
+                0, [ChunkRecord(0, 5, 100), ChunkRecord(1, 5, 90), ChunkRecord(2, 3, 50)]
+            ),
+        )
+        # zombie rewrites with its shorter view — must NOT lose chunks 1-2
+        write_manifest(root, StreamManifest(0, [ChunkRecord(0, 5, 100), ChunkRecord(1, 5, 90)]))
+        m = read_manifest(root, 0)
+        assert [c.seq for c in m.chunks] == [0, 1, 2]
+        # done survives a later non-done rewrite
+        write_manifest(root, StreamManifest(0, m.chunks, done=True))
+        write_manifest(root, StreamManifest(0, m.chunks, done=False))
+        assert read_manifest(root, 0).done
+
+
+class TestStreamWriter:
+    def test_size_bounded_chunking(self, tmp_path):
+        w = StreamWriter(str(tmp_path), 0, chunk_bytes=200)
+        mid_commits = [c for c in (w.append(e) for e in _elems(20)) if c is not None]
+        m = w.finish()
+        assert m.done
+        assert m.num_elements == 20
+        assert len(m.chunks) > 1, "size bound should split into multiple chunks"
+        # finish() commits at most the partial tail beyond the size-bounded ones
+        assert len(m.chunks) - len(mid_commits) in (0, 1)
+        # seqs contiguous from 0
+        assert [c.seq for c in m.chunks] == list(range(len(m.chunks)))
+
+    def test_resume_reproduces_identical_chunks(self, tmp_path):
+        """A replacement writer resuming after K committed elements must
+        produce byte-identical chunk files for the remainder (determinism
+        is what makes commit races benign)."""
+        root_a, root_b = str(tmp_path / "a"), str(tmp_path / "b")
+        elems = _elems(30)
+        wa = StreamWriter(root_a, 0, chunk_bytes=150)
+        for e in elems:
+            wa.append(e)
+        ma = wa.finish()
+        # writer B: first owner commits a prefix, then a replacement resumes
+        wb1 = StreamWriter(root_b, 0, chunk_bytes=150)
+        prefix_chunks = []
+        consumed = 0
+        for e in elems:
+            consumed += 1
+            rec = wb1.append(e)
+            if rec is not None:
+                prefix_chunks.append(rec)
+                if len(prefix_chunks) == 2:
+                    break  # owner "dies" with 2 committed chunks
+        committed_elems = sum(c.count for c in prefix_chunks)
+        wb2 = StreamWriter(root_b, 0, chunk_bytes=150, committed=prefix_chunks)
+        for e in elems[committed_elems:]:
+            wb2.append(e)
+        mb = wb2.finish()
+        assert [c.to_json() for c in ma.chunks] == [c.to_json() for c in mb.chunks]
+        for rec in ma.chunks:
+            with open(chunk_path(root_a, 0, rec), "rb") as fa, open(
+                chunk_path(root_b, 0, rec), "rb"
+            ) as fb:
+                assert fa.read() == fb.read(), f"chunk {rec.seq} diverged"
+
+    def test_on_commit_rejection_stops_writer(self, tmp_path):
+        w = StreamWriter(str(tmp_path), 0, chunk_bytes=50, on_commit=lambda rec: False)
+        with pytest.raises(StreamReassigned):
+            for e in _elems(20):
+                w.append(e)
+
+
+class TestReader:
+    def _make_snapshot(self, root, num_streams=2, per_stream=8, done=True):
+        write_metadata(root, "snap-test", "fp", None, 100, num_streams, 0)
+        total = []
+        for sid in range(num_streams):
+            w = StreamWriter(root, sid, chunk_bytes=80)
+            for e in _elems(per_stream, base=100 * sid):
+                w.append(e)
+                total.append(e)
+            w.finish()
+        if done:
+            write_done(root, {"streams": num_streams})
+        return total
+
+    def test_iterate_all_streams(self, tmp_path):
+        root = str(tmp_path)
+        total = self._make_snapshot(root)
+        got = list(iterate_snapshot(root))
+        assert sorted(encode_element(e) for e in got) == sorted(
+            encode_element(e) for e in total
+        )
+
+    def test_status_and_shards(self, tmp_path):
+        root = str(tmp_path)
+        self._make_snapshot(root)
+        st = snapshot_status(root)
+        assert st["finished"] and st["elements"] == 16
+        shards = list_snapshot_shards(root)
+        assert all(s["kind"] == "snapshot_chunk" for s in shards)
+        assert sum(s["count"] for s in shards) == 16
+
+    def test_tail_follows_live_write(self, tmp_path):
+        """A reader attached mid-write sees committed chunks immediately and
+        the rest as they commit, returning once DONE appears."""
+        root = str(tmp_path)
+        write_metadata(root, "snap-live", "fp", None, 100, 1, 0)
+        elems = _elems(12)
+
+        def writer():
+            w = StreamWriter(root, 0, chunk_bytes=60)
+            for e in elems:
+                w.append(e)
+                time.sleep(0.01)
+            w.finish()
+            write_done(root, {})
+
+        th = threading.Thread(target=writer)
+        th.start()
+        got = list(iterate_snapshot(root, tail=True, timeout=20))
+        th.join()
+        assert [encode_element(e) for e in got] == [encode_element(e) for e in elems]
+
+    def test_dataset_from_snapshot_local(self, tmp_path):
+        root = str(tmp_path)
+        total = self._make_snapshot(root)
+        got = Dataset.from_snapshot(root).as_numpy()
+        assert len(got) == len(total)
+        # and transforms compose on top of the snapshot source
+        doubled = Dataset.from_snapshot(root).map(lambda x: x * 2).as_numpy()
+        np.testing.assert_array_equal(doubled[0], got[0] * 2)
+
+    def test_snapshot_finished_states(self, tmp_path):
+        root = str(tmp_path)
+        assert not snapshot_finished(root)
+        self._make_snapshot(root, done=False)
+        assert not snapshot_finished(root)
+        write_done(root, {})
+        assert snapshot_finished(root)

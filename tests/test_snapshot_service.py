@@ -1,0 +1,205 @@
+"""End-to-end snapshot materialization through the service.
+
+The acceptance scenario: job A materializes a snapshot through N workers
+(with an injected worker failure mid-write), job B consumes it via
+``from_snapshot`` and observes byte-identical batches with ZERO pipeline
+recomputation (source/transform counters stay at 0).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import materialize
+from repro.data import Dataset, register
+from repro.data.elements import encode_element
+from repro.snapshot import iterate_snapshot, snapshot_status
+
+# module-level counters: inproc deployments execute pipelines in-process,
+# so these observe every pipeline execution on any worker
+_COUNTERS = {"source_reads": 0, "flaky_remaining": 0}
+
+
+@register("counted_transform")
+def counted_transform(x, *, delay=0.0):
+    _COUNTERS["source_reads"] += 1
+    if delay:
+        time.sleep(delay)
+    return np.asarray(x, dtype=np.int64) * 3 + 1
+
+
+@register("flaky_transform")
+def flaky_transform(x):
+    if int(x) == 13 and _COUNTERS["flaky_remaining"] > 0:
+        _COUNTERS["flaky_remaining"] -= 1
+        raise RuntimeError("transient pipeline failure (injected)")
+    return np.asarray(x, dtype=np.int64) * 3 + 1
+
+
+def _pipeline(n=200, delay=0.0):
+    return Dataset.range(n).map(counted_transform, delay=delay).batch(2)
+
+
+def _bytes_multiset(batches):
+    return sorted(encode_element(np.asarray(b)) for b in batches)
+
+
+class TestMaterializeE2E:
+    def test_write_then_read_zero_recompute(self, service_factory, tmp_path):
+        svc = service_factory(num_workers=2)
+        snap = str(tmp_path / "snap")
+        st = materialize(svc, _pipeline(), snap, chunk_bytes=256, timeout=60)
+        assert st["finished"]
+        truth = _bytes_multiset(iterate_snapshot(snap))
+        assert truth, "snapshot is empty"
+
+        _COUNTERS["source_reads"] = 0
+        # job B: consume via the service (chunk-sharded, exactly-once)
+        got = list(
+            Dataset.from_snapshot(snap).distribute(
+                service=svc, processing_mode="dynamic"
+            )
+        )
+        assert _COUNTERS["source_reads"] == 0, "reading a snapshot re-ran the pipeline"
+        assert _bytes_multiset(got) == truth, "batches not byte-identical"
+        # all original values present exactly once across the batches
+        vals = sorted(int(v) for b in got for v in np.ravel(b))
+        assert vals == sorted(3 * x + 1 for x in range(200))
+
+    def test_worker_failure_mid_write_resumes_without_loss(
+        self, service_factory, tmp_path
+    ):
+        """Kill one of three workers mid-write: its streams are reassigned,
+        replacements resume at the committed offset, and the finished
+        snapshot holds every element exactly once."""
+        svc = service_factory(
+            num_workers=3, heartbeat_timeout=0.5, gc_interval=0.1,
+            worker_heartbeat_interval=0.1,
+        )
+        snap = str(tmp_path / "snap")
+        res = {}
+
+        def run():
+            res["st"] = materialize(
+                svc, _pipeline(n=240, delay=0.004), snap, chunk_bytes=128, timeout=90
+            )
+
+        th = threading.Thread(target=run)
+        th.start()
+        time.sleep(0.8)  # let every stream commit some chunks
+        dead = svc.orchestrator.kill_worker(0)
+        th.join(95)
+        st = res.get("st")
+        assert st and st["finished"], f"snapshot did not finish: {st}"
+        assert all(s["done"] for s in st["streams"])
+        # the dead worker owns nothing at the end
+        assert all(s["assigned_to"] != dead.worker_id for s in st["streams"])
+        vals = sorted(
+            int(v) for b in iterate_snapshot(snap) for v in np.ravel(b)
+        )
+        assert vals == sorted(3 * x + 1 for x in range(240)), (
+            "loss or duplication across the failure"
+        )
+        # committed chunk seqs stay unique and contiguous per stream
+        for s in snapshot_status(snap)["streams"]:
+            from repro.snapshot import read_manifest
+
+            m = read_manifest(snap, s["stream_id"])
+            assert [c.seq for c in m.chunks] == list(range(len(m.chunks)))
+
+    def test_read_speedup_vs_compute(self, service_factory, tmp_path):
+        """The point of materialization: reading committed batches is much
+        cheaper than re-running a CPU-bound pipeline."""
+        svc = service_factory(num_workers=2)
+        snap = str(tmp_path / "snap")
+        pipe = _pipeline(n=300, delay=0.002)
+        t0 = time.perf_counter()
+        materialize(svc, pipe, snap, chunk_bytes=1024, timeout=90)
+        write_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n = sum(1 for _ in iterate_snapshot(snap))
+        read_s = time.perf_counter() - t0
+        assert n > 0
+        assert read_s < write_s, (
+            f"read path ({read_s:.3f}s) not faster than compute+write ({write_s:.3f}s)"
+        )
+
+    def test_transient_writer_failure_is_retried(self, service_factory, tmp_path):
+        """A stream writer dying on a pipeline exception must not wedge the
+        snapshot: the worker reports the failed stream via heartbeat, the
+        dispatcher releases it, and a fresh runner retries from the
+        committed offset."""
+        svc = service_factory(num_workers=1, worker_heartbeat_interval=0.1)
+        snap = str(tmp_path / "snap")
+        _COUNTERS["flaky_remaining"] = 1  # fail exactly once, then succeed
+        ds = Dataset.range(40).map(flaky_transform).batch(2)
+        st = materialize(svc, ds, snap, chunk_bytes=64, num_streams=1, timeout=60)
+        assert st["finished"]
+        vals = sorted(int(v) for b in iterate_snapshot(snap) for v in np.ravel(b))
+        assert vals == sorted(3 * x + 1 for x in range(40))
+
+    def test_start_snapshot_rejects_foreign_pipeline_path(
+        self, service_factory, tmp_path
+    ):
+        """One path = one pipeline fingerprint: materializing a DIFFERENT
+        pipeline into an occupied path must fail loudly, not silently hand
+        back the other pipeline's batches."""
+        svc = service_factory(num_workers=1)
+        snap = str(tmp_path / "snap")
+        materialize(svc, _pipeline(n=20), snap, timeout=30)
+        other = Dataset.range(10).map(counted_transform).batch(5)
+        with pytest.raises(Exception, match="fingerprint|materializes|holds"):
+            materialize(svc, other, snap, timeout=30)
+
+    def test_fresh_dispatcher_adopts_finished_snapshot(
+        self, service_factory, tmp_path
+    ):
+        """A NEW deployment pointed at a finished on-disk snapshot of the
+        same pipeline reports success instead of rewriting it."""
+        snap = str(tmp_path / "snap")
+        svc1 = service_factory(num_workers=1)
+        materialize(svc1, _pipeline(n=20), snap, timeout=30)
+        before = snapshot_status(snap)
+        svc2 = service_factory(num_workers=1)  # fresh dispatcher, no journal
+        st = materialize(svc2, _pipeline(n=20), snap, timeout=30)
+        assert st.get("finished")
+        assert snapshot_status(snap)["elements"] == before["elements"]
+
+    def test_materialize_is_idempotent_per_path(self, service_factory, tmp_path):
+        svc = service_factory(num_workers=1)
+        snap = str(tmp_path / "snap")
+        st1 = materialize(svc, _pipeline(n=40), snap, chunk_bytes=512, timeout=30)
+        before = snapshot_status(snap)
+        st2 = materialize(svc, _pipeline(n=40), snap, chunk_bytes=512, timeout=30)
+        assert st2["finished"]
+        after = snapshot_status(snap)
+        assert before["elements"] == after["elements"], "restart duplicated data"
+
+    def test_tail_consumes_snapshot_mid_write(self, service_factory, tmp_path):
+        """A job can start reading a snapshot while it is still being
+        written: committed chunks first, then the live tail."""
+        svc = service_factory(num_workers=2)
+        snap = str(tmp_path / "snap")
+        res = {}
+
+        def writer():
+            res["st"] = materialize(
+                svc, _pipeline(n=160, delay=0.003), snap, chunk_bytes=128, timeout=90
+            )
+
+        th = threading.Thread(target=writer)
+        th.start()
+        # wait for the snapshot to exist with at least one committed chunk
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            st = snapshot_status(snap)
+            if st["exists"] and st["chunks"] > 0:
+                break
+            time.sleep(0.02)
+        got = Dataset.from_snapshot(snap, tail=True, timeout=90).as_numpy()
+        th.join(95)
+        assert res["st"]["finished"]
+        vals = sorted(int(v) for b in got for v in np.ravel(b))
+        assert vals == sorted(3 * x + 1 for x in range(160))
