@@ -16,6 +16,8 @@ Every reported row carries its tier.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
@@ -40,6 +42,40 @@ def print_rows(rows: List[Row], header: str) -> None:
     print("name,value,unit,tier,detail")
     for r in rows:
         print(r.csv())
+
+
+def write_bench_json(
+    suite: str,
+    rows: List[Row],
+    out_dir: str = ".",
+    timestamp: Optional[str] = None,
+) -> str:
+    """Persist one suite's rows as ``BENCH_<suite>.json``.
+
+    The machine-readable twin of the printed CSV: committed/archived per
+    run so the perf trajectory is diffable across PRs.  ``timestamp`` is
+    caller-supplied (the driver's ``--timestamp`` arg) so re-runs of the
+    same code can be labeled identically.
+    """
+    payload = {
+        "suite": suite,
+        "timestamp": timestamp or time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": [
+            {
+                "name": r.name,
+                "value": r.value,
+                "unit": r.unit,
+                "tier": r.tier,
+                "detail": r.detail,
+            }
+            for r in rows or ()
+        ],
+    }
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench results -> {path}]")
+    return path
 
 
 def time_fn(fn: Callable, *args, repeat: int = 5, warmup: int = 1) -> float:

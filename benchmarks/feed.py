@@ -1,0 +1,176 @@
+"""Accelerator feed: steps/sec + idle time, synchronous loop vs DeviceFeeder.
+
+A/B of the two ways a training loop can consume the data service:
+
+  sync    — the seed pattern: ``next(it)`` then ``device_put`` on the
+            step's critical path.  Every step pays fetch + host→device
+            transfer + compute, serially.
+  feeder  — ``repro.feed.DeviceFeeder``: fetch + transfer run on a
+            background thread behind a depth-2 device queue, so the step
+            pays max(compute, feed) instead of the sum.
+
+Both arms share the same deployment, pipeline, transfer call, and jitted
+compute, so the ratio isolates the pipelining.  The pipeline carries a
+slow ``map`` stage (per-element sleep — a stand-in for real decode /
+augmentation CPU cost) and ~8 MB batches so fetch latency and transfer
+bandwidth are both visible on CPU, where a real accelerator's PCIe copy
+would be.  Reported per arm: steps/s and accelerator-idle seconds per
+step (time the consumer was blocked waiting for a device batch).
+
+Run:  PYTHONPATH=src python benchmarks/feed.py [--quick]
+Emits BENCH_feed.json next to the CSV output (machine-readable trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import start_service  # noqa: E402
+from repro.data import Dataset  # noqa: E402
+
+try:
+    from .common import Row, print_rows, write_bench_json
+except ImportError:
+    from common import Row, print_rows, write_bench_json  # noqa: E402
+
+BATCH = 4  # elements per batch
+ELEM_SHAPE = (512, 1024)  # float32: 2 MB/element, 8 MB/batch
+MAP_SLEEP_S = 0.0005  # the "slow" producer stage, per element
+
+# pre-generated payload pool: the map stage's cost is the SLEEP, not RNG
+_POOL = np.random.default_rng(0).standard_normal((8, *ELEM_SHAPE)).astype(np.float32)
+
+
+def _slow_elem(i):
+    time.sleep(MAP_SLEEP_S)
+    return {"x": _POOL[int(i) % len(_POOL)]}
+
+
+def _pipeline(n_batches: int) -> Dataset:
+    # 2x headroom: DYNAMIC shard boundaries rarely align with the batch
+    # size, so drop_remainder trims a tail batch per shard — the consumers
+    # stop at n_batches and never notice
+    return (
+        Dataset.range(2 * n_batches * BATCH)
+        .map(_slow_elem)
+        .batch(BATCH, drop_remainder=True)
+    )
+
+
+def _make_step():
+    """Jitted stand-in for a train step over the transferred batch."""
+    import jax
+    import jax.numpy as jnp
+
+    w = jax.device_put(
+        np.random.default_rng(1)
+        .standard_normal((ELEM_SHAPE[1], 192))
+        .astype(np.float32)
+    )
+
+    @jax.jit
+    def step(batch):
+        y = jnp.einsum("bsd,dk->bsk", batch["x"], w)
+        return jnp.tanh(y).sum()
+
+    return step
+
+
+def measure_sync(steps: int, warmup: int) -> Tuple[float, float]:
+    """(steps/s, idle_s_per_step) for the synchronous consume loop."""
+    import jax
+
+    step_fn = _make_step()
+    svc = start_service(num_workers=4)
+    try:
+        dds = _pipeline(steps + warmup).distribute(
+            service=svc, processing_mode="dynamic"
+        )
+        it = iter(dds)
+        for _ in range(warmup):  # compile + service ramp outside the clock
+            jax.block_until_ready(step_fn(jax.device_put(next(it))))
+        t0 = time.perf_counter()
+        idle = 0.0
+        out = None
+        for _ in range(steps):
+            ti = time.perf_counter()
+            batch = jax.device_put(next(it))  # fetch + transfer, serial
+            idle += time.perf_counter() - ti
+            out = step_fn(batch)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        return steps / wall, idle / steps
+    finally:
+        svc.orchestrator.stop()
+
+
+def measure_feeder(steps: int, warmup: int) -> Tuple[float, float, dict]:
+    """(steps/s, idle_s_per_step, breakdown) through the DeviceFeeder."""
+    import jax
+
+    from repro.feed import DeviceFeeder, StallWindow
+
+    step_fn = _make_step()
+    svc = start_service(num_workers=4)
+    try:
+        dds = _pipeline(steps + warmup).distribute(
+            service=svc, processing_mode="dynamic"
+        )
+        with DeviceFeeder(dds, depth=2) as feeder:
+            for _ in range(warmup):
+                jax.block_until_ready(step_fn(feeder.next()))
+            window = StallWindow(feeder.metrics)  # deltas over the timed region
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(steps):
+                out = step_fn(feeder.next())
+            jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+            w = window.report() or {"idle_s_per_step": 0.0}
+            breakdown = feeder.metrics.breakdown()
+        return steps / wall, float(w["idle_s_per_step"]), breakdown
+    finally:
+        svc.orchestrator.stop()
+
+
+def main() -> List[Row]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer steps")
+    ap.add_argument("--out", default=".", help="BENCH_feed.json directory")
+    args, _ = ap.parse_known_args()
+    steps = 40 if args.quick else 150
+    warmup = 5 if args.quick else 10
+
+    sync_sps, sync_idle = measure_sync(steps, warmup)
+    feed_sps, feed_idle, breakdown = measure_feeder(steps, warmup)
+
+    rows = [
+        Row("feed/sync/steps_per_s", sync_sps, "steps/s", "real",
+            f"next(it)+device_put inline, {steps} steps"),
+        Row("feed/sync/idle_s_per_step", sync_idle, "s", "real",
+            "fetch+transfer on the step's critical path"),
+        Row("feed/feeder/steps_per_s", feed_sps, "steps/s", "real",
+            "DeviceFeeder depth=2"),
+        Row("feed/feeder/idle_s_per_step", feed_idle, "s", "real",
+            "consumer blocked in next()"),
+        Row("feed/speedup", feed_sps / sync_sps, "x_vs_sync", "real",
+            f"breakdown fetch={breakdown['fetch']:.0%} "
+            f"transfer={breakdown['transfer']:.0%} "
+            f"compute={breakdown['compute']:.0%}"),
+    ]
+    print_rows(rows, "device feed: synchronous loop vs double-buffered feeder")
+    if __name__ == "__main__":
+        # standalone runs emit their own results file; under benchmarks.run
+        # the driver writes BENCH_feed.json with the coordinated --timestamp
+        write_bench_json("feed", rows, out_dir=args.out)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

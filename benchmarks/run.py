@@ -1,11 +1,19 @@
 """Benchmark driver: one module per paper figure/table.  Prints each
-suite's ``name,value,unit,tier,detail`` CSV and a final summary of the
-paper's headline claims vs our measured/simulated reproduction."""
+suite's ``name,value,unit,tier,detail`` CSV, writes a machine-readable
+``BENCH_<suite>.json`` per suite (suite, rows, timestamp — the perf
+trajectory across PRs), and ends with a summary of the paper's headline
+claims vs our measured/simulated reproduction."""
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
+
+try:
+    from .common import write_bench_json
+except ImportError:
+    from common import write_bench_json
 
 
 SUITES = (
@@ -19,25 +27,43 @@ SUITES = (
     ("DataPlane_throughput", "benchmarks.data_plane"),
     ("Pallas_kernels", "benchmarks.kernels"),
     ("Snapshot_materialization", "benchmarks.snapshot"),
+    ("feed", "benchmarks.feed"),
 )
 
 
 def main() -> None:
     import importlib
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--timestamp",
+        default="",
+        help="label stamped into every BENCH_<suite>.json (default: now)",
+    )
+    ap.add_argument("--out", default=".", help="BENCH_*.json directory")
+    ap.add_argument(
+        "--only", default="", help="comma-separated suite-name filter"
+    )
+    args, _ = ap.parse_known_args()
+    only = {s for s in args.only.split(",") if s}
+    timestamp = args.timestamp or time.strftime("%Y-%m-%dT%H:%M:%S")
+
     all_rows = {}
     failed = []
     for name, mod_name in SUITES:
+        if only and name not in only:
+            continue
         print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = importlib.import_module(mod_name)
             rows = mod.main()
             all_rows[name] = {r.name: r for r in rows or ()}
+            write_bench_json(name, rows or [], out_dir=args.out, timestamp=timestamp)
         except Exception:
             traceback.print_exc()
             failed.append(name)
-        print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
+        print(f"[{name}: {time.perf_counter()-t0:.1f}s]", flush=True)
 
     print(f"\n{'='*72}\n== SUMMARY: paper headline claims vs this reproduction\n{'='*72}")
 
@@ -58,6 +84,8 @@ def main() -> None:
          get("Fig11_coordinated_reads", "sim_speedup_avg")),
         ("§3.4 at-most-once under worker kill", "holds",
          get("S33_visitation", "visitation_dynamic_kill")),
+        ("feed keeps accelerators fed (steps/s vs sync)", ">1x",
+         get("feed", "feed/speedup")),
     )
     w = max(len(c[0]) for c in claims) + 2
     print(f"{'claim':{w}s} {'paper':>8s}  {'ours':>16s}")

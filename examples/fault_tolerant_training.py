@@ -5,10 +5,11 @@ at-most-once.
 Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
 """
 import threading
+import time
 
 import numpy as np
 
-from repro.core import LocalOrchestrator
+from repro.core import LocalOrchestrator, TransportError
 from repro.data import Dataset
 
 N = 600
@@ -42,7 +43,18 @@ def main() -> None:
 
                 threading.Timer(1.5, _restart).start()
             if i == 120:
-                orch.add_worker()
+                # the consumer can reach this step (draining worker
+                # buffers) before the supervisor's restart timer fires —
+                # a real supervisor retries registration, so do the same
+                for _ in range(40):
+                    try:
+                        orch.add_worker()
+                        break
+                    except TransportError:
+                        time.sleep(0.1)  # dispatcher still down
+                else:
+                    raise RuntimeError("dispatcher never came back; "
+                                       "replacement worker not added")
                 print(f"step {i}: scaled out a replacement worker")
     finally:
         orch.stop()

@@ -13,12 +13,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import start_service
 from repro.data import Dataset
+from repro.feed import DeviceFeeder
 from repro.models import build_model
 from repro.train import (
     AdamWConfig,
@@ -104,27 +104,33 @@ def main() -> None:
         ds = corpus_pipeline(cfg.vocab_size).distribute(
             service=service, processing_mode="dynamic"
         )
-        it = iter(ds)
-        t0 = time.time()
-        tokens_seen = 0
-        for step in range(start + 1, args.steps + 1):
-            t_fetch = time.time()
-            batch = next(it)
-            fetch_s = time.time() - t_fetch
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            state, metrics = step_fn(state, batch)
-            tokens_seen += BATCH * SEQ
-            if step % 10 == 0 or step == args.steps:
-                jax.block_until_ready(metrics["loss"])
-                tps = tokens_seen / (time.time() - t0)
-                print(
-                    f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
-                    f"lr {float(metrics['lr']):.2e}  "
-                    f"fetch {fetch_s*1e3:.1f}ms  {tps:,.0f} tok/s"
-                )
-            if step % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, step, state)
-                print(f"  checkpoint @ {step}")
+        # the feeder replaces the manual next(it) + jnp.asarray loop:
+        # fetch and host->device transfer run behind a double buffer, so
+        # the only time the step waits is when the SERVICE falls behind —
+        # visible as feeder.metrics.idle_s, not hidden in the step time
+        with DeviceFeeder(ds, depth=2) as feeder:
+            t0 = time.perf_counter()
+            tokens_seen = 0
+            for step in range(start + 1, args.steps + 1):
+                batch = feeder.next()
+                state, metrics = step_fn(state, batch)
+                tokens_seen += BATCH * SEQ
+                if step % 10 == 0 or step == args.steps:
+                    jax.block_until_ready(metrics["loss"])
+                    tps = tokens_seen / (time.perf_counter() - t0)
+                    fm = feeder.metrics
+                    print(
+                        f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                        f"lr {float(metrics['lr']):.2e}  "
+                        f"idle {fm.idle_s_per_step*1e3:.1f}ms/step  "
+                        f"{tps:,.0f} tok/s"
+                    )
+                if step % args.ckpt_every == 0:
+                    save_checkpoint(args.ckpt_dir, step, state)
+                    print(f"  checkpoint @ {step}")
+            bd = feeder.metrics.breakdown()
+            print(f"feed breakdown: fetch {bd['fetch']:.0%} / "
+                  f"transfer {bd['transfer']:.0%} / compute {bd['compute']:.0%}")
     finally:
         service.orchestrator.stop()
     print("done — re-run with --resume to continue from the last checkpoint")

@@ -1,19 +1,39 @@
 """Worker-pool autoscaling (the paper's Autopilot / Cachew role).
 
-Policy (Cachew-style, batch-latency driven): scale OUT while clients starve
-(worker buffers run empty — the service is the bottleneck); scale IN when
-buffers sit full (over-provisioned).  Hysteresis + cooldown prevent flapping;
-min/max bound the pool.  The scaler observes only dispatcher-aggregated
-signals, so it works unchanged over any transport — and against ANY
-orchestrator exposing the small signal interface below (the in-process
-``LocalOrchestrator``, a snapshot-write worker pool, a k8s shim, ...).
+Two signals, in priority order:
+
+1. **Client latency** (Cachew-style, the primary signal when present):
+   feeders (``repro.feed.DeviceFeeder``) report per-window accelerator
+   stall fractions through client heartbeats; the dispatcher aggregates
+   them per job (``stats()["jobs"][..]["client_stall"]``).  Consumers
+   stalling means the service is the bottleneck — scale OUT; consumers
+   never stalling while worker buffers sit full means over-provisioned —
+   scale IN.  This is the signal that actually tracks what the paper
+   optimizes (keep accelerators fed), and it is robust to the failure mode
+   of buffer occupancy alone: a pipeline whose workers are slow AND whose
+   client is slow can show comfortable buffers while the accelerator
+   starves on transfer latency.
+
+2. **Worker buffer occupancy** (fallback, the pre-feed policy): with no
+   fresh client reports — non-feeder clients, snapshot-write pools, plain
+   ``ScalableOrchestrator`` implementations — scale OUT while buffers run
+   empty and IN while they sit full.
+
+Hysteresis + cooldown prevent flapping; min/max bound the pool.  The
+scaler observes only dispatcher-aggregated signals, so it works unchanged
+over any transport — and against ANY orchestrator exposing the small
+signal interface below (the in-process ``LocalOrchestrator``, a
+snapshot-write worker pool, a k8s shim, ...).
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+from typing import Any, Dict, List, Optional, Protocol, Set, runtime_checkable
+
+logger = logging.getLogger(__name__)
 
 
 @runtime_checkable
@@ -21,10 +41,11 @@ class ScalableOrchestrator(Protocol):
     """The signal/actuation surface the autoscaler needs — nothing more.
 
     ``stats()`` must return a dict with a ``"workers"`` mapping whose values
-    carry ``"buffer_occupancy"``; ``live_workers`` sizes the pool;
-    ``add_worker``/``remove_worker`` actuate.  ``LocalOrchestrator``
-    satisfies this structurally; so can any deployment-specific pool
-    (e.g. a dedicated snapshot-write pool).
+    carry ``"buffer_occupancy"`` (and MAY return a ``"jobs"`` mapping whose
+    values carry ``"client_stall"`` aggregates — see ``Dispatcher``);
+    ``live_workers`` sizes the pool; ``add_worker``/``remove_worker``
+    actuate.  ``LocalOrchestrator`` satisfies this structurally; so can any
+    deployment-specific pool (e.g. a dedicated snapshot-write pool).
     """
 
     def stats(self) -> Dict[str, Any]: ...
@@ -41,6 +62,10 @@ class ScalableOrchestrator(Protocol):
 class AutoscalerConfig:
     min_workers: int = 1
     max_workers: int = 64
+    # client-latency signal (primary): consumer-observed stall fraction
+    stall_out_threshold: float = 0.05  # accelerators idle >5% => starved
+    stall_in_threshold: float = 0.01  # ~never idle => candidate for scale-in
+    # buffer-occupancy signal (fallback / scale-in corroboration)
     scale_out_threshold: float = 0.25  # mean buffer occupancy below => starved
     scale_in_threshold: float = 0.9  # above => over-provisioned
     cooldown_s: float = 1.0
@@ -55,7 +80,37 @@ class Autoscaler:
         self._last_action = 0.0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._logged_errors: Set[type] = set()
         self.decisions: list = []
+
+    # -- signal extraction --------------------------------------------------
+    @staticmethod
+    def _mean_occupancy(stats: Dict[str, Any]) -> Optional[float]:
+        """Mean worker buffer occupancy; entries without the key (a worker
+        mid-registration has not reported yet) are EXCLUDED rather than
+        counted as 0.0 — defaulting them would bias the mean toward
+        "starved" and feed a scale-out loop."""
+        workers = stats.get("workers") or {}
+        occ = [
+            float(w["buffer_occupancy"])
+            for w in workers.values()
+            if isinstance(w, dict) and "buffer_occupancy" in w
+        ]
+        return sum(occ) / len(occ) if occ else None
+
+    @staticmethod
+    def _client_stall(stats: Dict[str, Any]) -> Optional[float]:
+        """Worst fresh per-job consumer stall fraction, or None when no
+        feeder has reported (max, not mean: one starving training job is a
+        reason to scale even if an eval job is comfortable)."""
+        fracs = []
+        for j in (stats.get("jobs") or {}).values():
+            if not isinstance(j, dict) or j.get("finished"):
+                continue
+            cs = j.get("client_stall")
+            if isinstance(cs, dict) and cs.get("clients"):
+                fracs.append(float(cs.get("stall_frac", 0.0)))
+        return max(fracs) if fracs else None
 
     # -- one scaling decision (callable synchronously from tests) ----------
     def step(self) -> int:
@@ -65,25 +120,43 @@ class Autoscaler:
         if now - self._last_action < cfg.cooldown_s:
             return 0
         stats = self._orch.stats()
-        workers = stats.get("workers", {})
-        if not workers:
+        mean_occ = self._mean_occupancy(stats)
+        if mean_occ is None:
             return 0
-        occ = [w["buffer_occupancy"] for w in workers.values()]
-        mean_occ = sum(occ) / len(occ)
+        stall = self._client_stall(stats)
+        if stall is not None:
+            # primary: what the consumers observe.  Scale in only when the
+            # feed is comfortably ahead AND worker buffers corroborate.
+            starving = stall > cfg.stall_out_threshold
+            sated = (
+                stall < cfg.stall_in_threshold
+                and mean_occ > cfg.scale_in_threshold
+            )
+        else:
+            # fallback: worker-side buffer occupancy only
+            starving = mean_occ < cfg.scale_out_threshold
+            sated = mean_occ > cfg.scale_in_threshold
         n = len(self._orch.live_workers)
         delta = 0
-        if mean_occ < cfg.scale_out_threshold and n < cfg.max_workers:
+        if starving and n < cfg.max_workers:
             delta = min(cfg.step, cfg.max_workers - n)
             for _ in range(delta):
                 self._orch.add_worker()
-        elif mean_occ > cfg.scale_in_threshold and n > cfg.min_workers:
+        elif sated and n > cfg.min_workers:
             delta = -min(cfg.step, n - cfg.min_workers)
             for _ in range(-delta):
                 self._orch.remove_worker(self._orch.live_workers[-1])
         if delta:
             self._last_action = now
             self.decisions.append(
-                {"t": now, "occupancy": mean_occ, "workers_before": n, "delta": delta}
+                {
+                    "t": now,
+                    "occupancy": mean_occ,
+                    "client_stall": stall,
+                    "signal": "client_stall" if stall is not None else "occupancy",
+                    "workers_before": n,
+                    "delta": delta,
+                }
             )
         return delta
 
@@ -97,8 +170,18 @@ class Autoscaler:
         while not self._stop.wait(self.config.interval_s):
             try:
                 self.step()
-            except Exception:
-                continue
+            except Exception as e:
+                # scaling must never kill the deployment, but going silent
+                # forever on e.g. a malformed stats() dict hid real bugs —
+                # log the first occurrence of each exception type
+                if type(e) not in self._logged_errors:
+                    self._logged_errors.add(type(e))
+                    logger.warning(
+                        "autoscaler step failed with %r "
+                        "(further %s suppressed)",
+                        e,
+                        type(e).__name__,
+                    )
 
     def stop(self) -> None:
         self._stop.set()

@@ -151,6 +151,11 @@ class DataServiceClient:
         # "compute" | "write_through" | "read" | None (autocache off)
         self.autocache_decision: Optional[str] = None
 
+        # latest feed-side stall window (set by repro.feed.DeviceFeeder via
+        # report_feed_stall); forwarded on every dispatcher heartbeat as the
+        # autoscaler's client-latency signal
+        self._feed_stats: Optional[Dict[str, float]] = None
+
         self._tasks: Dict[str, _TaskHandle] = {}
         self._tasks_lock = threading.Lock()
         self._active_fetchers = 0  # window threads still running (all tasks)
@@ -220,12 +225,28 @@ class DataServiceClient:
             if view.get("finished"):
                 self._job_finished.set()
 
+    def report_feed_stall(self, stats: Dict[str, float]) -> None:
+        """Feed-side stall hook (``repro.feed``): record the consumer's
+        latest stall window; the heartbeat loop forwards it so the
+        dispatcher (and through it the autoscaler) sees what the
+        *accelerator* observes, not just worker buffer occupancy."""
+        self._feed_stats = dict(stats)
+
     def _heartbeat_loop(self) -> None:
         while not self._closed.wait(self._hb_interval):
             try:
-                view = self._dispatcher.call(
-                    "client_heartbeat", job_id=self._job_id, client_id=self.client_id
+                kw: Dict[str, Any] = dict(
+                    job_id=self._job_id, client_id=self.client_id
                 )
+                # report-once: each stall window is forwarded on ONE
+                # heartbeat, so a consumer that stops stepping stops
+                # reporting and the dispatcher's TTL ages the job's
+                # aggregate out — re-sending the last window forever would
+                # pin a stale "starving" signal on the autoscaler
+                stall_stats, self._feed_stats = self._feed_stats, None
+                if stall_stats is not None:
+                    kw["stall_stats"] = stall_stats
+                view = self._dispatcher.call("client_heartbeat", **kw)
                 self._sync_tasks(view)
             except TransportError:
                 continue  # dispatcher down: keep consuming from workers (§3.4)
@@ -510,8 +531,12 @@ class DistributedDataset:
         )
         self.last_client: Optional[DataServiceClient] = None
 
-    def session(self) -> DataServiceClient:
-        self.last_client = DataServiceClient(self._address, self._graph, **self._kw)
+    def session(self, **overrides: Any) -> DataServiceClient:
+        """Open one iteration session; ``overrides`` patch the distribute-
+        time client kwargs (e.g. ``repro.feed.DeviceFeeder`` sets
+        ``num_consumers``/``consumer_index`` for per-host registration)."""
+        kw = {**self._kw, **overrides}
+        self.last_client = DataServiceClient(self._address, self._graph, **kw)
         return self.last_client
 
     def __iter__(self) -> Iterator[Element]:

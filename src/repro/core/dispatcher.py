@@ -69,6 +69,9 @@ class _Job:
     seq: int = 0  # task seeds
     static_assignment: Optional[Dict[str, List[Dict[str, Any]]]] = None
     autocache_decision: Optional[str] = None  # compute | write_through | read
+    # latest feed-stall report per client (repro.feed heartbeat payloads),
+    # each stamped with the monotonic receive time for staleness filtering
+    client_stall: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
 
 @dataclass
@@ -259,6 +262,41 @@ class Dispatcher:
                     agg[k] = agg.get(k, 0) + v
         return agg if found else None
 
+    # feed-stall reports older than this are ignored by the aggregate — a
+    # finished/stuck consumer must not pin the autoscaler's view forever
+    STALL_REPORT_TTL_S = 10.0
+
+    def _aggregate_client_stall(self, job: _Job) -> Optional[Dict[str, float]]:
+        """Mean of the job's fresh per-client feed-stall windows.
+
+        Expired entries are pruned, not just filtered: client churn on a
+        long-lived job (every feeder session is a fresh client_id) must
+        not grow the dict without bound.  Callers hold ``self._lock``.
+        """
+        now = time.monotonic()
+        for cid in [
+            cid
+            for cid, r in job.client_stall.items()
+            if now - r.get("t", 0.0) > self.STALL_REPORT_TTL_S
+        ]:
+            del job.client_stall[cid]
+        fresh = list(job.client_stall.values())
+        if not fresh:
+            return None
+        n = len(fresh)
+
+        def mean(key: str) -> float:
+            return sum(float(r.get(key, 0.0)) for r in fresh) / n
+
+        return {
+            "clients": float(n),
+            "stall_frac": mean("stall_frac"),
+            "idle_s_per_step": mean("idle_s_per_step"),
+            "fetch_s_per_step": mean("fetch_s_per_step"),
+            "transfer_s_per_step": mean("transfer_s_per_step"),
+            "queue_depth": mean("queue_depth"),
+        }
+
     def _apply_job(self, p: Dict[str, Any]) -> _Job:
         job = _Job(
             job_id=p["job_id"],
@@ -342,13 +380,22 @@ class Dispatcher:
         ]
 
     def rpc_client_heartbeat(
-        self, job_id: str, client_id: str, starving: bool = False
+        self,
+        job_id: str,
+        client_id: str,
+        starving: bool = False,
+        stall_stats: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None:
                 raise KeyError(f"unknown job {job_id}")
             job.clients.add(client_id)
+            if stall_stats:
+                job.client_stall[client_id] = {
+                    "t": time.monotonic(),
+                    **stall_stats,
+                }
             self._maybe_finish(job)
             view = self._job_view(job)
             view["starving_ack"] = starving
@@ -940,6 +987,9 @@ class Dispatcher:
                         "completed_tasks": len(j.completed_tasks),
                         "clients": len(j.clients),
                         "shards": j.shard_mgr.stats() if j.shard_mgr else None,
+                        # feed-side consumer latency (repro.feed reports);
+                        # None until a feeder has reported recently
+                        "client_stall": self._aggregate_client_stall(j),
                     }
                     for j in self._jobs.values()
                 },

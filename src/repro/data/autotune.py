@@ -12,12 +12,15 @@ knobs flagged AUTOTUNE:
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Set
 
 from .iterators import ExecContext, Knob, OpStats
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -27,6 +30,7 @@ class _KnobState:
     last_elements: int = 0
     last_time: float = 0.0
     direction: int = 1
+    primed: bool = False  # last_rate holds a real measured window
 
 
 class Autotuner:
@@ -42,6 +46,7 @@ class Autotuner:
         self._states: Dict[int, _KnobState] = {}
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._logged_errors: Set[type] = set()
 
     # -- lifecycle -------------------------------------------------------
     def start(self) -> None:
@@ -58,8 +63,18 @@ class Autotuner:
             time.sleep(self._interval)
             try:
                 self.step()
-            except Exception:  # tuner must never kill the pipeline
-                pass
+            except Exception as e:
+                # the tuner must never kill the pipeline, but a silent
+                # bare-except disabled tuning forever without a trace —
+                # log the first occurrence of each exception type
+                if type(e) not in self._logged_errors:
+                    self._logged_errors.add(type(e))
+                    logger.warning(
+                        "autotuner step failed with %r (further %s "
+                        "suppressed)",
+                        e,
+                        type(e).__name__,
+                    )
 
     # -- one tuning step (also callable synchronously from tests) ---------
     def step(self) -> None:
@@ -78,8 +93,14 @@ class Autotuner:
             st.last_time, st.last_elements = now, stats.elements
             return
         rate = (stats.elements - st.last_elements) / dt
-        if rate >= st.last_rate * 1.05:
-            # improving: keep moving in the same direction
+        if not st.primed:
+            # the first REAL measurement only seeds the baseline: last_rate
+            # starts at 0.0, so comparing against it would count any rate —
+            # including a fully stalled 0 elements/s — as a 5% improvement
+            # and bump parallelism on zero evidence
+            st.primed = True
+        elif rate > 0 and rate >= st.last_rate * 1.05:
+            # genuinely improving: keep moving in the same direction
             knob.value = max(knob.minimum, min(knob.maximum, knob.get() + st.direction))
         elif rate < st.last_rate * 0.95:
             # regressed: flip direction and step back

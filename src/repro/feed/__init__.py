@@ -1,0 +1,26 @@
+"""repro.feed — the accelerator-feed subsystem.
+
+Bridges the data service (host-side numpy batches from
+``DataServiceClient``) to the jax mesh (device-resident sharded
+``jax.Array``s): per-host consumer registration, a background
+fetch+transfer thread with a double-buffered device queue, and feed-side
+stall metrics that double as the autoscaler's client-latency signal.
+
+  * ``feeder``  — ``DeviceFeeder``, the user-facing pipeline stage.
+  * ``metrics`` — ``FeedMetrics`` (idle / fetch / transfer / compute
+                  accounting) and the rolling ``StallWindow`` reporter.
+  * ``sharded`` — host→device placement: per-leaf batch ``NamedSharding``
+                  derivation and addressable-shard-only uploads.
+"""
+from .feeder import DeviceFeeder
+from .metrics import FeedMetrics, StallWindow
+from .sharded import host_layout, infer_batch_shardings, put_batch
+
+__all__ = [
+    "DeviceFeeder",
+    "FeedMetrics",
+    "StallWindow",
+    "host_layout",
+    "infer_batch_shardings",
+    "put_batch",
+]

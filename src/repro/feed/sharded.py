@@ -1,0 +1,91 @@
+"""Host→device placement for service batches.
+
+One host of a jax deployment only owns its *addressable* devices; a global
+``jax.Array`` sharded over a multi-host mesh is assembled by every host
+uploading exactly its local shards — there is never a host-side gather.
+This module turns a service batch (a pytree of numpy arrays) into device
+arrays under that contract:
+
+* per-leaf ``NamedSharding``s come either from the caller or are derived
+  once from a (mesh, ShardingPlan) pair via
+  ``dist.sharding_rules.batch_sharding`` — the same rule the train step is
+  jitted with, so the feeder's upload layout matches ``in_shardings`` and
+  ``jax.jit`` never re-lays-out the batch;
+* single-process meshes use ``jax.device_put(leaf, sharding)`` (XLA splits
+  the host array across local devices);
+* multi-process meshes use ``jax.make_array_from_process_local_data``:
+  each host passes only ITS slice of the global batch (its per-host
+  consumer slot, see ``feeder.DeviceFeeder``) and jax assembles the global
+  array from the per-process shards.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def host_layout() -> Tuple[int, int]:
+    """(host_index, num_hosts) of this process in the jax deployment."""
+    return jax.process_index(), jax.process_count()
+
+
+def leaf_nbytes(tree: Any) -> int:
+    return sum(
+        int(getattr(leaf, "nbytes", 0)) for leaf in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def infer_batch_shardings(batch: Any, mesh: Any, plan: Any) -> Any:
+    """Per-leaf NamedShardings for a concrete batch: leading (batch) dim
+    over the plan's data axes, everything else replicated — exactly what
+    the jitted train step declares via ``sharding_rules.batch_sharding``.
+
+    Derived from the batch's own shapes, so indivisible leading dims
+    degrade to replication instead of failing the upload (same
+    divisibility-gating contract as the parameter rules).
+    """
+    from ..dist.sharding_rules import batch_sharding
+
+    return batch_sharding(mesh, plan, batch)
+
+
+def resolve_shardings(batch: Any, shardings: Any) -> Any:
+    """Normalize a shardings argument against a batch's tree structure.
+
+    ``shardings`` may be a single ``Sharding`` (applied to every leaf) or a
+    pytree matching the batch.  Returns a per-leaf tree, or ``None``.
+    """
+    if shardings is None:
+        return None
+    if isinstance(shardings, jax.sharding.Sharding):
+        return jax.tree_util.tree_map(lambda _: shardings, batch)
+    return shardings
+
+
+def put_batch(batch: Any, shardings: Optional[Any]) -> Any:
+    """Place one host batch onto devices.
+
+    With no shardings: plain ``device_put`` to the default device (the
+    single-accelerator case — still moves the copy off the training loop's
+    critical path because the feeder calls this from its transfer thread).
+
+    With shardings on a single-process mesh: ``device_put(leaf, s)``.
+
+    With shardings on a multi-process mesh: the leaf this host holds is its
+    LOCAL portion of the global batch; ``make_array_from_process_local_data``
+    uploads the local shards and wires them into one global ``jax.Array``.
+    """
+    if shardings is None:
+        return jax.tree_util.tree_map(jax.device_put, batch)
+    multi_process = jax.process_count() > 1
+
+    def one(leaf: Any, s: Any) -> Any:
+        if s is None:
+            return jax.device_put(leaf)
+        if multi_process and isinstance(s, jax.sharding.NamedSharding):
+            return jax.make_array_from_process_local_data(s, np.asarray(leaf))
+        return jax.device_put(leaf, s)
+
+    return jax.tree_util.tree_map(one, batch, shardings)

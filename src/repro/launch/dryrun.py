@@ -91,7 +91,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     model = build_model(cfg)
     pshape = S.params_shape(model)
 
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: wall clock may jump mid-compile
     if shape.kind == "train":
         oc = AdamWConfig(state_dtype=cfg.opt_state_dtype)
         oshape = jax.eval_shape(lambda: opt.init_state(pshape, oc))
@@ -134,10 +134,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
 
     with mesh, use_plan(plan):
         lowered = jfn.lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     ma = compiled.memory_analysis()
     mem = {

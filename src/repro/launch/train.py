@@ -71,6 +71,7 @@ def _execute_reduced(args) -> None:
     from repro.configs import get_config
     from repro.core import start_service
     from repro.data import Dataset
+    from repro.feed import DeviceFeeder
     from repro.launch import specs as S
     from repro.models import build_model
     from repro.models.config import ShapeConfig
@@ -107,16 +108,26 @@ def _execute_reduced(args) -> None:
             .batch(B, drop_remainder=True)
             .distribute(service=svc, processing_mode="dynamic")
         )
-        it = iter(ds)
-        t0 = time.time()
-        for step in range(1, args.steps + 1):
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            state, metrics = step_fn(state, batch)
-            if step % 5 == 0 or step == args.steps:
-                jax.block_until_ready(metrics["loss"])
-                print(f"[{args.arch}] step {step:3d} "
-                      f"loss {float(metrics['loss']):.4f} "
-                      f"({(time.time()-t0)/step:.2f}s/step)", flush=True)
+        # device feed: background fetch + host->device transfer with a
+        # double buffer — the step function never waits on the host loop
+        # unless the service itself falls behind (feeder.metrics says which)
+        with DeviceFeeder(ds, depth=2) as feeder:
+            t0 = time.perf_counter()
+            for step in range(1, args.steps + 1):
+                batch = feeder.next()
+                state, metrics = step_fn(state, batch)
+                if step % 5 == 0 or step == args.steps:
+                    jax.block_until_ready(metrics["loss"])
+                    print(f"[{args.arch}] step {step:3d} "
+                          f"loss {float(metrics['loss']):.4f} "
+                          f"({(time.perf_counter()-t0)/step:.2f}s/step)",
+                          flush=True)
+            fm = feeder.metrics
+            bd = fm.breakdown()
+            print(f"[{args.arch}] feed: idle {fm.idle_s_per_step*1e3:.1f}ms/step "
+                  f"(stall {fm.stall_fraction:.1%}) — "
+                  f"fetch {bd['fetch']:.0%} / transfer {bd['transfer']:.0%} / "
+                  f"compute {bd['compute']:.0%}", flush=True)
         if args.ckpt_dir:
             save_checkpoint(args.ckpt_dir, args.steps, state)
             print(f"checkpoint -> {args.ckpt_dir}")

@@ -1,4 +1,9 @@
-"""repro.train — optimizer, train step, loss, checkpointing."""
+"""repro.train — optimizer, train step, loss, checkpointing.
+
+Training loops consume batches through ``DeviceFeeder`` (re-exported from
+``repro.feed``): service fetch + host→device transfer run on a background
+thread behind a double buffer, so the jitted step never blocks on input.
+"""
 from .optimizer import AdamWConfig, apply_updates, init_state, lr_schedule
 from .step import (
     cross_entropy,
@@ -8,9 +13,12 @@ from .step import (
     make_train_step,
 )
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..feed import DeviceFeeder, FeedMetrics
 
 __all__ = [
     "AdamWConfig",
+    "DeviceFeeder",
+    "FeedMetrics",
     "apply_updates",
     "cross_entropy",
     "init_state",

@@ -231,3 +231,37 @@ class TestAutotune:
         plain = [np.asarray(b).tolist() for b in ds.iterator(autotune=False)]
         tuned = [np.asarray(b).tolist() for b in ds.iterator(autotune=True)]
         assert plain == tuned
+
+    def test_zero_throughput_never_bumps_parallelism(self):
+        """last_rate seeds from the FIRST measured window: a fully stalled
+        op (0 elements/s) must not read as a '5% improvement' over the 0.0
+        initial value and climb forever."""
+        from repro.data import Autotuner, ExecContext
+        from repro.data.iterators import Knob, OpStats
+
+        ctx = ExecContext()
+        knob = Knob(value=2, minimum=1, maximum=32, autotune=True)
+        ctx.stats[0] = OpStats(name="map", parallelism=knob)
+        tuner = Autotuner(ctx)
+        now = 0.0
+        for _ in range(5):  # stalled: elements never advance
+            now += 1.0
+            tuner._tune_parallelism(0, ctx.stats[0], now)
+        assert knob.get() == 2, "parallelism bumped on zero throughput"
+
+    def test_genuine_improvement_still_climbs(self):
+        from repro.data import Autotuner, ExecContext
+        from repro.data.iterators import Knob, OpStats
+
+        ctx = ExecContext()
+        knob = Knob(value=2, minimum=1, maximum=32, autotune=True)
+        st = OpStats(name="map", parallelism=knob)
+        ctx.stats[0] = st
+        tuner = Autotuner(ctx)
+        now, rate = 0.0, 100
+        for _ in range(4):
+            now += 1.0
+            st.elements += rate
+            tuner._tune_parallelism(0, st, now)
+            rate = int(rate * 1.2)  # keeps improving
+        assert knob.get() > 2
