@@ -28,6 +28,7 @@ SUITES = (
     ("Pallas_kernels", "benchmarks.kernels"),
     ("Snapshot_materialization", "benchmarks.snapshot"),
     ("feed", "benchmarks.feed"),
+    ("multi_job", "benchmarks.multi_job"),
 )
 
 
@@ -86,6 +87,8 @@ def main() -> None:
          get("S33_visitation", "visitation_dynamic_kill")),
         ("feed keeps accelerators fed (steps/s vs sync)", ">1x",
          get("feed", "feed/speedup")),
+        ("§3 fleet scheduler right-sizes per job (agg. vs all-on-all)", ">=1x",
+         get("multi_job", "multi_job/aggregate_ratio")),
     )
     w = max(len(c[0]) for c in claims) + 2
     print(f"{'claim':{w}s} {'paper':>8s}  {'ours':>16s}")

@@ -10,6 +10,7 @@ from .cost import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
 from .dispatcher import Dispatcher
 from .journal import Journal
 from .protocol import FetchStatus, ShardingPolicy, TaskSpec, VisitationGuarantee
+from .scheduler import FleetScheduler, JobDemand, SchedulerConfig
 from .service import LocalOrchestrator, ServiceHandle, start_service
 from .sharding import ShardManager, guarantee_for
 from .transport import GrpcServer, Stub, TCPServer, TransportError
@@ -23,10 +24,13 @@ __all__ = [
     "Dispatcher",
     "DistributedDataset",
     "FetchStatus",
+    "FleetScheduler",
     "GCP_RATES",
     "Journal",
+    "JobDemand",
     "JobResources",
     "LocalOrchestrator",
+    "SchedulerConfig",
     "ScalableOrchestrator",
     "ServiceHandle",
     "ShardManager",

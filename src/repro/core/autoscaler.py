@@ -24,6 +24,24 @@ scaler observes only dispatcher-aggregated signals, so it works unchanged
 over any transport — and against ANY orchestrator exposing the small
 signal interface below (the in-process ``LocalOrchestrator``, a
 snapshot-write worker pool, a k8s shim, ...).
+
+**Two-level scaling** (multi-tenant deployments): when the orchestrator
+exposes ``rebalance()`` and the deployment runs the fleet scheduler
+(``scheduling=True``), every step first rebalances per-job worker SHARES
+inside the current fleet (weighted max-min fair — see
+``core.scheduler``), and only resizes the global pool when the plan
+reports aggregate demand the fleet cannot satisfy (``unmet``, from
+starving jobs) or capacity no job wants (``surplus``).  One starving
+tenant therefore first takes workers from comfortable tenants, and only
+then grows the fleet.
+
+**Drain-aware scale-in**: when the orchestrator exposes
+``pick_removable()``, the victim is an idle worker (no unfinished
+snapshot streams, no pending coordinated rounds, lowest buffer
+occupancy) instead of blindly the last of ``live_workers`` — removing a
+mid-stream snapshot writer forces a stream reassignment and removing the
+only holder of a materialized coordinated round stalls every consumer of
+that round.  If nothing is drainable, scale-in waits for the next step.
 """
 from __future__ import annotations
 
@@ -46,6 +64,13 @@ class ScalableOrchestrator(Protocol):
     ``live_workers`` sizes the pool; ``add_worker``/``remove_worker``
     actuate.  ``LocalOrchestrator`` satisfies this structurally; so can any
     deployment-specific pool (e.g. a dedicated snapshot-write pool).
+
+    Two OPTIONAL methods (looked up dynamically, absence is fine):
+    ``rebalance() -> dict|None`` runs one fleet-scheduling round and
+    returns the plan view (``{"scheduled": True, "unmet": .., "surplus":
+    ..}``) or None when scheduling is off; ``pick_removable() ->
+    worker|None`` returns a drain-safe scale-in victim or None when no
+    live worker is drainable.
     """
 
     def stats(self) -> Dict[str, Any]: ...
@@ -119,17 +144,29 @@ class Autoscaler:
         now = time.monotonic()
         if now - self._last_action < cfg.cooldown_s:
             return 0
+        # level 1: per-job share rebalancing inside the current fleet
+        # (multi-tenant deployments); the plan says whether the GLOBAL
+        # pool needs to move at all
+        rebalance = getattr(self._orch, "rebalance", None)
+        plan = rebalance() if callable(rebalance) else None
+        if isinstance(plan, dict) and plan.get("scheduled"):
+            return self._fleet_step(plan, now)
         stats = self._orch.stats()
         mean_occ = self._mean_occupancy(stats)
-        if mean_occ is None:
-            return 0
         stall = self._client_stall(stats)
+        if stall is None and mean_occ is None:
+            return 0  # nothing has reported yet
         if stall is not None:
-            # primary: what the consumers observe.  Scale in only when the
-            # feed is comfortably ahead AND worker buffers corroborate.
+            # primary: what the consumers observe.  The stall signal alone
+            # decides scale-OUT — a fleet whose workers are all
+            # mid-registration (occupancy unavailable) must still be able
+            # to scale out of a consumer stall.  Scale IN additionally
+            # needs worker buffers to corroborate, so unknown occupancy
+            # never triggers removal.
             starving = stall > cfg.stall_out_threshold
             sated = (
                 stall < cfg.stall_in_threshold
+                and mean_occ is not None
                 and mean_occ > cfg.scale_in_threshold
             )
         else:
@@ -143,9 +180,7 @@ class Autoscaler:
             for _ in range(delta):
                 self._orch.add_worker()
         elif sated and n > cfg.min_workers:
-            delta = -min(cfg.step, n - cfg.min_workers)
-            for _ in range(-delta):
-                self._orch.remove_worker(self._orch.live_workers[-1])
+            delta = -self._remove_workers(min(cfg.step, n - cfg.min_workers))
         if delta:
             self._last_action = now
             self.decisions.append(
@@ -159,6 +194,61 @@ class Autoscaler:
                 }
             )
         return delta
+
+    def _fleet_step(self, plan: Dict[str, Any], now: float) -> int:
+        """Level 2: resize the global pool only on aggregate imbalance.
+
+        ``unmet`` > 0 means a starving job wanted workers the (already
+        rebalanced) fleet could not provide — grow.  ``surplus`` > 0 means
+        capacity no tenant wants — shrink, but only through drainable
+        workers (a surplus fleet with every worker mid-snapshot keeps its
+        size until a writer finishes).
+        """
+        cfg = self.config
+        n = len(self._orch.live_workers)
+        delta = 0
+        if plan.get("unmet", 0) > 0 and n < cfg.max_workers:
+            delta = min(cfg.step, cfg.max_workers - n, int(plan["unmet"]))
+            for _ in range(delta):
+                self._orch.add_worker()
+        elif plan.get("surplus", 0) > 0 and n > cfg.min_workers:
+            delta = -self._remove_workers(
+                min(cfg.step, n - cfg.min_workers, int(plan["surplus"]))
+            )
+        if delta:
+            self._last_action = now
+            self.decisions.append(
+                {
+                    "t": now,
+                    "signal": "fleet_demand",
+                    "demand": plan.get("demand"),
+                    "capacity": plan.get("capacity"),
+                    "unmet": plan.get("unmet"),
+                    "surplus": plan.get("surplus"),
+                    "workers_before": n,
+                    "delta": delta,
+                }
+            )
+        return delta
+
+    def _remove_workers(self, count: int) -> int:
+        """Drain-aware removal of up to ``count`` workers; returns how many
+        actually went (0 when nothing is currently drainable)."""
+        removed = 0
+        for _ in range(count):
+            victim = self._pick_victim()
+            if victim is None:
+                break
+            self._orch.remove_worker(victim)
+            removed += 1
+        return removed
+
+    def _pick_victim(self) -> Optional[Any]:
+        picker = getattr(self._orch, "pick_removable", None)
+        if callable(picker):
+            return picker()  # None = nothing drainable: skip this round
+        live = self._orch.live_workers
+        return live[-1] if live else None
 
     # -- background loop -----------------------------------------------------
     def start(self) -> "Autoscaler":

@@ -114,6 +114,7 @@ class DataServiceClient:
         compression: Optional[str] = None,
         target_workers: str = "any",
         max_workers: int = 0,
+        weight: float = 1.0,
         resume_offsets: bool = False,
         autocache: bool = False,
         buffer_size: int = 8,
@@ -137,6 +138,7 @@ class DataServiceClient:
         self._compression = compression
         self._target_workers = target_workers
         self._max_workers = max_workers
+        self._weight = weight
         self._resume_offsets = resume_offsets
         self._autocache = autocache
         self._buffer_size = buffer_size
@@ -181,6 +183,7 @@ class DataServiceClient:
             sharing=self._sharing,
             compression=self._compression,
             max_workers=self._max_workers,
+            weight=self._weight,
             resume_offsets=self._resume_offsets,
             client_id=self.client_id,
             client_codecs=available_codecs(),  # negotiation: what WE decode
@@ -501,6 +504,7 @@ class DistributedDataset:
         compression: Optional[str] = None,
         target_workers: str = "any",
         max_workers: int = 0,
+        weight: float = 1.0,
         resume_offsets: bool = False,
         autocache: bool = False,
         buffer_size: int = 8,
@@ -522,6 +526,7 @@ class DistributedDataset:
             compression=compression,
             target_workers=target_workers,
             max_workers=max_workers,
+            weight=weight,
             resume_offsets=resume_offsets,
             autocache=autocache,
             buffer_size=buffer_size,

@@ -5,6 +5,10 @@ Control plane only — never touches data.  Manages:
   * jobs (clients with the same ``job_name`` join the same job),
   * the worker pool (registration, heartbeats, failure detection),
   * per-job shard hand-out for the DYNAMIC policy (ShardManager),
+  * multi-tenant fleet scheduling (opt-in ``scheduling=True``): per-job
+    demand-driven worker shares (weighted max-min fair, see
+    ``core.scheduler``), realized by granting and retiring tasks; task
+    grants AND retirements are journaled so allocations survive restart,
   * a write-ahead journal so a restarted dispatcher recovers its state.
 
 Threading model: a single lock guards dispatcher state (control-plane calls
@@ -39,6 +43,7 @@ from .protocol import (
     WorkerInfo,
     new_id,
 )
+from .scheduler import FleetScheduler, JobDemand, SchedulerConfig
 from .sharding import ShardManager
 
 
@@ -59,6 +64,7 @@ class _Job:
     sharing: bool = False
     compression: Optional[str] = None
     max_workers: int = 0  # 0 = use all registered workers
+    weight: float = 1.0  # fleet-scheduler share weight (multi-tenant fairness)
     resume_offsets: bool = False
     tasks: Dict[str, TaskSpec] = field(default_factory=dict)  # by task_id
     tasks_by_worker: Dict[str, str] = field(default_factory=dict)
@@ -72,6 +78,9 @@ class _Job:
     # latest feed-stall report per client (repro.feed heartbeat payloads),
     # each stamped with the monotonic receive time for staleness filtering
     client_stall: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # fleet-scheduler worker share: None = unscheduled (task on every
+    # worker, the pre-scheduler behavior); an int caps auto-granted tasks
+    target_share: Optional[int] = None
 
 
 @dataclass
@@ -97,6 +106,8 @@ class Dispatcher:
         overpartition: int = 4,
         snapshot_root: Optional[str] = None,
         autocache_config: Optional[AutocacheConfig] = None,
+        scheduling: bool = False,
+        scheduler_config: Optional[SchedulerConfig] = None,
     ):
         self._lock = threading.RLock()
         self._datasets: Dict[str, _Dataset] = {}
@@ -113,6 +124,13 @@ class Dispatcher:
             if snapshot_root
             else None
         )
+        # multi-tenant fleet scheduling: when enabled, schedulable jobs get
+        # a demand-driven worker SHARE (weighted max-min fair) instead of a
+        # task on every worker; rebalance() is the entry point (driven by
+        # the two-level Autoscaler, or called directly)
+        self._scheduler: Optional[FleetScheduler] = (
+            FleetScheduler(scheduler_config) if scheduling else None
+        )
         self._worker_list_version = 0
         self._heartbeat_timeout = heartbeat_timeout
         self._overpartition = overpartition
@@ -120,6 +138,19 @@ class Dispatcher:
         # not (yet) re-registered: those workers get one heartbeat-timeout of
         # grace to come back before their in-flight shards are reclaimed
         self._orphan_sweep_deadline: Optional[float] = None
+        # set after a journal restore that found jobs with tasks: until it
+        # expires, capped/scheduled jobs count their JOURNALED tasks (not
+        # just re-registered workers' tasks) so a worker that registers
+        # before its peers cannot steal a slot a returning owner will
+        # reclaim — allocations must survive the restart intact
+        self._task_grace_deadline: Optional[float] = None
+        # (job_id, worker_id) -> armed: shard reclamation deferred until
+        # one heartbeat AFTER the one that tears the retired runner down.
+        # A retired worker is ALIVE (unlike the worker-failure path) and
+        # keeps serving its in-flight shard until the prune; re-queuing
+        # that shard immediately would have a replacement replay it
+        # concurrently (duplicate rows under resume_offsets).
+        self._pending_reclaims: Dict[Any, bool] = {}
         self._journal = Journal(journal_path)
         if journal_path:
             self._restore(journal_path)
@@ -175,6 +206,7 @@ class Dispatcher:
         sharing: bool = False,
         compression: Optional[str] = None,
         max_workers: int = 0,
+        weight: float = 1.0,
         resume_offsets: bool = False,
         client_id: Optional[str] = None,
         client_codecs: Optional[List[str]] = None,
@@ -204,6 +236,7 @@ class Dispatcher:
                 # restart compress with the same algorithm
                 compression=resolve_codec(compression, client_codecs),
                 max_workers=max_workers,
+                weight=max(1e-3, float(weight)),
                 resume_offsets=resume_offsets,
                 # journaled so a restored dispatcher partitions the source
                 # into the SAME shards (ids must stay aligned with the log)
@@ -307,8 +340,10 @@ class Dispatcher:
             sharing=p["sharing"],
             compression=p.get("compression"),
             max_workers=p.get("max_workers", 0),
+            weight=p.get("weight", 1.0),
             resume_offsets=p.get("resume_offsets", False),
             autocache_decision=p.get("autocache_decision"),
+            target_share=p.get("target_share"),
         )
         if job.policy in (ShardingPolicy.DYNAMIC, ShardingPolicy.STATIC):
             graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
@@ -323,16 +358,42 @@ class Dispatcher:
         self._jobs[job.job_id] = job
         if job.job_name:
             self._jobs_by_name[job.job_name] = job.job_id
-        # every registered worker gets a task for the new job (scale-out)
-        for w in self._workers.values():
-            self._ensure_task(job, w.info)
+        # a new schedulable job starts at its weighted fair share of the
+        # fleet, placed on the least-loaded workers (rebalance() adjusts it
+        # from demand); unscheduled jobs (and non-scheduling deployments)
+        # get a task on every worker (scale-out)
+        if self._scheduler is not None and self._schedulable(job):
+            if job.target_share is None:
+                job.target_share = self._initial_share(job)
+            if job.target_share is not None:
+                self._apply_share(job, job.target_share)
+        else:
+            for w in self._workers.values():
+                self._ensure_task(job, w.info)
         return job
 
     def _ensure_task(self, job: _Job, w: WorkerInfo) -> Optional[TaskSpec]:
         if job.finished or w.worker_id in job.tasks_by_worker:
             return None
-        if job.max_workers and len(job.tasks) >= job.max_workers:
+        if (job.job_id, w.worker_id) in self._pending_reclaims:
+            # this worker is still draining a retired task for the job:
+            # granting a fresh one now would hand the new runner shards
+            # while the pending reclaim is about to yank them back
             return None
+        # count only ACTIVE tasks (live workers, not completed): tasks left
+        # behind by dead workers must not eat into the cap, or a capped job
+        # ends up permanently under-provisioned after worker churn
+        if job.max_workers or job.target_share is not None:
+            active = self._slot_count(job)
+            if job.max_workers and active >= job.max_workers:
+                return None
+            if (
+                self._scheduler is not None
+                and job.target_share is not None
+                and self._schedulable(job)
+                and active >= job.target_share
+            ):
+                return None
         ds = self._datasets[job.dataset_id]
         job.seq += 1
         task = TaskSpec(
@@ -378,6 +439,279 @@ class Dispatcher:
             if t.task_id not in job.completed_tasks
             and t.worker_id in self._workers
         ]
+
+    def _slot_count(self, job: _Job) -> int:
+        """Tasks counted against the job's worker cap/share.
+
+        Normally the ACTIVE tasks; within the post-restore grace window
+        every journaled (uncompleted) task holds its slot even though its
+        worker has not re-registered yet — the owner is probably mid-
+        reconnect, and handing its slot to a faster-registering worker
+        would inflate the job past its journaled allocation.
+        """
+        if (
+            self._task_grace_deadline is not None
+            and time.monotonic() < self._task_grace_deadline
+        ):
+            return len(
+                [t for t in job.tasks.values() if t.task_id not in job.completed_tasks]
+            )
+        self._task_grace_deadline = None
+        return len(self._active_tasks(job))
+
+    # ------------------------------------------------------------------
+    # Fleet scheduling (multi-tenant worker allocation)
+    # ------------------------------------------------------------------
+    def _schedulable(self, job: _Job) -> bool:
+        """Jobs the fleet scheduler may grow/shrink.
+
+        Coordinated-read jobs stripe rounds over the sorted worker set and
+        STATIC jobs fix their partitions up front — resizing either would
+        break their placement contract, so they keep the task-on-every-
+        worker behavior and pin the fleet instead.
+        """
+        return (
+            not job.finished
+            and job.num_consumers == 0
+            and job.policy != ShardingPolicy.STATIC
+        )
+
+    def _initial_share(self, job: _Job) -> Optional[int]:
+        """Fair-share entry allocation for a newly created job."""
+        capacity = len(self._workers)
+        if capacity == 0:
+            return None  # no fleet yet: first rebalance sets the share
+        demands = [
+            JobDemand(
+                job_id=j.job_id,
+                weight=j.weight,
+                allocated=0 if j is job else len(self._active_tasks(j)),
+                max_workers=j.max_workers,
+            )
+            for j in self._jobs.values()
+            if self._schedulable(j)
+        ]
+        return self._scheduler.plan(capacity, demands).shares.get(job.job_id)
+
+    def rebalance(self) -> Optional[Dict[str, Any]]:
+        """One fleet-scheduling round; returns the plan view or None when
+        scheduling is disabled.
+
+        Each schedulable job's demand is derived from its own fresh
+        ``client_stall`` aggregate; weighted max-min fairness arbitrates
+        the demands over the current fleet, and the dispatcher realizes
+        the resulting shares by granting tasks on the least-loaded workers
+        and retiring tasks from the most-loaded ones.  The returned
+        ``unmet``/``surplus`` feed the two-level Autoscaler: per-job share
+        adjustment happened HERE; the global pool only needs to move when
+        aggregate demand and fleet capacity disagree.
+        """
+        with self._lock:
+            if self._scheduler is None:
+                return None
+            capacity = len(self._workers)
+            if (
+                self._task_grace_deadline is not None
+                and time.monotonic() < self._task_grace_deadline
+            ):
+                # post-restore grace: journaled task owners are still
+                # re-registering — rebalancing against a half-returned
+                # fleet would shuffle allocations that are about to be
+                # reclaimed verbatim
+                return {
+                    "scheduled": True,
+                    "capacity": capacity,
+                    "demand": 0,
+                    "unmet": 0,
+                    "surplus": 0,
+                    "shares": {},
+                }
+            sched_jobs = [j for j in self._jobs.values() if self._schedulable(j)]
+            if capacity == 0:
+                return {
+                    "scheduled": True,
+                    "capacity": 0,
+                    "demand": len(sched_jobs),
+                    "unmet": len(sched_jobs),
+                    "surplus": 0,
+                    "shares": {},
+                }
+            demands = []
+            for job in sched_jobs:
+                cs = self._aggregate_client_stall(job)
+                demands.append(
+                    JobDemand(
+                        job_id=job.job_id,
+                        weight=job.weight,
+                        allocated=len(self._active_tasks(job)),
+                        max_workers=job.max_workers,
+                        stall_frac=None if cs is None else float(cs["stall_frac"]),
+                    )
+                )
+            plan = self._scheduler.plan(capacity, demands)
+            load = self._worker_load()  # one map, updated as tasks move
+            for job in sched_jobs:
+                target = plan.shares.get(job.job_id)
+                if target is None:
+                    continue
+                job.target_share = target
+                self._apply_share(job, target, load)
+            # unscheduled tenants (coordinated/STATIC jobs, unfinished
+            # snapshots) use the whole fleet: they pin it against scale-in
+            pinned = any(
+                not j.finished and not self._schedulable(j)
+                for j in self._jobs.values()
+            ) or any(not s.finished for s in self._snapshots.values())
+            return {
+                "scheduled": True,
+                "capacity": capacity,
+                "demand": plan.total_demand,
+                "unmet": plan.unmet,
+                "surplus": 0 if pinned else plan.surplus,
+                "shares": dict(plan.shares),
+            }
+
+    def _worker_load(self) -> Dict[str, int]:
+        load = {wid: 0 for wid in self._workers}
+        for j in self._jobs.values():
+            if j.finished:
+                continue
+            for t in self._active_tasks(j):
+                load[t.worker_id] = load.get(t.worker_id, 0) + 1
+        return load
+
+    def _apply_share(
+        self, job: _Job, target: int, load: Optional[Dict[str, int]] = None
+    ) -> None:
+        """Grow/shrink one job's task set toward ``target`` workers.
+
+        ``load`` (per-worker active-task counts) is updated in place as
+        tasks move, so one map computed per rebalance round serves every
+        job's adjustment.
+        """
+        if load is None:
+            load = self._worker_load()
+        active = self._active_tasks(job)
+        if len(active) > target:
+            # victim order: first workers NOT holding an in-flight shard
+            # for this job (cheapest to stop — nothing to re-queue), then
+            # by descending total load (free the contended hosts)
+            inflight: Set[str] = set()
+            if job.shard_mgr is not None:
+                with job.shard_mgr._lock:
+                    inflight = {
+                        st.assigned_to
+                        for st in job.shard_mgr._states
+                        if st.assigned_to and not st.completed
+                    }
+            victims = sorted(
+                active,
+                key=lambda t: (
+                    t.worker_id in inflight,
+                    -load.get(t.worker_id, 0),
+                    t.worker_id,
+                ),
+            )
+            for t in victims[: len(active) - target]:
+                self._retire_task(job, t)
+                load[t.worker_id] = load.get(t.worker_id, 1) - 1
+        elif len(active) < target:
+            have = set(job.tasks_by_worker)
+            free = sorted(
+                (w for wid, w in self._workers.items() if wid not in have),
+                key=lambda w: (load.get(w.info.worker_id, 0), w.info.worker_id),
+            )
+            # iterate past candidates _ensure_task refuses (e.g. a worker
+            # still draining this job's retired task): a blocked candidate
+            # must not burn one of the grant slots
+            need = target - len(active)
+            for w in free:
+                if need <= 0:
+                    break
+                if self._ensure_task(job, w.info) is not None:
+                    load[w.info.worker_id] = load.get(w.info.worker_id, 0) + 1
+                    need -= 1
+
+    def _retire_task(self, job: _Job, task: TaskSpec) -> None:
+        """Shrink a job by one worker (journaled, like task creation).
+
+        The worker tears its runner down on the next heartbeat (the task
+        disappears from ``valid_tasks``) and the client stops fetching
+        when the dispatcher view stops listing it.  The worker's in-flight
+        shards are reclaimed with worker-failure semantics — re-queued at
+        the checkpointed offset with ``resume_offsets``, lost otherwise
+        (the documented at-most-once stance) — but only AFTER the worker's
+        runner has verifiably stopped (one heartbeat after the prune was
+        delivered): the retiree is alive, and re-queuing a shard it is
+        still serving would double-deliver its suffix.  A shard the
+        retiree completes before the prune lands counts as completed.
+        """
+        self._journal.append(
+            "task_retired", {"job_id": job.job_id, "task_id": task.task_id}
+        )
+        self._apply_task_retired(job, task.task_id)
+        if job.shard_mgr is not None:
+            if task.worker_id in self._workers:
+                self._pending_reclaims[(job.job_id, task.worker_id)] = False
+            else:
+                self._reclaim_shards(job, task.worker_id)
+        self._maybe_finish(job)
+
+    def _reclaim_shards(self, job: _Job, worker_id: str) -> None:
+        """Reclaim a drained/retired worker's in-flight shards for one job
+        (worker-failure semantics; callers hold ``self._lock``)."""
+        if job.shard_mgr is None:
+            return
+        for sid in job.shard_mgr.worker_failed(worker_id):
+            self._journal.append(
+                "shard_lost",
+                {"job_id": job.job_id, "shard_id": sid, "worker_id": worker_id},
+            )
+        self._maybe_finish(job)
+
+    def _step_pending_reclaims(self, worker_id: str) -> None:
+        """Advance deferred reclaims on a heartbeat from ``worker_id``.
+
+        The first heartbeat after retirement returns a ``valid_tasks``
+        list without the retired task — the worker prunes the runner on
+        receipt — so the SECOND heartbeat proves the runner is gone and
+        its shards are safe to re-queue.
+        """
+        for key in [k for k in self._pending_reclaims if k[1] == worker_id]:
+            if not self._pending_reclaims[key]:
+                self._pending_reclaims[key] = True
+                continue
+            del self._pending_reclaims[key]
+            job = self._jobs.get(key[0])
+            if job is not None:
+                self._reclaim_shards(job, worker_id)
+
+    def _apply_task_retired(self, job: _Job, task_id: str) -> None:
+        task = job.tasks.pop(task_id, None)
+        if task is None:
+            return
+        if job.tasks_by_worker.get(task.worker_id) == task_id:
+            del job.tasks_by_worker[task.worker_id]
+        job.completed_tasks.discard(task_id)
+
+    def rpc_retire_task(self, task_id: str) -> Dict[str, Any]:
+        """Administrative task retirement (tests / external tooling); the
+        scheduler's rebalance() uses the same journaled path internally.
+
+        Under ``scheduling=True`` the job's target share is pinned to the
+        shrunk allocation so the next heartbeat doesn't re-grant the slot.
+        In a non-scheduling deployment the every-worker-has-a-task
+        invariant re-grants on the next heartbeat — retirement is durable
+        only for capped jobs already at ``max_workers``.
+        """
+        with self._lock:
+            for job in self._jobs.values():
+                if task_id in job.tasks:
+                    self._retire_task(job, job.tasks[task_id])
+                    if self._scheduler is not None and self._schedulable(job):
+                        job.target_share = len(self._active_tasks(job))
+                    return {"ok": True}
+            return {"ok": False}
 
     def rpc_client_heartbeat(
         self,
@@ -483,6 +817,7 @@ class Dispatcher:
             w.cpu_busy = cpu_busy
             if cache_stats is not None:
                 w.cache_stats = cache_stats
+            self._step_pending_reclaims(worker_id)
             for tid in completed_tasks or []:
                 self._complete_task(tid, journal=True)
             for sid, stream_id in failed_streams or []:
@@ -582,6 +917,10 @@ class Dispatcher:
                     )
             if orphans:
                 self._maybe_finish(job)
+        # deferred retirement reclaims whose worker never re-registered
+        # were just covered by the orphan sweep above
+        for key in [k for k in self._pending_reclaims if k[1] not in self._workers]:
+            del self._pending_reclaims[key]
 
     def rpc_remove_worker(self, worker_id: str) -> Dict[str, Any]:
         """Administrative removal (tests / orchestrator-initiated)."""
@@ -595,6 +934,10 @@ class Dispatcher:
         self._journal.append("worker_removed", {"worker_id": worker_id})
         del self._workers[worker_id]
         self._worker_list_version += 1
+        # worker death supersedes any deferred retirement reclaim: the
+        # worker_failed sweep below covers every job's in-flight shards
+        for key in [k for k in self._pending_reclaims if k[1] == worker_id]:
+            del self._pending_reclaims[key]
         self._release_worker_streams(worker_id)
         for job in self._jobs.values():
             if job.shard_mgr is not None:
@@ -613,6 +956,11 @@ class Dispatcher:
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None or job.shard_mgr is None:
+                return {"done": True}
+            if worker_id not in job.tasks_by_worker:
+                # the worker's task was retired (fleet scheduler) but its
+                # runner has not been pruned yet — handing it a shard would
+                # strand that shard in-flight forever once the runner stops
                 return {"done": True}
             nxt = job.shard_mgr.next_shard(worker_id)
             if nxt is None:
@@ -984,7 +1332,10 @@ class Dispatcher:
                         "policy": j.policy.value,
                         "finished": j.finished,
                         "tasks": len(j.tasks),
+                        "active_tasks": len(self._active_tasks(j)),
                         "completed_tasks": len(j.completed_tasks),
+                        "weight": j.weight,
+                        "target_share": j.target_share,
                         "clients": len(j.clients),
                         "shards": j.shard_mgr.stats() if j.shard_mgr else None,
                         # feed-side consumer latency (repro.feed reports);
@@ -1047,6 +1398,10 @@ class Dispatcher:
                         task = TaskSpec(**p)
                         self._apply_task(job, task)
                         job.seq = max(job.seq, task.worker_seed)
+                elif etype == "task_retired":
+                    job = self._jobs.get(p["job_id"])
+                    if job is not None:
+                        self._apply_task_retired(job, p["task_id"])
                 elif etype == "static_assignment":
                     job = self._jobs.get(p["job_id"])
                     if job is not None:
@@ -1133,6 +1488,20 @@ class Dispatcher:
                         "snapshot_finished", {"snapshot_id": snap.snapshot_id}, sync=True
                     )
                     self._finalize_snapshot(snap)
+            # fleet scheduling: allocations survive the restart — the
+            # replayed grant/retire history IS the allocation, so seed each
+            # job's share from it (re-registering workers reclaim exactly
+            # their journaled tasks; rebalance() adjusts from there)
+            if self._scheduler is not None:
+                for job in self._jobs.values():
+                    if self._schedulable(job) and job.tasks:
+                        live = [
+                            t
+                            for t in job.tasks.values()
+                            if t.task_id not in job.completed_tasks
+                        ]
+                        if live:
+                            job.target_share = len(live)
             if any(
                 st.assigned_to and not st.completed
                 for job in self._jobs.values()
@@ -1147,6 +1516,26 @@ class Dispatcher:
                 self._orphan_sweep_deadline = (
                     time.monotonic() + self._heartbeat_timeout
                 )
+            if any(job.tasks and not job.finished for job in self._jobs.values()):
+                self._task_grace_deadline = (
+                    time.monotonic() + self._heartbeat_timeout
+                )
+            # shards assigned to a worker holding NO task for the job are a
+            # retirement whose deferred reclaim died with the dispatcher:
+            # re-arm it (the worker's heartbeats drive it; the orphan sweep
+            # covers workers that never come back)
+            for job in self._jobs.values():
+                if job.shard_mgr is None or job.finished:
+                    continue
+                with job.shard_mgr._lock:
+                    owners = {
+                        st.assigned_to
+                        for st in job.shard_mgr._states
+                        if st.assigned_to and not st.completed
+                    }
+                for wid in owners:
+                    if wid not in job.tasks_by_worker:
+                        self._pending_reclaims[(job.job_id, wid)] = False
 
     def _restore_snapshot(self, p: Dict[str, Any]) -> None:
         for ds in p.get("datasets", []):
@@ -1177,8 +1566,10 @@ class Dispatcher:
                             "sharing": j.sharing,
                             "compression": j.compression,
                             "max_workers": j.max_workers,
+                            "weight": j.weight,
                             "resume_offsets": j.resume_offsets,
                             "autocache_decision": j.autocache_decision,
+                            "target_share": j.target_share,
                         },
                         "finished": j.finished,
                         "shard_mgr": j.shard_mgr.to_payload() if j.shard_mgr else None,

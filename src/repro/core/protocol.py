@@ -38,6 +38,18 @@ Workers receive snapshot stream assignments alongside tasks in
 (``snapshot_streams``), and worker heartbeats additionally carry
 SlidingWindowCache counters (``cache_stats``) so the dispatcher and the
 autocache policy can observe sharing efficiency per pipeline fingerprint.
+
+Fleet scheduling (multi-tenant deployments, ``scheduling=True``):
+
+* ``get_or_create_job`` accepts ``weight`` (fleet-scheduler share weight)
+  next to ``max_workers``; both are journaled with the job.
+* ``retire_task``     — administrative task retirement.  The scheduler's
+  ``rebalance()`` retires tasks through the same journaled path when it
+  shrinks a job's share; the affected worker learns on its next heartbeat
+  (the task disappears from ``valid_tasks``, pruning the runner) and
+  clients stop fetching when the dispatcher view stops listing the task.
+  There is no dispatcher→worker push: retirement, like every other
+  assignment change, rides the existing heartbeat pull.
 """
 from __future__ import annotations
 

@@ -1,0 +1,240 @@
+"""Multi-tenant fleet scheduling (paper §3: right-size resources *per job*).
+
+The production tf.data service multiplexes many concurrent jobs over one
+shared worker fleet.  Giving every job a task on every worker (the seed
+behavior) couples the tenants: one starving job inflates the fleet for
+everyone, and a comfortable job can never release workers to a starving
+one.  This module is the arbitration layer between them:
+
+* Each job reports a **demand** — how many workers it currently wants —
+  derived from its own consumer-observed stall aggregate
+  (``client_stall``, the Cachew-style signal the feeders already export):
+  a starving job bids for the workers its throughput deficit implies
+  (``allocated / (1 - stall_frac)``, growth-capped per round); a sated
+  job releases one worker per round; a job with no fresh signal holds;
+  a brand-new job bids for the whole fleet and lets fairness trim it.
+
+* ``FleetScheduler.plan`` arbitrates the bids with **weighted max-min
+  fairness** (progressive water-filling): demands that fit inside their
+  weighted fair share are granted in full, and the leftover capacity is
+  re-divided among the still-hungry jobs by weight.  The result is the
+  per-job worker *share* the dispatcher then realizes by granting and
+  retiring tasks.
+
+* The plan also reports the fleet-level imbalance — ``unmet`` (capacity
+  a *starving* job wanted but could not get) and ``surplus`` (capacity
+  nobody wants) — which is exactly what the two-level ``Autoscaler``
+  consumes: per-job share adjustment first, global pool resize only when
+  aggregate demand and fleet capacity disagree.
+
+Pure policy, no I/O: the dispatcher owns the state, this module owns the
+arithmetic, so allocation behavior is unit-testable without a deployment.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class SchedulerConfig:
+    # consumer-observed stall fraction above which a job is starving and
+    # bids for more workers (mirrors AutoscalerConfig.stall_out_threshold)
+    stall_out_threshold: float = 0.05
+    # below this the job is comfortably fed and releases one worker/round
+    stall_in_threshold: float = 0.01
+    # a starving job's bid may grow by at most this many workers per round
+    # (damping: the stall signal lags the allocation by a heartbeat or two)
+    max_grow_step: int = 2
+    # grow fast, shrink patiently: a job must be CONTINUOUSLY sated this
+    # long before releasing a worker.  The stall signal lags allocation
+    # changes by the buffer-drain time (client queue + worker buffers), so
+    # an eager shrinker collapses a job's share faster than the stall
+    # feedback can push back; the patience window must outlast that lag.
+    shrink_patience_s: float = 3.0
+    # no schedulable job is squeezed below this many workers
+    min_share: int = 1
+
+
+@dataclass
+class JobDemand:
+    """One job's scheduling inputs, snapshotted by the dispatcher."""
+
+    job_id: str
+    weight: float = 1.0
+    allocated: int = 0  # active tasks (live workers only)
+    max_workers: int = 0  # 0 = unbounded
+    stall_frac: Optional[float] = None  # fresh client_stall aggregate, or None
+
+
+@dataclass
+class FleetPlan:
+    """Output of one scheduling round."""
+
+    capacity: int
+    shares: Dict[str, int]  # job_id -> granted worker share
+    wants: Dict[str, int]  # job_id -> demanded workers (pre-arbitration)
+    total_demand: int = 0
+    unmet: int = 0  # starving demand the fleet could not satisfy
+    surplus: int = 0  # fleet capacity no job wants
+    starving: List[str] = field(default_factory=list)
+
+
+def weighted_max_min(
+    capacity: int, entries: List[Tuple[str, int, float]]
+) -> Dict[str, int]:
+    """Weighted max-min fair integer allocation (water-filling).
+
+    ``entries`` is ``[(job_id, want, weight)]``.  Jobs whose demand fits
+    inside their weighted fair share are granted in full; their leftover
+    is re-divided among the rest by weight until nothing fits, then the
+    remaining capacity is split by weight (largest-remainder rounding).
+    Every job with a positive demand is guaranteed at least one worker
+    whenever the fleet is large enough to allow it.
+    """
+    shares: Dict[str, int] = {jid: 0 for jid, _, _ in entries}
+    if capacity <= 0:
+        return shares
+    demanding = [e for e in entries if e[1] > 0]
+    if capacity < len(demanding):
+        # degenerate fleet: fewer workers than tenants.  Proportional
+        # splitting would hand some jobs share 0 by rounding, and WHICH
+        # jobs would vary round to round (displaced jobs re-bid for the
+        # whole fleet), tearing down and re-granting task sets forever.
+        # Instead give one worker each to the `capacity` highest-weight
+        # jobs (ties by id) — deterministic, so the same jobs win every
+        # round and the rest wait for capacity.
+        for jid, _, _ in sorted(demanding, key=lambda e: (-e[2], e[0]))[:capacity]:
+            shares[jid] = 1
+        return shares
+    pending: Dict[str, Tuple[int, float]] = {
+        jid: (want, max(1e-9, float(weight)))
+        for jid, want, weight in entries
+        if want > 0
+    }
+    left = capacity
+    while left > 0 and pending:
+        total_w = sum(w for _, w in pending.values())
+        fitted = [
+            jid for jid, (want, w) in pending.items() if want <= left * w / total_w
+        ]
+        if fitted:
+            for jid in fitted:
+                want, _ = pending.pop(jid)
+                shares[jid] = want
+                left -= want
+            continue
+        # every remaining demand exceeds its fair share: split by weight
+        quota = {jid: left * w / total_w for jid, (_, w) in pending.items()}
+        base = {jid: int(q) for jid, q in quota.items()}
+        rem = left - sum(base.values())
+        for jid in sorted(pending, key=lambda j: (-(quota[j] - base[j]), j)):
+            if rem <= 0:
+                break
+            base[jid] += 1
+            rem -= 1
+        for jid in pending:
+            shares[jid] = base[jid]
+        pending.clear()
+    # min-share guarantee: steal from the largest holder for any job the
+    # rounding starved, while the fleet has a worker per demanding job
+    demanding = [jid for jid, want, _ in entries if want > 0]
+    if capacity >= len(demanding):
+        for jid in sorted(j for j in demanding if shares[j] == 0):
+            donor = max(shares, key=lambda j: (shares[j], j))
+            if shares[donor] <= 1:
+                break
+            shares[donor] -= 1
+            shares[jid] = 1
+    return shares
+
+
+class FleetScheduler:
+    """Demand-driven weighted max-min fair worker allocation."""
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        # job_id -> monotonic time the job's current sated streak began
+        # (shrink-patience bookkeeping; pruned for jobs that disappear)
+        self._sated_since: Dict[str, float] = {}
+
+    def is_starving(self, d: JobDemand) -> bool:
+        return (
+            d.stall_frac is not None
+            and d.stall_frac > self.config.stall_out_threshold
+        )
+
+    def desired_share(
+        self, d: JobDemand, capacity: int, now: Optional[float] = None
+    ) -> int:
+        """How many workers one job bids for this round."""
+        cfg = self.config
+        now = time.monotonic() if now is None else now
+        cap = capacity if d.max_workers <= 0 else min(d.max_workers, capacity)
+        if d.allocated <= 0:
+            # brand-new (or fully displaced) job: bid for everything and
+            # let max-min fairness trim the bid to the job's fair share
+            want = capacity
+        elif d.stall_frac is None:
+            want = d.allocated  # no fresh signal: hold
+        elif d.stall_frac > cfg.stall_out_threshold:
+            # throughput deficit: the consumer is fed (1 - stall) of the
+            # time, so ~allocated / (1 - stall) workers would feed it
+            self._sated_since.pop(d.job_id, None)
+            deficit = math.ceil(d.allocated / max(0.05, 1.0 - d.stall_frac))
+            want = min(d.allocated + cfg.max_grow_step, max(d.allocated + 1, deficit))
+        elif d.stall_frac < cfg.stall_in_threshold:
+            # comfortably fed: release one worker per full patience window
+            since = self._sated_since.setdefault(d.job_id, now)
+            if now - since >= cfg.shrink_patience_s:
+                want = d.allocated - 1
+                self._sated_since[d.job_id] = now  # restart the clock
+            else:
+                want = d.allocated
+        else:
+            self._sated_since.pop(d.job_id, None)
+            want = d.allocated  # hysteresis band: hold
+        return max(cfg.min_share, min(want, cap))
+
+    def plan(
+        self,
+        capacity: int,
+        demands: List[JobDemand],
+        now: Optional[float] = None,
+    ) -> FleetPlan:
+        now = time.monotonic() if now is None else now
+        live = {d.job_id for d in demands}
+        for jid in [j for j in self._sated_since if j not in live]:
+            del self._sated_since[jid]
+        wants = {d.job_id: self.desired_share(d, capacity, now) for d in demands}
+        shares = weighted_max_min(
+            capacity, [(d.job_id, wants[d.job_id], d.weight) for d in demands]
+        )
+        starving = [d.job_id for d in demands if self.is_starving(d)]
+        # unmet counts only STARVING jobs' trimmed bids: a comfortable job
+        # holding fewer workers than it historically had is not a reason
+        # to grow the fleet.  Exception: a job displaced to share 0 (a
+        # degenerate fleet smaller than the tenant count) is starving by
+        # construction whether or not its clients report stall — without
+        # this, a share-0 job whose consumers never call report_feed_stall
+        # blocks forever and the pool never grows to place it.
+        unmet = sum(max(0, wants[j] - shares.get(j, 0)) for j in starving)
+        unmet += sum(
+            1
+            for d in demands
+            if wants[d.job_id] > 0
+            and shares.get(d.job_id, 0) == 0
+            and d.job_id not in starving
+        )
+        total = sum(wants.values())
+        return FleetPlan(
+            capacity=capacity,
+            shares=shares,
+            wants=wants,
+            total_demand=total,
+            unmet=unmet,
+            surplus=max(0, capacity - total),
+            starving=starving,
+        )

@@ -4,6 +4,13 @@
 TCP transport), runs the failure-detection GC loop, supports scale-out /
 scale-in (Autopilot's role), worker kill/restart (fault-injection for tests
 and benchmarks), and dispatcher restart-from-journal.
+
+Multi-tenant deployments (``scheduling=True``) add two surfaces the
+two-level ``Autoscaler`` consumes: ``rebalance()`` (one fleet-scheduling
+round — per-job worker shares, see ``core.scheduler``) and
+``pick_removable()`` (drain-aware scale-in victim selection: never remove
+a worker holding an unfinished snapshot stream or unconsumed coordinated
+rounds while an idle worker exists).
 """
 from __future__ import annotations
 
@@ -41,6 +48,8 @@ class LocalOrchestrator:
         overpartition: int = 4,
         snapshot_root: Optional[str] = None,
         autocache_config: Optional[Any] = None,
+        scheduling: bool = False,
+        scheduler_config: Optional[Any] = None,
     ):
         self._transport = transport
         if journal and journal_path is None:
@@ -50,6 +59,8 @@ class LocalOrchestrator:
         self._journal_path = journal_path
         self._snapshot_root = snapshot_root
         self._autocache_config = autocache_config
+        self._scheduling = scheduling
+        self._scheduler_config = scheduler_config
         self._hb_timeout = heartbeat_timeout
         self._worker_hb = worker_heartbeat_interval
         self._gc_interval = gc_interval
@@ -82,6 +93,8 @@ class LocalOrchestrator:
             overpartition=self._overpartition,
             snapshot_root=self._snapshot_root,
             autocache_config=self._autocache_config,
+            scheduling=self._scheduling,
+            scheduler_config=self._scheduler_config,
         )
         if self._transport == "tcp":
             self._tcp_dispatcher = TCPServer(self.dispatcher).start()
@@ -142,6 +155,36 @@ class LocalOrchestrator:
     def live_workers(self) -> List[Worker]:
         return [w for w in self.workers if not w._stopping.is_set()]
 
+    def rebalance(self) -> Optional[Dict[str, Any]]:
+        """One fleet-scheduling round (no-op None unless the deployment was
+        created with ``scheduling=True``).  The two-level Autoscaler calls
+        this every step; tests and benchmarks may drive it directly."""
+        if self.dispatcher is None:
+            return None
+        return self.dispatcher.rebalance()
+
+    def pick_removable(self) -> Optional[Worker]:
+        """Drain-aware scale-in victim selection.
+
+        Returns the live worker that is cheapest to remove: no unfinished
+        snapshot streams, no pending (materialized-but-unconsumed)
+        coordinated rounds, lowest buffer occupancy.  Returns None when no
+        live worker is currently drainable — the caller should skip
+        scale-in this round rather than kill a busy worker.
+        """
+        candidates = []
+        for w in self.live_workers:
+            try:
+                ds = w.drain_stats()
+            except Exception:
+                continue  # worker mid-shutdown: not a candidate
+            if ds["active_snapshot_streams"] or ds["pending_coordinated_rounds"]:
+                continue
+            candidates.append((ds["buffer_occupancy"], w.worker_id, w))
+        if not candidates:
+            return None
+        return min(candidates)[2]
+
     # ------------------------------------------------------------------
     # Dispatcher fault injection / recovery (paper §3.4)
     # ------------------------------------------------------------------
@@ -165,6 +208,8 @@ class LocalOrchestrator:
             overpartition=self._overpartition,
             snapshot_root=self._snapshot_root,
             autocache_config=self._autocache_config,
+            scheduling=self._scheduling,
+            scheduler_config=self._scheduler_config,
         )
         if self._transport == "tcp":
             # rebind on a fresh port is not transparent; for TCP tests use

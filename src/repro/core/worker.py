@@ -669,6 +669,28 @@ class Worker:
             except TransportError:
                 continue  # dispatcher down: keep serving current tasks (§3.4)
 
+    def drain_stats(self) -> Dict[str, float]:
+        """What scale-in victim selection needs to know (see
+        ``LocalOrchestrator.pick_removable``): removing this worker while
+        it holds an unfinished snapshot stream forces a stream
+        reassignment + re-production, and removing it while it buffers
+        unconsumed coordinated rounds stalls every consumer of those
+        rounds — both strictly worse than draining an idle worker."""
+        with self._lock:
+            streams = sum(
+                1 for r in self._snapshot_writers.values() if r.status == "running"
+            )
+            rounds = sum(
+                int(r.extra_stats().get("coordinated_rounds_buffered", 0))
+                for r in self._tasks.values()
+            )
+            occ = [r.buffer_occupancy() for r in self._tasks.values()]
+        return {
+            "active_snapshot_streams": streams,
+            "pending_coordinated_rounds": rounds,
+            "buffer_occupancy": sum(occ) / len(occ) if occ else 0.0,
+        }
+
     def _prune_tasks(self, valid: set) -> None:
         """Drop orphaned tasks (finished/garbage-collected jobs)."""
         with self._lock:

@@ -166,6 +166,7 @@ class Dataset:
         compression: Optional[str] = None,
         target_workers: str = "any",
         max_workers: int = 0,
+        weight: float = 1.0,
         resume_offsets: bool = False,
         autocache: bool = False,
         buffer_size: int = 8,
@@ -186,6 +187,10 @@ class Dataset:
         dispatcher's snapshot policy (repro.snapshot) decide per job
         whether to compute, write-through a snapshot, or read a finished
         one (requires a deployment configured with ``snapshot_root``).
+        On a multi-tenant deployment (``scheduling=True``), ``weight``
+        sets the job's fleet-scheduler share weight and ``max_workers``
+        caps its worker allocation — together the per-job right-sizing
+        knobs from the paper's shared-fleet production setup (§3).
         """
         from ..core.client import DistributedDataset  # lazy: avoid cycle
         from ..core.protocol import DEFAULT_FETCH_WINDOW, DEFAULT_MAX_BATCH
@@ -206,6 +211,7 @@ class Dataset:
             compression=compression,
             target_workers=target_workers,
             max_workers=max_workers,
+            weight=weight,
             resume_offsets=resume_offsets,
             autocache=autocache,
             buffer_size=buffer_size,

@@ -1,0 +1,724 @@
+"""Multi-tenant fleet scheduler (core.scheduler + dispatcher rebalance):
+weighted max-min fair worker shares, task retirement, the two-level
+autoscaler, drain-aware scale-in, and the autoscaler/task-count bugfixes
+that block sharing a fleet."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    Autoscaler,
+    AutoscalerConfig,
+    Dispatcher,
+    FleetScheduler,
+    JobDemand,
+    SchedulerConfig,
+)
+from repro.core.scheduler import weighted_max_min
+from repro.data import Dataset
+
+
+# ---------------------------------------------------------------------------
+# Pure allocation arithmetic
+# ---------------------------------------------------------------------------
+class TestWeightedMaxMin:
+    def test_demands_that_fit_are_granted_in_full(self):
+        assert weighted_max_min(8, [("a", 6, 1.0), ("b", 2, 1.0)]) == {
+            "a": 6,
+            "b": 2,
+        }
+
+    def test_oversubscription_splits_by_weight(self):
+        assert weighted_max_min(8, [("a", 8, 3.0), ("b", 8, 1.0)]) == {
+            "a": 6,
+            "b": 2,
+        }
+
+    def test_small_demand_leftover_goes_to_hungry_job(self):
+        # b fits inside its fair share (4); its leftover flows to a
+        assert weighted_max_min(8, [("a", 99, 1.0), ("b", 1, 1.0)]) == {
+            "a": 7,
+            "b": 1,
+        }
+
+    def test_surplus_stays_unallocated(self):
+        shares = weighted_max_min(8, [("a", 2, 1.0), ("b", 2, 1.0)])
+        assert shares == {"a": 2, "b": 2}
+
+    def test_min_share_guarantee_when_fleet_is_big_enough(self):
+        shares = weighted_max_min(4, [("a", 4, 100.0), ("b", 4, 0.001)])
+        assert shares["b"] >= 1 and sum(shares.values()) == 4
+
+    def test_zero_capacity(self):
+        assert weighted_max_min(0, [("a", 4, 1.0)]) == {"a": 0}
+
+    def test_degenerate_fleet_fewer_workers_than_jobs(self):
+        entries = [(f"j{i}", 3, 1.0) for i in range(5)]
+        shares = weighted_max_min(3, entries)
+        assert sorted(shares.values()) == [0, 0, 1, 1, 1]
+        # deterministic winners: the same jobs win every round, so a
+        # too-small fleet doesn't thrash allocations
+        assert shares == weighted_max_min(3, entries)
+        # weight picks the winners
+        shares = weighted_max_min(1, [("a", 2, 1.0), ("b", 2, 5.0)])
+        assert shares == {"a": 0, "b": 1}
+
+
+class TestDesiredShare:
+    def setup_method(self):
+        # patience 0: shrink decisions fire immediately (patience itself is
+        # covered by test_shrink_patience_gates_release)
+        self.sched = FleetScheduler(
+            SchedulerConfig(max_grow_step=2, shrink_patience_s=0.0)
+        )
+
+    def test_fresh_job_bids_for_the_fleet(self):
+        d = JobDemand(job_id="j", allocated=0)
+        assert self.sched.desired_share(d, capacity=8) == 8
+
+    def test_no_signal_holds(self):
+        d = JobDemand(job_id="j", allocated=3, stall_frac=None)
+        assert self.sched.desired_share(d, capacity=8) == 3
+
+    def test_starving_grows_capped(self):
+        d = JobDemand(job_id="j", allocated=4, stall_frac=0.6)
+        # deficit says 10, damping caps the round at allocated + 2
+        assert self.sched.desired_share(d, capacity=16) == 6
+
+    def test_mildly_starving_still_grows_by_one(self):
+        d = JobDemand(job_id="j", allocated=4, stall_frac=0.06)
+        assert self.sched.desired_share(d, capacity=16) == 5
+
+    def test_sated_releases_one(self):
+        d = JobDemand(job_id="j", allocated=4, stall_frac=0.0)
+        assert self.sched.desired_share(d, capacity=8) == 3
+
+    def test_hysteresis_band_holds(self):
+        d = JobDemand(job_id="j", allocated=4, stall_frac=0.03)
+        assert self.sched.desired_share(d, capacity=8) == 4
+
+    def test_max_workers_caps_the_bid(self):
+        d = JobDemand(job_id="j", allocated=3, max_workers=3, stall_frac=0.9)
+        assert self.sched.desired_share(d, capacity=8) == 3
+
+    def test_never_below_one(self):
+        d = JobDemand(job_id="j", allocated=1, stall_frac=0.0)
+        assert self.sched.desired_share(d, capacity=8) == 1
+
+    def test_shrink_patience_gates_release(self):
+        sched = FleetScheduler(SchedulerConfig(shrink_patience_s=5.0))
+        d = JobDemand(job_id="j", allocated=4, stall_frac=0.0)
+        # sated, but not long enough: hold
+        assert sched.desired_share(d, capacity=8, now=100.0) == 4
+        assert sched.desired_share(d, capacity=8, now=103.0) == 4
+        # 5s of continuous satedness: release one worker
+        assert sched.desired_share(d, capacity=8, now=105.5) == 3
+        # the clock restarts after each release
+        assert sched.desired_share(d, capacity=8, now=106.0) == 4
+        # a stall blip resets the streak
+        stalled = JobDemand(job_id="j", allocated=4, stall_frac=0.5)
+        sched.desired_share(stalled, capacity=8, now=107.0)
+        assert sched.desired_share(d, capacity=8, now=110.0) == 4
+
+    def test_unmet_counts_only_starving_jobs(self):
+        sched = self.sched
+        plan = sched.plan(
+            8,
+            [
+                # holds 8 with no signal: trimmed by fairness, NOT unmet
+                JobDemand(job_id="hoarder", allocated=8, stall_frac=None),
+                JobDemand(job_id="fresh", allocated=0),
+            ],
+        )
+        assert plan.shares == {"hoarder": 4, "fresh": 4}
+        assert plan.unmet == 0
+        plan = sched.plan(
+            8,
+            [
+                JobDemand(job_id="starving", allocated=7, stall_frac=0.5),
+                JobDemand(job_id="sated", allocated=1, stall_frac=0.0),
+            ],
+        )
+        # starving job wants 9 but the fleet tops out at 8 minus the
+        # sated job's guaranteed 1 — the difference is unmet demand
+        assert plan.unmet >= 1
+
+    def test_displaced_job_counts_as_unmet_without_stall_reports(self):
+        # degenerate 1-worker fleet, two jobs, NO stall reporting (plain
+        # iterators): the displaced share-0 job is starving by
+        # construction and must still grow the pool via unmet
+        plan = self.sched.plan(
+            1,
+            [
+                JobDemand(job_id="a", allocated=1, stall_frac=None),
+                JobDemand(job_id="b", allocated=0, stall_frac=None),
+            ],
+        )
+        assert sorted(plan.shares.values()) == [0, 1]
+        assert plan.unmet >= 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: stall signal must decide alone when occupancy is absent
+# ---------------------------------------------------------------------------
+class _FakeOrch:
+    """Minimal ScalableOrchestrator: stats are injected per test."""
+
+    def __init__(self, workers=1, stall=None, occupancy=None):
+        self.workers = [f"w{i}" for i in range(workers)]
+        self._stall = stall
+        self._occupancy = occupancy
+
+    def stats(self):
+        workers = {}
+        if self._occupancy is not None:
+            workers = {
+                w: {"buffer_occupancy": self._occupancy} for w in self.workers
+            }
+        jobs = {}
+        if self._stall is not None:
+            jobs["job"] = {
+                "finished": False,
+                "client_stall": {"clients": 1.0, "stall_frac": self._stall},
+            }
+        return {"workers": workers, "jobs": jobs}
+
+    def add_worker(self):
+        self.workers.append(f"w{len(self.workers)}")
+
+    def remove_worker(self, w):
+        self.workers.remove(w)
+
+    @property
+    def live_workers(self):
+        return list(self.workers)
+
+
+class TestStallSignalWithoutOccupancy:
+    def _scaler(self, orch):
+        return Autoscaler(
+            orch, AutoscalerConfig(cooldown_s=0.0, min_workers=1, max_workers=8)
+        )
+
+    def test_scales_out_on_stall_while_workers_mid_registration(self):
+        # regression: all workers mid-registration -> no occupancy entries
+        # -> the old step() returned 0 and the fleet could never scale out
+        # of a consumer stall
+        orch = _FakeOrch(workers=1, stall=0.4, occupancy=None)
+        s = self._scaler(orch)
+        assert s.step() == 1
+        assert len(orch.live_workers) == 2
+        assert s.decisions[-1]["signal"] == "client_stall"
+
+    def test_no_scale_in_without_occupancy_corroboration(self):
+        # fed consumers but unknown buffers: must NOT remove workers
+        orch = _FakeOrch(workers=4, stall=0.0, occupancy=None)
+        s = self._scaler(orch)
+        assert s.step() == 0
+        assert len(orch.live_workers) == 4
+
+    def test_nothing_reported_is_still_a_noop(self):
+        orch = _FakeOrch(workers=2, stall=None, occupancy=None)
+        assert self._scaler(orch).step() == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: max_workers must count ACTIVE tasks, not dead workers'
+# ---------------------------------------------------------------------------
+def _mk_job(d, n=64, policy="off", **kw):
+    g = Dataset.range(n).batch(4).graph
+    ds = d.rpc_get_or_register_dataset(graph_bytes=g.to_bytes())
+    return d.rpc_get_or_create_job(dataset_id=ds["dataset_id"], policy=policy, **kw)
+
+
+class TestMaxWorkersCountsLiveTasks:
+    def test_capped_job_reprovisions_after_worker_death(self, tmp_path):
+        d = Dispatcher(journal_path=str(tmp_path / "j.bin"))
+        d.rpc_register_worker("w1", "inproc://w1")
+        d.rpc_register_worker("w2", "inproc://w2")
+        job = _mk_job(d, job_name="capped", max_workers=2)
+        assert d.rpc_stats()["jobs"][job["job_id"]]["active_tasks"] == 2
+        d.rpc_remove_worker("w1")
+        # regression: len(job.tasks) still counts w1's dead task; the fix
+        # counts live workers only, so w3 gets a task
+        resp = d.rpc_register_worker("w3", "inproc://w3")
+        tasks = [t for t in resp["tasks"] if t["job_id"] == job["job_id"]]
+        assert len(tasks) == 1
+        assert d.rpc_stats()["jobs"][job["job_id"]]["active_tasks"] == 2
+        d.close()
+
+    def test_cap_survives_dispatcher_restart(self, tmp_path):
+        path = str(tmp_path / "j.bin")
+        d = Dispatcher(journal_path=path)
+        d.rpc_register_worker("w1", "inproc://w1")
+        d.rpc_register_worker("w2", "inproc://w2")
+        job = _mk_job(d, job_name="capped", max_workers=2)
+        d.rpc_remove_worker("w1")
+        d.rpc_register_worker("w3", "inproc://w3")
+        d.close()
+
+        d2 = Dispatcher(journal_path=path)
+        # surviving workers reclaim their journaled tasks (stable ids)...
+        r2 = d2.rpc_register_worker("w2", "inproc://w2")
+        r3 = d2.rpc_register_worker("w3", "inproc://w3")
+        got = {t["task_id"] for r in (r2, r3) for t in r["tasks"]}
+        assert len(got) == 2
+        # ...and the cap still holds for newcomers (w1 never came back)
+        r4 = d2.rpc_register_worker("w4", "inproc://w4")
+        assert not [t for t in r4["tasks"] if t["job_id"] == job["job_id"]]
+        assert d2.rpc_stats()["jobs"][job["job_id"]]["active_tasks"] == 2
+        d2.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: drain-aware scale-in victim selection
+# ---------------------------------------------------------------------------
+class _FakeStreamRunner:
+    status = "running"
+
+    def stop(self):
+        self.status = "stopped"
+
+
+class _FakeCoordRunner:
+    status = "running"
+
+    def __init__(self, rounds):
+        self._rounds = rounds
+
+    def extra_stats(self):
+        return {"coordinated_rounds_buffered": self._rounds}
+
+    def buffer_occupancy(self):
+        return 0.0
+
+    def stop(self):
+        pass
+
+
+class TestPickRemovable:
+    def _orch(self, service_factory, n=3):
+        # slow heartbeats/GC: these tests poke worker internals directly
+        # and must not race the control loops
+        svc = service_factory(
+            num_workers=n,
+            worker_heartbeat_interval=30.0,
+            heartbeat_timeout=120.0,
+            gc_interval=30.0,
+        )
+        return svc.orchestrator
+
+    def test_worker_with_snapshot_stream_is_not_chosen(self, service_factory):
+        orch = self._orch(service_factory)
+        last = orch.live_workers[-1]
+        # regression: scale-in removed live_workers[-1] blindly, killing
+        # the unfinished stream writer and forcing a reassignment
+        last._snapshot_writers[("snap", 0)] = _FakeStreamRunner()
+        victim = orch.pick_removable()
+        assert victim is not None and victim.worker_id != last.worker_id
+
+    def test_worker_with_pending_coordinated_round_is_not_chosen(
+        self, service_factory
+    ):
+        orch = self._orch(service_factory)
+        last = orch.live_workers[-1]
+        last._tasks["fake-coord"] = _FakeCoordRunner(rounds=1)
+        victim = orch.pick_removable()
+        assert victim is not None and victim.worker_id != last.worker_id
+
+    def test_all_busy_returns_none(self, service_factory):
+        orch = self._orch(service_factory)
+        for w in orch.live_workers:
+            w._snapshot_writers[("snap", 0)] = _FakeStreamRunner()
+        assert orch.pick_removable() is None
+
+    def test_autoscaler_skips_scale_in_when_nothing_drainable(
+        self, service_factory
+    ):
+        orch = self._orch(service_factory)
+        for w in orch.live_workers:
+            w._snapshot_writers[("snap", 0)] = _FakeStreamRunner()
+        s = Autoscaler(orch, AutoscalerConfig(cooldown_s=0.0, min_workers=1))
+        assert s._remove_workers(1) == 0
+        assert len(orch.live_workers) == 3
+
+    def test_autoscaler_removes_the_idle_worker(self, service_factory):
+        orch = self._orch(service_factory)
+        busy = orch.live_workers[-1]
+        busy._snapshot_writers[("snap", 0)] = _FakeStreamRunner()
+        s = Autoscaler(orch, AutoscalerConfig(cooldown_s=0.0, min_workers=1))
+        assert s._remove_workers(1) == 1
+        assert busy in orch.live_workers
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher-level scheduling (deterministic: injected stall, manual ticks)
+# ---------------------------------------------------------------------------
+def _inject_stall(d, job_id, client_id, frac):
+    d.rpc_client_heartbeat(
+        job_id=job_id, client_id=client_id, stall_stats={"stall_frac": frac}
+    )
+
+
+def _active(d, job_id):
+    return d.rpc_stats()["jobs"][job_id]["active_tasks"]
+
+
+class TestDispatcherScheduling:
+    def _dispatcher(self, workers=8, **kw):
+        # patience 0 keeps these tests tick-deterministic (no wall clock)
+        d = Dispatcher(
+            scheduling=True,
+            scheduler_config=SchedulerConfig(shrink_patience_s=0.0),
+            **kw,
+        )
+        for i in range(workers):
+            d.rpc_register_worker(f"w{i}", f"inproc://w{i}")
+        return d
+
+    def test_new_job_starts_at_fair_share(self):
+        d = self._dispatcher()
+        a = _mk_job(d, job_name="a", policy="dynamic")
+        assert _active(d, a["job_id"]) == 8  # alone: whole fleet
+        b = _mk_job(d, n=128, job_name="b", policy="dynamic")
+        assert _active(d, b["job_id"]) == 4  # enters at fair share
+        d.rebalance()
+        # the incumbent is trimmed to its fair share on the next round
+        assert _active(d, a["job_id"]) == 4
+
+    def test_converges_to_asymmetric_shares(self):
+        d = self._dispatcher()
+        heavy = _mk_job(d, job_name="heavy", policy="dynamic")
+        light = _mk_job(d, n=128, job_name="light", policy="dynamic")
+        for _ in range(6):
+            _inject_stall(d, heavy["job_id"], "ch", 0.5)
+            _inject_stall(d, light["job_id"], "cl", 0.0)
+            d.rebalance()
+            # workers heartbeat between rounds (drains deferred reclaims
+            # so freed slots become grantable, as in a live deployment)
+            for _ in range(2):
+                for i in range(8):
+                    d.rpc_worker_heartbeat(worker_id=f"w{i}")
+        h, l = _active(d, heavy["job_id"]), _active(d, light["job_id"])
+        assert h >= 2 * l and h >= 6 and l >= 1
+        info = d.rebalance()
+        assert info["scheduled"] and info["unmet"] >= 1  # heavy still hungry
+
+    def test_weights_split_contended_fleet(self):
+        d = self._dispatcher()
+        a = _mk_job(d, job_name="a", policy="dynamic", weight=3.0)
+        b = _mk_job(d, n=128, job_name="b", policy="dynamic", weight=1.0)
+        for _ in range(4):
+            _inject_stall(d, a["job_id"], "ca", 0.5)
+            _inject_stall(d, b["job_id"], "cb", 0.5)
+            d.rebalance()
+        assert _active(d, a["job_id"]) == 6
+        assert _active(d, b["job_id"]) == 2
+
+    def test_max_workers_caps_scheduled_share(self):
+        d = self._dispatcher()
+        a = _mk_job(d, job_name="a", policy="dynamic", max_workers=3)
+        for _ in range(4):
+            _inject_stall(d, a["job_id"], "ca", 0.9)
+            d.rebalance()
+        assert _active(d, a["job_id"]) == 3
+
+    def test_finished_job_releases_workers(self):
+        d = self._dispatcher(workers=4)
+        a = _mk_job(d, job_name="a", policy="off")
+        b = _mk_job(d, n=128, job_name="b", policy="off")
+        for _ in range(3):
+            _inject_stall(d, a["job_id"], "ca", 0.5)
+            _inject_stall(d, b["job_id"], "cb", 0.5)
+            d.rebalance()
+        assert _active(d, b["job_id"]) == 2
+        # complete every one of a's tasks -> job a finishes
+        for t in list(d._jobs[a["job_id"]].tasks):
+            d._complete_task(t, journal=False)
+        assert d.rpc_stats()["jobs"][a["job_id"]]["finished"]
+        _inject_stall(d, b["job_id"], "cb", 0.5)
+        d.rebalance()
+        _inject_stall(d, b["job_id"], "cb", 0.5)
+        d.rebalance()
+        assert _active(d, b["job_id"]) == 4  # b absorbed a's workers
+
+    def test_retired_workers_shards_reclaimed_only_after_drain(self):
+        # a retired worker is ALIVE and may still be serving its in-flight
+        # shard; re-queuing it immediately would double-deliver its suffix
+        d = self._dispatcher(workers=2)
+        job = _mk_job(d, job_name="j", policy="dynamic", resume_offsets=True)
+        jid = job["job_id"]
+        resp = d.rpc_get_shard(job_id=jid, worker_id="w0")
+        sid = resp["shard_id"]
+        mgr = d._jobs[jid].shard_mgr
+        st = next(s for s in mgr._states if s.shard_id == sid)
+        d.rpc_retire_task(task_id=d._jobs[jid].tasks_by_worker["w0"])
+        assert st.assigned_to == "w0"  # NOT re-queued yet
+        # heartbeat 1 delivers the prune (valid_tasks without the task);
+        # no fresh task is granted to the draining worker either
+        r1 = d.rpc_worker_heartbeat(worker_id="w0")
+        assert st.assigned_to == "w0"
+        assert not [t for t in r1["new_tasks"] if t["job_id"] == jid]
+        # heartbeat 2 proves the runner is gone: shard re-enters the queue
+        d.rpc_worker_heartbeat(worker_id="w0")
+        assert st.assigned_to is None and sid in mgr._pending
+        d.close()
+
+    def test_unscheduled_tenants_pin_the_fleet(self):
+        d = self._dispatcher(workers=4)
+        _mk_job(d, job_name="coord", num_consumers=2)  # coordinated reads
+        info = d.rebalance()
+        assert info["scheduled"] and info["surplus"] == 0
+
+    def test_surplus_reported_when_all_jobs_shrink(self):
+        d = self._dispatcher(workers=8)
+        a = _mk_job(d, job_name="a", policy="dynamic")
+        for _ in range(5):
+            _inject_stall(d, a["job_id"], "ca", 0.0)
+            d.rebalance()
+        info = d.rebalance()
+        assert _active(d, a["job_id"]) < 8
+        assert info["surplus"] >= 1
+
+    def test_allocations_survive_restart(self, tmp_path):
+        path = str(tmp_path / "j.bin")
+        d = self._dispatcher(journal_path=path)
+        heavy = _mk_job(d, job_name="heavy", policy="dynamic")
+        light = _mk_job(d, n=128, job_name="light", policy="dynamic")
+        for _ in range(6):
+            _inject_stall(d, heavy["job_id"], "ch", 0.5)
+            _inject_stall(d, light["job_id"], "cl", 0.0)
+            d.rebalance()
+        h, l = _active(d, heavy["job_id"]), _active(d, light["job_id"])
+        heavy_tasks = set(d._jobs[heavy["job_id"]].tasks)
+        d.close()
+
+        d2 = Dispatcher(journal_path=path, scheduling=True)
+        # the journaled grant/retire history IS the allocation: the
+        # restored task sets match, and the seeded target_share keeps
+        # re-registering workers from re-inflating the shrunk job
+        assert set(d2._jobs[heavy["job_id"]].tasks) == heavy_tasks
+        for i in range(8):
+            d2.rpc_register_worker(f"w{i}", f"inproc://w{i}")
+        assert _active(d2, heavy["job_id"]) == h
+        assert _active(d2, light["job_id"]) == l
+        d2.close()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: two jobs with asymmetric cost sharing one live fleet
+# ---------------------------------------------------------------------------
+def _slow(x, t=0.0):
+    time.sleep(t)
+    return x
+
+
+def _consume(session, step_s, stop, out):
+    """Paced consumer: one batch per ``step_s`` (the 'training step'),
+    reporting the observed stall fraction like repro.feed does."""
+    it = iter(session)
+    win_t0 = time.perf_counter()
+    win_stall = 0.0
+    while not stop.is_set():
+        t0 = time.perf_counter()
+        try:
+            next(it)
+        except StopIteration:
+            break
+        win_stall += time.perf_counter() - t0
+        out["steps"] += 1
+        now = time.perf_counter()
+        if now - win_t0 >= 0.25:
+            session.report_feed_stall(
+                {"stall_frac": min(1.0, win_stall / (now - win_t0))}
+            )
+            win_t0, win_stall = now, 0.0
+        if step_s:
+            time.sleep(step_s)
+
+
+def _wait_for(cond, timeout, consecutive=1, interval=0.2):
+    hits = 0
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            hits += 1
+            if hits >= consecutive:
+                return True
+        else:
+            hits = 0
+        time.sleep(interval)
+    return False
+
+
+class TestMultiJobEndToEnd:
+    def test_asymmetric_jobs_converge_to_unequal_shares(self, service_factory):
+        svc = service_factory(
+            num_workers=8, scheduling=True, worker_buffer_size=2
+        )
+        # heavy needs ~7 workers at its pace; light needs well under one
+        # (4x headroom, so its stall signal is robustly ~0 and the
+        # scheduler's patient shrink actually releases its workers): the
+        # 8-worker fleet can only serve both by allocating unequally
+        heavy = (
+            Dataset.range(100_000)
+            .map(_slow, t=0.14)
+            .batch(2)
+            .repeat()
+            .distribute(service=svc, processing_mode="dynamic", job_name="heavy")
+        )
+        light = (
+            Dataset.range(100_000)
+            .map(_slow, t=0.01)
+            .batch(2)
+            .repeat()
+            .distribute(service=svc, processing_mode="dynamic", job_name="light")
+        )
+        stop = threading.Event()
+        threads, sessions = [], []
+        try:
+            for dds, pace in ((heavy, 0.04), (light, 0.08)):
+                session = dds.session(heartbeat_interval=0.1, buffer_size=4)
+                sessions.append(session)
+                th = threading.Thread(
+                    target=_consume,
+                    args=(session, pace, stop, {"steps": 0}),
+                    daemon=True,
+                )
+                th.start()
+                threads.append(th)
+            # two-level autoscaler with a pinned pool: every step runs one
+            # share-rebalancing round; the pool itself cannot move
+            scaler = Autoscaler(
+                svc.orchestrator,
+                AutoscalerConfig(
+                    min_workers=8, max_workers=8, interval_s=0.15, cooldown_s=0.0
+                ),
+            ).start()
+            try:
+                def shares():
+                    jobs = svc.orchestrator.stats()["jobs"]
+                    by_name = {j["name"]: j["active_tasks"] for j in jobs.values()}
+                    return by_name.get("heavy", 0), by_name.get("light", 0)
+
+                ok = _wait_for(
+                    lambda: (lambda h, l: h >= 2 * l and h >= 4 and l >= 1)(
+                        *shares()
+                    ),
+                    timeout=30.0,
+                    consecutive=3,
+                )
+                h, l = shares()
+                assert ok, f"no convergence: heavy={h} light={l}"
+                assert h >= 2 * l and h >= 4, (h, l)
+            finally:
+                scaler.stop()
+        finally:
+            stop.set()
+            for s in sessions:
+                s.close()
+            for th in threads:
+                th.join(timeout=5.0)
+
+    def test_finishing_heavy_job_releases_workers_to_light(
+        self, service_factory
+    ):
+        svc = service_factory(
+            num_workers=4, scheduling=True, worker_buffer_size=2
+        )
+        # finite job a (both jobs starving: unpaced consumers), infinite b
+        a = (
+            Dataset.range(240)
+            .map(_slow, t=0.02)
+            .batch(2)
+            .distribute(service=svc, processing_mode="dynamic", job_name="a")
+        )
+        b = (
+            Dataset.range(100_000)
+            .map(_slow, t=0.03)
+            .batch(2)
+            .repeat()
+            .distribute(service=svc, processing_mode="dynamic", job_name="b")
+        )
+        stop = threading.Event()
+        threads, sessions = [], []
+        try:
+            for dds in (a, b):
+                session = dds.session(heartbeat_interval=0.1, buffer_size=4)
+                sessions.append(session)
+                th = threading.Thread(
+                    target=_consume,
+                    args=(session, 0.0, stop, {"steps": 0}),
+                    daemon=True,
+                )
+                th.start()
+                threads.append(th)
+
+            def tick():
+                svc.orchestrator.rebalance()
+
+            def jobs():
+                return {
+                    j["name"]: j for j in svc.orchestrator.stats()["jobs"].values()
+                }
+
+            def job(name):
+                # consumers register asynchronously: absent = not yet there
+                return jobs().get(name, {"active_tasks": 0, "finished": False})
+
+            # while both run, b is squeezed to roughly half the fleet
+            assert _wait_for(
+                lambda: (tick() or True)
+                and job("b")["active_tasks"] in (1, 2, 3),
+                timeout=15.0,
+            )
+            # once a finishes, rebalancing hands its workers to b
+            assert _wait_for(
+                lambda: (tick() or True)
+                and job("a")["finished"]
+                and job("b")["active_tasks"] >= 3,
+                timeout=45.0,
+                consecutive=2,
+            ), f"jobs: {jobs()}"
+        finally:
+            stop.set()
+            for s in sessions:
+                s.close()
+            for th in threads:
+                th.join(timeout=5.0)
+
+
+class TestRetireTaskTeardown:
+    def test_retired_task_runner_is_torn_down(self, service_factory):
+        svc = service_factory(
+            num_workers=2, worker_heartbeat_interval=0.1, scheduling=True
+        )
+        dds = (
+            Dataset.range(100_000)
+            .map(_slow, t=0.01)
+            .batch(2)
+            .repeat()
+            .distribute(service=svc, processing_mode="off", job_name="j")
+        )
+        session = dds.session()
+        it = iter(session)
+        next(it)
+        d = svc.orchestrator.dispatcher
+        job = next(iter(d._jobs.values()))
+        assert _wait_for(
+            lambda: sum(len(w._tasks) for w in svc.orchestrator.live_workers) == 2,
+            timeout=10.0,
+        )
+        task_id = next(iter(job.tasks))
+        assert d.rpc_retire_task(task_id=task_id)["ok"]
+        # worker-side runner teardown rides the heartbeat (valid_tasks)
+        assert _wait_for(
+            lambda: sum(len(w._tasks) for w in svc.orchestrator.live_workers) == 1,
+            timeout=10.0,
+        )
+        # the client's view drops the retired task too
+        assert _wait_for(lambda: len(session._tasks) == 1 or any(
+            h.failed for h in session._tasks.values()
+        ), timeout=10.0)
+        session.close()
