@@ -1,0 +1,180 @@
+"""Dispatcher HA: failover downtime and recovery replay time.
+
+A journaled deployment with a hot standby tailing the primary's journal
+serves a DYNAMIC job; the primary is crashed mid-run.  Measured (tier
+``real``, wall clock on this machine):
+
+  ha/failover_downtime_s — crash to standby promotion (lease-expiry
+      detection + final journal catch-up).  The paper's §3.4 argument is
+      that clients/workers ride through this window; the rows below bound
+      how long that window actually is.
+  ha/promote_replay_s    — the catch-up portion alone: replaying journal
+      records the replication stream had not yet applied at crash time.
+  ha/catchup_records     — how many records that was.
+  ha/cold_restart_s      — what a journal-replay-from-scratch restart of
+      the same state costs, the no-standby alternative the hot standby is
+      amortizing away.
+  ha/drain_gap_s         — longest inter-batch gap a live consumer saw
+      across the failover (client-observed downtime).
+
+Run:  PYTHONPATH=src python benchmarks/ha.py [--quick]
+Emits BENCH_ha.json (machine-readable trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import CrashPoints, LocalOrchestrator  # noqa: E402
+from repro.core.dispatcher import Dispatcher  # noqa: E402
+from repro.data import Dataset, register  # noqa: E402
+
+try:
+    from .common import Row, print_rows, write_bench_json
+except ImportError:
+    from common import Row, print_rows, write_bench_json  # noqa: E402
+
+LEASE_TIMEOUT = 0.4
+N_ELEMENTS = 600
+
+
+@register("ha_bench_slow")
+def ha_bench_slow(x, *, delay=0.002):
+    if delay:
+        time.sleep(delay)
+    return x
+
+
+def _one_failover() -> Dict[str, float]:
+    orch = LocalOrchestrator(
+        num_workers=2,
+        journal=True,
+        heartbeat_timeout=0.8,
+        gc_interval=0.1,
+        worker_heartbeat_interval=0.1,
+        lease_timeout=LEASE_TIMEOUT,
+        replication_interval=0.02,
+        crash_points=CrashPoints(),
+    )
+    svc = orch.start()
+    out: List[int] = []
+    gaps: List[float] = []
+    try:
+        orch.arm_standby()
+
+        def consume() -> None:
+            dds = (
+                Dataset.range(N_ELEMENTS)
+                .map(ha_bench_slow, delay=0.002)
+                .batch(2)
+                .distribute(
+                    service=svc,
+                    processing_mode="dynamic",
+                    job_name="ha-bench",
+                    resume_offsets=True,
+                )
+            )
+            last = time.monotonic()
+            for b in dds:
+                now = time.monotonic()
+                gaps.append(now - last)
+                last = now
+                out.extend(int(v) for v in np.ravel(b))
+
+        th = threading.Thread(target=consume)
+        th.start()
+        time.sleep(0.4)  # mid-run: shards in flight, journal warm
+        t_crash = time.monotonic()
+        orch.crash_dispatcher()
+        assert orch.wait_for_failover(30.0), "standby never promoted"
+        downtime = time.monotonic() - t_crash
+        stats = dict(orch.standby.promote_stats)
+        th.join(timeout=60)
+        assert not th.is_alive(), "consumer wedged after failover"
+        assert sorted(out) == list(range(N_ELEMENTS)), (
+            f"exactly-once violated: {len(out)} delivered, "
+            f"{len(out) - len(set(out))} dups"
+        )
+        # cold-restart comparison: replay the promoted journal from scratch.
+        # Copy it first — the promoted dispatcher still owns the live file.
+        with tempfile.TemporaryDirectory() as td:
+            jcopy = os.path.join(td, "journal.bin")
+            shutil.copy(orch._journal_path, jcopy)
+            t0 = time.perf_counter()
+            cold = Dispatcher(journal_path=jcopy)
+            cold_s = time.perf_counter() - t0
+            cold.close()
+        return {
+            "downtime_s": downtime,
+            "promote_s": float(stats.get("promote_s", 0.0)),
+            "catchup_records": float(stats.get("catchup_records", 0)),
+            "cold_restart_s": cold_s,
+            "drain_gap_s": max(gaps) if gaps else 0.0,
+        }
+    finally:
+        orch.stop()
+
+
+def main(quick: bool = False) -> List[Row]:
+    runs = 2 if quick else 5
+    samples = [_one_failover() for _ in range(runs)]
+
+    def mean(key: str) -> float:
+        return sum(s[key] for s in samples) / len(samples)
+
+    rows = [
+        Row(
+            "ha/failover_downtime_s",
+            mean("downtime_s"),
+            "s",
+            "real",
+            f"crash->promotion, lease={LEASE_TIMEOUT}s, {runs} runs",
+        ),
+        Row(
+            "ha/promote_replay_s",
+            mean("promote_s"),
+            "s",
+            "real",
+            "final journal catch-up during promotion",
+        ),
+        Row(
+            "ha/catchup_records",
+            mean("catchup_records"),
+            "records",
+            "real",
+            "journal records behind at crash time",
+        ),
+        Row(
+            "ha/cold_restart_s",
+            mean("cold_restart_s"),
+            "s",
+            "real",
+            "full journal replay from scratch (no-standby alternative)",
+        ),
+        Row(
+            "ha/drain_gap_s",
+            mean("drain_gap_s"),
+            "s",
+            "real",
+            "longest inter-batch gap a consumer saw across failover",
+        ),
+    ]
+    print_rows(rows, "Dispatcher HA failover")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    write_bench_json("ha", main(quick=args.quick))

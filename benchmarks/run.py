@@ -29,6 +29,7 @@ SUITES = (
     ("Snapshot_materialization", "benchmarks.snapshot"),
     ("feed", "benchmarks.feed"),
     ("multi_job", "benchmarks.multi_job"),
+    ("ha", "benchmarks.ha"),
 )
 
 
@@ -89,6 +90,8 @@ def main() -> None:
          get("feed", "feed/speedup")),
         ("§3 fleet scheduler right-sizes per job (agg. vs all-on-all)", ">=1x",
          get("multi_job", "multi_job/aggregate_ratio")),
+        ("§3.4 dispatcher failover downtime (s, hot standby)", "~lease",
+         get("ha", "ha/failover_downtime_s")),
     )
     w = max(len(c[0]) for c in claims) + 2
     print(f"{'claim':{w}s} {'paper':>8s}  {'ours':>16s}")

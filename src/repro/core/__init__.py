@@ -7,26 +7,30 @@ from .cache import SlidingWindowCache
 from .client import DataServiceClient, DistributedDataset, materialize
 from .codecs import available_codecs, register_codec, resolve_codec
 from .cost import CostRates, GCP_RATES, JobResources, cost_saving, job_cost
-from .dispatcher import Dispatcher
-from .journal import Journal
+from .dispatcher import CrashPoints, Dispatcher, DispatcherCrashed, StandbyDispatcher
+from .journal import Journal, JournalVersionError
 from .protocol import FetchStatus, ShardingPolicy, TaskSpec, VisitationGuarantee
 from .scheduler import FleetScheduler, JobDemand, SchedulerConfig
 from .service import LocalOrchestrator, ServiceHandle, start_service
 from .sharding import ShardManager, guarantee_for
-from .transport import GrpcServer, Stub, TCPServer, TransportError
+from .transport import Backoff, GrpcServer, Stub, TCPServer, TransportError
 from .worker import Worker
 
 __all__ = [
     "Autoscaler",
     "AutoscalerConfig",
+    "Backoff",
     "CostRates",
+    "CrashPoints",
     "DataServiceClient",
     "Dispatcher",
+    "DispatcherCrashed",
     "DistributedDataset",
     "FetchStatus",
     "FleetScheduler",
     "GCP_RATES",
     "Journal",
+    "JournalVersionError",
     "JobDemand",
     "JobResources",
     "LocalOrchestrator",
@@ -36,6 +40,7 @@ __all__ = [
     "ShardManager",
     "ShardingPolicy",
     "SlidingWindowCache",
+    "StandbyDispatcher",
     "GrpcServer",
     "Stub",
     "TCPServer",

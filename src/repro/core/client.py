@@ -43,7 +43,7 @@ from .protocol import (
     new_id,
 )
 from .codecs import available_codecs
-from .transport import Stub, TransportError, decompress
+from .transport import Backoff, Stub, TransportError, decompress
 
 
 @dataclass
@@ -236,7 +236,11 @@ class DataServiceClient:
         self._feed_stats = dict(stats)
 
     def _heartbeat_loop(self) -> None:
-        while not self._closed.wait(self._hb_interval):
+        backoff = Backoff(
+            base=self._hb_interval, cap=max(1.0, 4 * self._hb_interval)
+        )
+        delay = self._hb_interval
+        while not self._closed.wait(delay):
             try:
                 kw: Dict[str, Any] = dict(
                     job_id=self._job_id, client_id=self.client_id
@@ -252,7 +256,12 @@ class DataServiceClient:
                 view = self._dispatcher.call("client_heartbeat", **kw)
                 self._sync_tasks(view)
             except TransportError:
-                continue  # dispatcher down: keep consuming from workers (§3.4)
+                # dispatcher down: keep consuming from workers (§3.4);
+                # jittered backoff avoids stampeding a promoted standby
+                delay = backoff.next_delay()
+                continue
+            backoff.reset()
+            delay = self._hb_interval
             if self._job_finished.is_set():
                 return
 

@@ -1,0 +1,26 @@
+"""Dispatcher package: control plane, committer, fleet scheduling, HA.
+
+Split from a single-module dispatcher so state transitions have narrow,
+testable seams:
+
+  * ``state``       — in-memory records (_Dataset, _Job, _Worker)
+  * ``control``     — datasets, jobs, workers, DYNAMIC shard hand-out
+  * ``committer``   — snapshot streams and fsync'd chunk commits
+  * ``fleet``       — multi-tenant fleet-scheduling integration
+  * ``core``        — the composed :class:`Dispatcher` + journal replay
+  * ``replica``     — :class:`StandbyDispatcher` (hot-standby failover)
+  * ``crashpoints`` — chaos-harness crash injection
+
+``from repro.core.dispatcher import Dispatcher`` keeps working unchanged.
+"""
+from .core import Dispatcher
+from .crashpoints import CrashPoints, DispatcherCrashed
+from .replica import StandbyDispatcher
+from .state import _Dataset, _Job, _Worker
+
+__all__ = [
+    "Dispatcher",
+    "StandbyDispatcher",
+    "CrashPoints",
+    "DispatcherCrashed",
+]

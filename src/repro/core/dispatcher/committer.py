@@ -1,0 +1,386 @@
+"""Dispatcher snapshot committer (repro.snapshot integration).
+
+``CommitterMixin`` owns the materialization control plane: stream
+partitioning and assignment, fsync'd chunk-commit acknowledgements, stream
+completion, and finalization.  ``apply_committer_event`` replays the same
+transitions from the journal.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+from ...data.graph import Graph
+from ...snapshot.format import write_done, write_metadata
+from ...snapshot.manager import (
+    SnapshotState,
+    StreamState,
+    apply_chunk_committed,
+    partition_streams,
+)
+from ..codecs import resolve_codec
+from ..protocol import DEFAULT_CHUNK_BYTES, new_id
+from .state import _Worker
+
+
+class CommitterMixin:
+    # ------------------------------------------------------------------
+    # Snapshots / materialization (repro.snapshot): the committer layer
+    # ------------------------------------------------------------------
+    def rpc_start_snapshot(
+        self,
+        path: str,
+        dataset_id: Optional[str] = None,
+        graph_bytes: Optional[bytes] = None,
+        num_streams: int = 0,
+        compression: Optional[str] = None,
+        client_codecs: Optional[List[str]] = None,
+        chunk_bytes: int = 0,
+        seed_base: int = 0,
+        replace_stale_s: Optional[float] = None,
+    ) -> Dict[str, Any]:
+        """Get-or-start materializing a dataset to ``path`` (idempotent
+        per (path, pipeline fingerprint)).
+
+        Partitions the source into ``num_streams`` streams (default: one
+        per registered worker), journals the plan, and assigns streams to
+        workers round-robin; workers receive their assignments via
+        heartbeat and start appending committed chunks.
+
+        A path already holding a DIFFERENT pipeline's snapshot is an error
+        (manifests merge by seq — mixing pipelines would silently
+        interleave their batches).  A path with an unfinished snapshot no
+        dispatcher tracks (a dead deployment's partial write) is refused
+        unless ``replace_stale_s`` is given and the write has been idle at
+        least that long, in which case the stale directory is cleared and
+        the snapshot restarts.
+        """
+        from ...snapshot.format import read_metadata
+        from ...snapshot.reader import last_progress_unix, snapshot_finished
+
+        with self._lock:
+            path = os.path.abspath(path)
+            if dataset_id is None:
+                if graph_bytes is None:
+                    raise ValueError("start_snapshot needs dataset_id or graph_bytes")
+                dataset_id = self.rpc_get_or_register_dataset(graph_bytes)["dataset_id"]
+            ds = self._datasets[dataset_id]
+            if path in self._snapshots_by_path:
+                snap = self._snapshots[self._snapshots_by_path[path]]
+                if snap.fingerprint != ds.fingerprint:
+                    raise ValueError(
+                        f"snapshot path {path} already materializes pipeline "
+                        f"{snap.fingerprint}, not {ds.fingerprint} — use a "
+                        f"different path per pipeline"
+                    )
+                return dict(snap.view(), existing=True)
+            meta = read_metadata(path)
+            if meta is not None:  # on-disk snapshot this dispatcher doesn't track
+                if meta.get("fingerprint") != ds.fingerprint:
+                    raise ValueError(
+                        f"snapshot path {path} holds pipeline "
+                        f"{meta.get('fingerprint')}, not {ds.fingerprint}"
+                    )
+                if snapshot_finished(path):
+                    # adopt the finished snapshot read-only: report success
+                    from ...snapshot.reader import snapshot_status
+
+                    return dict(snapshot_status(path), existing=True, path=path)
+                idle = time.time() - last_progress_unix(path)
+                if replace_stale_s is None or idle < replace_stale_s:
+                    raise ValueError(
+                        f"snapshot path {path} holds an unfinished write this "
+                        f"dispatcher doesn't track (idle {idle:.0f}s); pass "
+                        f"replace_stale_s to restart it or use a fresh path"
+                    )
+                import shutil
+
+                shutil.rmtree(path, ignore_errors=True)
+            num_streams = int(num_streams) or max(1, len(self._workers))
+            streams = partition_streams(
+                Graph.from_bytes(ds.graph_bytes), num_streams, self._overpartition
+            )
+            payload = {
+                "snapshot_id": new_id("snap"),
+                "path": path,
+                "dataset_id": dataset_id,
+                "fingerprint": ds.fingerprint,
+                "codec": resolve_codec(compression, client_codecs),
+                "chunk_bytes": int(chunk_bytes) or DEFAULT_CHUNK_BYTES,
+                "seed_base": int(seed_base),
+                "streams": streams,
+            }
+            self._journal.append("snapshot_started", payload, sync=True)
+            snap = self._apply_snapshot_started(payload)
+            # initial round-robin assignment over the current worker pool;
+            # workers registering later pick up unassigned streams on
+            # heartbeat (and reassignment after failures does the same)
+            workers = sorted(self._workers)
+            for i, stream in enumerate(snap.streams):
+                if workers:
+                    self._assign_stream(snap, stream, workers[i % len(workers)])
+            return dict(snap.view(), existing=False)
+
+    def _apply_snapshot_started(self, p: Dict[str, Any]) -> SnapshotState:
+        snap = SnapshotState(
+            snapshot_id=p["snapshot_id"],
+            path=p["path"],
+            dataset_id=p["dataset_id"],
+            fingerprint=p["fingerprint"],
+            codec=p.get("codec"),
+            chunk_bytes=p["chunk_bytes"],
+            seed_base=p.get("seed_base", 0),
+            streams=[
+                StreamState(stream_id=i, shards=shards)
+                for i, shards in enumerate(p["streams"])
+            ],
+        )
+        self._snapshots[snap.snapshot_id] = snap
+        self._snapshots_by_path[snap.path] = snap.snapshot_id
+        # idempotent: (re)write the immutable on-disk metadata so readers on
+        # the shared FS can discover the snapshot without the dispatcher
+        write_metadata(
+            snap.path,
+            snap.snapshot_id,
+            snap.fingerprint,
+            snap.codec,
+            snap.chunk_bytes,
+            len(snap.streams),
+            snap.seed_base,
+        )
+        return snap
+
+    def _assign_stream(
+        self, snap: SnapshotState, stream: StreamState, worker_id: str
+    ) -> None:
+        self._journal.append(
+            "snapshot_stream_assigned",
+            {
+                "snapshot_id": snap.snapshot_id,
+                "stream_id": stream.stream_id,
+                "worker_id": worker_id,
+            },
+        )
+        stream.assigned_to = worker_id
+        # the spec must be (re)shipped with fresh resume state
+        key = (snap.snapshot_id, stream.stream_id)
+        for w in self._workers.values():
+            w.delivered_streams.discard(key)
+
+    def _assign_snapshot_streams(self, worker_id: str) -> None:
+        """Hand unowned streams to a live worker, keeping the load fair.
+
+        Streams lose their owner on worker failure (or were never assigned
+        because no worker was registered at start).  Each heartbeat tops the
+        calling worker up to its fair share of the remaining streams.  A
+        stream whose recorded owner has not (re-)registered is NOT up for
+        grabs here: after a dispatcher restart the owner usually comes back
+        within a heartbeat, and the orphan sweep reclaims it after the
+        grace period if it doesn't (stealing a live writer's stream would
+        force a pointless re-production of its whole uncommitted suffix).
+        """
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            unowned = [s for s in snap.streams if not s.done and s.assigned_to is None]
+            if not unowned:
+                continue
+            fair = -(-len(snap.undone_streams()) // max(1, len(self._workers)))
+            owned = len(snap.streams_for_worker(worker_id))
+            for s in unowned:
+                if owned >= fair:
+                    break
+                self._assign_stream(snap, s, worker_id)
+                owned += 1
+
+    def _undelivered_snapshot_streams(self, w: _Worker) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            ds = self._datasets[snap.dataset_id]
+            for s in snap.streams:
+                if s.done or s.assigned_to != w.info.worker_id:
+                    continue
+                key = (snap.snapshot_id, s.stream_id)
+                if key in w.delivered_streams:
+                    continue
+                w.delivered_streams.add(key)
+                out.append(snap.stream_spec(s, ds.graph_bytes))
+        return out
+
+    def rpc_snapshot_commit_chunk(
+        self,
+        snapshot_id: str,
+        stream_id: int,
+        worker_id: str,
+        seq: int,
+        count: int,
+        nbytes: int = 0,
+    ) -> Dict[str, Any]:
+        """Acknowledge one committed chunk (journaled with fsync BEFORE the
+        ack — the ack is the writer's license to treat the chunk as durable
+        committer state).  A non-owner report means the stream was
+        reassigned: the (zombie) writer must stop."""
+        with self._lock:
+            snap = self._snapshots.get(snapshot_id)
+            if snap is None or stream_id >= len(snap.streams):
+                return {"ok": False, "reassigned": True}
+            stream = snap.streams[stream_id]
+            if stream.done or stream.assigned_to != worker_id:
+                return {"ok": False, "reassigned": True}
+            if seq < stream.next_seq:
+                return {"ok": True, "dup": True}  # redelivered report
+            if seq != stream.next_seq:
+                # gap: acks for earlier chunks are still in flight (queued
+                # worker-side while the dispatcher was down, draining via
+                # heartbeat) — tell the writer to re-queue this one BEHIND
+                # them rather than treating the stream as lost
+                return {"ok": False, "retry": True}
+            self._crash("commit_chunk.pre")
+            self._journal.append(
+                "snapshot_chunk_committed",
+                {
+                    "snapshot_id": snapshot_id,
+                    "stream_id": stream_id,
+                    "seq": seq,
+                    "count": count,
+                    "nbytes": nbytes,
+                },
+                sync=True,
+            )
+            self._crash("commit_chunk.journaled")
+            apply_chunk_committed(stream, seq, count, nbytes)
+            return {"ok": True}
+
+    def rpc_snapshot_stream_done(
+        self, snapshot_id: str, stream_id: int, worker_id: str
+    ) -> Dict[str, Any]:
+        with self._lock:
+            snap = self._snapshots.get(snapshot_id)
+            if snap is None or stream_id >= len(snap.streams):
+                return {"ok": False, "reassigned": True}
+            stream = snap.streams[stream_id]
+            if stream.done:
+                return {"ok": True, "dup": True}
+            if stream.assigned_to != worker_id:
+                return {"ok": False, "reassigned": True}
+            self._journal.append(
+                "snapshot_stream_done",
+                {"snapshot_id": snapshot_id, "stream_id": stream_id},
+                sync=True,
+            )
+            self._apply_stream_done(snap, stream_id)
+            return {"ok": True}
+
+    def _apply_stream_done(self, snap: SnapshotState, stream_id: int) -> None:
+        stream = snap.streams[stream_id]
+        stream.done = True
+        stream.assigned_to = None
+        if snap.all_streams_done and not snap.finished:
+            self._journal.append(
+                "snapshot_finished", {"snapshot_id": snap.snapshot_id}, sync=True
+            )
+            self._finalize_snapshot(snap)
+
+    def _finalize_snapshot(self, snap: SnapshotState) -> None:
+        snap.finished = True
+        # the DONE marker is what detached readers key "finished" off;
+        # idempotent so a restored dispatcher can re-run it
+        write_done(snap.path, snap.summary())
+
+    def rpc_snapshot_status(
+        self, snapshot_id: Optional[str] = None, path: Optional[str] = None
+    ) -> Dict[str, Any]:
+        with self._lock:
+            if snapshot_id is None and path is not None:
+                snapshot_id = self._snapshots_by_path.get(os.path.abspath(path))
+            snap = self._snapshots.get(snapshot_id or "")
+            if snap is None:
+                return {"exists": False, "finished": False}
+            return dict(snap.view(), exists=True)
+
+    def _release_failed_stream(
+        self, snapshot_id: str, stream_id: int, worker_id: str
+    ) -> None:
+        snap = self._snapshots.get(snapshot_id)
+        if snap is None or snap.finished or stream_id >= len(snap.streams):
+            return
+        stream = snap.streams[stream_id]
+        if stream.done or stream.assigned_to != worker_id:
+            return
+        self._journal.append(
+            "snapshot_stream_released",
+            {"snapshot_id": snapshot_id, "stream_id": stream_id},
+        )
+        stream.assigned_to = None
+        key = (snapshot_id, stream_id)
+        for w in self._workers.values():
+            w.delivered_streams.discard(key)
+        # reassignment happens via _assign_snapshot_streams on the next
+        # heartbeat of any worker (including the one that just failed)
+
+    def _release_worker_streams(self, worker_id: str) -> None:
+        """Worker died: orphan its streams and reassign them immediately so
+        materialization continues (replacements resume at the committed
+        offset — the journal has every acknowledged chunk)."""
+        survivors = sorted(self._workers)
+        i = 0
+        for snap in self._snapshots.values():
+            if snap.finished:
+                continue
+            for s in snap.streams:
+                if s.assigned_to == worker_id and not s.done:
+                    self._journal.append(
+                        "snapshot_stream_released",
+                        {"snapshot_id": snap.snapshot_id, "stream_id": s.stream_id},
+                    )
+                    s.assigned_to = None
+                    if survivors:
+                        self._assign_stream(snap, s, survivors[i % len(survivors)])
+                        i += 1
+
+    # ------------------------------------------------------------------
+    # Journal replay (committer events)
+    # ------------------------------------------------------------------
+    def apply_committer_event(self, etype: str, p: Dict[str, Any]) -> bool:
+        """Apply one replayed committer event.  Returns False for event
+        types this module does not own.  Caller holds ``self._lock``."""
+        if etype == "snapshot_started":
+            self._apply_snapshot_started(p)
+        elif etype == "snapshot_stream_assigned":
+            snap = self._snapshots.get(p["snapshot_id"])
+            if snap is not None:
+                # keep the assignment: a live writer continues
+                # seamlessly; a dead one is reclaimed by the orphan
+                # sweep / check_workers like in-flight shards
+                snap.streams[p["stream_id"]].assigned_to = p["worker_id"]
+        elif etype == "snapshot_stream_released":
+            snap = self._snapshots.get(p["snapshot_id"])
+            if snap is not None:
+                snap.streams[p["stream_id"]].assigned_to = None
+        elif etype == "snapshot_chunk_committed":
+            snap = self._snapshots.get(p["snapshot_id"])
+            if snap is not None:
+                apply_chunk_committed(
+                    snap.streams[p["stream_id"]],
+                    p["seq"],
+                    p["count"],
+                    p.get("nbytes", 0),
+                )
+        elif etype == "snapshot_stream_done":
+            snap = self._snapshots.get(p["snapshot_id"])
+            if snap is not None:
+                stream = snap.streams[p["stream_id"]]
+                stream.done = True
+                stream.assigned_to = None
+        elif etype == "snapshot_finished":
+            snap = self._snapshots.get(p["snapshot_id"])
+            if snap is not None:
+                # re-runs write_done: idempotent, covers a crash
+                # between the journal append and the DONE marker
+                self._finalize_snapshot(snap)
+        else:
+            return False
+        return True

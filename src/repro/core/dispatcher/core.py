@@ -1,0 +1,358 @@
+"""The tf.data-service dispatcher (paper §3.1, §3.3, §3.4).
+
+Control plane only — never touches data.  Composed from three seams:
+  * :class:`ControlPlaneMixin` — datasets, jobs, workers, shard hand-out,
+  * :class:`CommitterMixin` — snapshot streams and chunk commits,
+  * :class:`FleetMixin` — multi-tenant fleet scheduling,
+plus the pieces this module keeps: the RPC entry point, the write-ahead
+journal restore/compaction, the replication RPC a hot standby tails
+(``rpc_journal_fetch``), and crash-point instrumentation for the chaos
+harness.
+
+Threading model: a single lock guards dispatcher state (control-plane calls
+are small and rare relative to data-plane traffic, which goes directly from
+clients to workers — the dispatcher is deliberately off the data path).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Optional
+
+from ...data.graph import Graph
+from ...snapshot.manager import SnapshotState
+from ...snapshot.policy import AutocacheConfig, AutocachePolicy
+from ..journal import Journal
+from ..scheduler import FleetScheduler, SchedulerConfig
+from ..sharding import ShardManager
+from .committer import CommitterMixin
+from .control import ControlPlaneMixin
+from .crashpoints import CrashPoints, DispatcherCrashed
+from .fleet import FleetMixin
+from .state import _Dataset, _Job, _Worker
+
+
+class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
+    def __init__(
+        self,
+        journal_path: Optional[str] = None,
+        heartbeat_timeout: float = 5.0,
+        overpartition: int = 4,
+        snapshot_root: Optional[str] = None,
+        autocache_config: Optional[AutocacheConfig] = None,
+        scheduling: bool = False,
+        scheduler_config: Optional[SchedulerConfig] = None,
+        crash_points: Optional[CrashPoints] = None,
+        standby: bool = False,
+    ):
+        self._lock = threading.RLock()
+        self._datasets: Dict[str, _Dataset] = {}
+        self._datasets_by_fp: Dict[str, str] = {}
+        self._jobs: Dict[str, _Job] = {}
+        self._jobs_by_name: Dict[str, str] = {}
+        self._workers: Dict[str, _Worker] = {}
+        self._snapshots: Dict[str, SnapshotState] = {}
+        self._snapshots_by_path: Dict[str, str] = {}
+        # autocache: jobs opting in get a compute / write-through / read
+        # decision keyed by pipeline fingerprint (requires snapshot_root)
+        self._autocache: Optional[AutocachePolicy] = (
+            AutocachePolicy(snapshot_root, autocache_config)
+            if snapshot_root
+            else None
+        )
+        # multi-tenant fleet scheduling: when enabled, schedulable jobs get
+        # a demand-driven worker SHARE (weighted max-min fair) instead of a
+        # task on every worker; rebalance() is the entry point (driven by
+        # the two-level Autoscaler, or called directly)
+        self._scheduler: Optional[FleetScheduler] = (
+            FleetScheduler(scheduler_config) if scheduling else None
+        )
+        self._worker_list_version = 0
+        self._heartbeat_timeout = heartbeat_timeout
+        self._overpartition = overpartition
+        # set after a journal restore that found shards assigned to workers
+        # not (yet) re-registered: those workers get one heartbeat-timeout of
+        # grace to come back before their in-flight shards are reclaimed
+        self._orphan_sweep_deadline: Optional[float] = None
+        # set after a journal restore that found jobs with tasks: until it
+        # expires, capped/scheduled jobs count their JOURNALED tasks (not
+        # just re-registered workers' tasks) so a worker that registers
+        # before its peers cannot steal a slot a returning owner will
+        # reclaim — allocations must survive the restart intact
+        self._task_grace_deadline: Optional[float] = None
+        # (job_id, worker_id) -> armed: shard reclamation deferred until
+        # one heartbeat AFTER the one that tears the retired runner down.
+        # A retired worker is ALIVE (unlike the worker-failure path) and
+        # keeps serving its in-flight shard until the prune; re-queuing
+        # that shard immediately would have a replacement replay it
+        # concurrently (duplicate rows under resume_offsets).
+        self._pending_reclaims: Dict[Any, bool] = {}
+        # chaos harness: named crash points armed by tests; None in
+        # production (every _crash() call is then a no-op)
+        self._crash_points = crash_points
+        self._failed = False
+        self._journal = Journal(journal_path)
+        if journal_path:
+            # a standby replays the stream incrementally and runs the
+            # post-restore fixups only at promotion (finalize_restore)
+            self._restore(journal_path, finalize=not standby)
+        if standby:
+            self._journal.set_mirror(True)
+
+    # ------------------------------------------------------------------
+    # RPC entry point
+    # ------------------------------------------------------------------
+    def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        if self._failed:
+            raise DispatcherCrashed("dispatcher crashed")
+        fn = getattr(self, f"rpc_{method}", None)
+        if fn is None:
+            raise ValueError(f"dispatcher: unknown method {method}")
+        return fn(**payload)
+
+    # ------------------------------------------------------------------
+    # Crash injection (chaos harness)
+    # ------------------------------------------------------------------
+    def _crash(self, point: str) -> None:
+        if self._crash_points is not None:
+            self._crash_points.hit(point)
+
+    def fail(self) -> None:
+        """Simulate process death: reject every further call.
+
+        The journal file handle is left OPEN on purpose — a real crashed
+        process simply stops writing; in-flight handler threads racing the
+        crash must not hit a closed-file error that escapes the
+        TransportError retry contract.
+        """
+        self._failed = True
+
+    # ------------------------------------------------------------------
+    # Replication (hot standby tails the journal)
+    # ------------------------------------------------------------------
+    def rpc_journal_fetch(
+        self, after_seq: int = 0, max_records: int = 512
+    ) -> Dict[str, Any]:
+        """Stream journal records with seq > ``after_seq`` to a standby.
+
+        Reads the journal FILE without taking the dispatcher lock: appends
+        only ever add complete records ahead of the reader, and a torn tail
+        (crash mid-write) just ends the batch early — the standby re-polls.
+        """
+        path = self._journal.path
+        if path is None:
+            return {"events": [], "seq": self._journal.seq}
+        events = Journal.read_after(path, int(after_seq), int(max_records))
+        return {"events": events, "seq": self._journal.seq}
+
+    # ------------------------------------------------------------------
+    # Journal restore (paper §3.4: replay on restart / standby tail)
+    # ------------------------------------------------------------------
+    def apply_event(self, seq: int, etype: str, p: Dict[str, Any]) -> None:
+        """Apply one journal event to in-memory state (caller holds
+        ``self._lock``).  Shared by restart replay and the standby tail."""
+        self._journal.set_seq(seq)
+        if etype == "snapshot":
+            # compaction record: full state payload replaces everything
+            # replayed so far (only ever first in a file, but a standby
+            # can observe one mid-stream after a primary compaction)
+            self._reset_state()
+            self._restore_snapshot(p)
+            return
+        if self.apply_control_event(etype, p):
+            return
+        if self.apply_committer_event(etype, p):
+            return
+        # worker_registered/worker_removed: workers are transient; they
+        # re-register via heartbeat after a dispatcher restart.  Tasks
+        # and in-flight shard assignments are preserved verbatim: live
+        # workers continue seamlessly.  Workers that DON'T come back
+        # are invisible to check_workers (not in self._workers), so
+        # finalize_restore arms the orphan sweep: one heartbeat-timeout
+        # of grace, then their in-flight shards are reclaimed.
+
+    def _reset_state(self) -> None:
+        self._datasets.clear()
+        self._datasets_by_fp.clear()
+        self._jobs.clear()
+        self._jobs_by_name.clear()
+        self._snapshots.clear()
+        self._snapshots_by_path.clear()
+        self._pending_reclaims.clear()
+
+    def _restore(self, path: str, finalize: bool = True) -> None:
+        events = list(Journal.replay(path))
+        if not events:
+            return
+        with self._lock:
+            for seq, etype, p in events:
+                self.apply_event(seq, etype, p)
+            if finalize:
+                self.finalize_restore()
+
+    def finalize_restore(self) -> None:
+        """Post-replay fixups that assume the replayed state is now LIVE.
+
+        Run after a restart's full replay, or at standby promotion (not
+        while tailing: e.g. a half-finished snapshot would be "finalized"
+        by the standby while the primary's writers are still appending).
+        Caller holds ``self._lock``.
+        """
+        # crash window between the last stream_done and snapshot_finished:
+        # finish the finalization the dead dispatcher never got to
+        for snap in self._snapshots.values():
+            if snap.all_streams_done and not snap.finished:
+                self._journal.append(
+                    "snapshot_finished", {"snapshot_id": snap.snapshot_id}, sync=True
+                )
+                self._finalize_snapshot(snap)
+        # fleet scheduling: allocations survive the restart — the
+        # replayed grant/retire history IS the allocation, so seed each
+        # job's share from it (re-registering workers reclaim exactly
+        # their journaled tasks; rebalance() adjusts from there)
+        if self._scheduler is not None:
+            for job in self._jobs.values():
+                if self._schedulable(job) and job.tasks:
+                    live = [
+                        t
+                        for t in job.tasks.values()
+                        if t.task_id not in job.completed_tasks
+                    ]
+                    if live:
+                        job.target_share = len(live)
+        if any(
+            st.assigned_to and not st.completed
+            for job in self._jobs.values()
+            if job.shard_mgr is not None
+            for st in job.shard_mgr._states
+        ) or any(
+            s.assigned_to and not s.done
+            for snap in self._snapshots.values()
+            if not snap.finished
+            for s in snap.streams
+        ):
+            self._orphan_sweep_deadline = (
+                time.monotonic() + self._heartbeat_timeout
+            )
+        if any(job.tasks and not job.finished for job in self._jobs.values()):
+            self._task_grace_deadline = (
+                time.monotonic() + self._heartbeat_timeout
+            )
+        # shards assigned to a worker holding NO task for the job are a
+        # retirement whose deferred reclaim died with the dispatcher:
+        # re-arm it (the worker's heartbeats drive it; the orphan sweep
+        # covers workers that never come back)
+        for job in self._jobs.values():
+            if job.shard_mgr is None or job.finished:
+                continue
+            with job.shard_mgr._lock:
+                owners = {
+                    st.assigned_to
+                    for st in job.shard_mgr._states
+                    if st.assigned_to and not st.completed
+                }
+            for wid in owners:
+                if wid not in job.tasks_by_worker:
+                    self._pending_reclaims[(job.job_id, wid)] = False
+
+    def _restore_snapshot(self, p: Dict[str, Any]) -> None:
+        for ds in p.get("datasets", []):
+            self._apply_dataset(ds["dataset_id"], ds["graph_bytes"], ds["fingerprint"])
+        for jp in p.get("jobs", []):
+            job = self._apply_job(jp["payload"])
+            job.finished = jp["finished"]
+            if jp.get("shard_mgr") and job.shard_mgr is not None:
+                graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
+                job.shard_mgr = ShardManager.from_payload(graph, jp["shard_mgr"])
+        for sp in p.get("snapshots", []):
+            snap = SnapshotState.from_payload(sp)
+            self._snapshots[snap.snapshot_id] = snap
+            self._snapshots_by_path[snap.path] = snap.snapshot_id
+
+    def snapshot(self) -> None:
+        with self._lock:
+            payload = {
+                "datasets": [vars(d) for d in self._datasets.values()],
+                "jobs": [
+                    {
+                        "payload": {
+                            "job_id": j.job_id,
+                            "job_name": j.job_name,
+                            "dataset_id": j.dataset_id,
+                            "policy": j.policy.value,
+                            "num_consumers": j.num_consumers,
+                            "sharing": j.sharing,
+                            "compression": j.compression,
+                            "max_workers": j.max_workers,
+                            "weight": j.weight,
+                            "resume_offsets": j.resume_offsets,
+                            "autocache_decision": j.autocache_decision,
+                            "target_share": j.target_share,
+                        },
+                        "finished": j.finished,
+                        "shard_mgr": j.shard_mgr.to_payload() if j.shard_mgr else None,
+                    }
+                    for j in self._jobs.values()
+                ],
+                "snapshots": [s.to_payload() for s in self._snapshots.values()],
+            }
+            self._journal.snapshot(payload)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    def rpc_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "num_workers": len(self._workers),
+                "worker_list_version": self._worker_list_version,
+                "num_jobs": len(self._jobs),
+                "jobs": {
+                    j.job_id: {
+                        "name": j.job_name,
+                        "policy": j.policy.value,
+                        "finished": j.finished,
+                        "tasks": len(j.tasks),
+                        "active_tasks": len(self._active_tasks(j)),
+                        "completed_tasks": len(j.completed_tasks),
+                        "weight": j.weight,
+                        "target_share": j.target_share,
+                        "clients": len(j.clients),
+                        "shards": j.shard_mgr.stats() if j.shard_mgr else None,
+                        # feed-side consumer latency (repro.feed reports);
+                        # None until a feeder has reported recently
+                        "client_stall": self._aggregate_client_stall(j),
+                    }
+                    for j in self._jobs.values()
+                },
+                "workers": {
+                    wid: {
+                        "address": w.info.address,
+                        "buffer_occupancy": w.buffer_occupancy,
+                        "cpu_busy": w.cpu_busy,
+                        "cache_stats": w.cache_stats,
+                    }
+                    for wid, w in self._workers.items()
+                },
+                # sharing efficiency per pipeline fingerprint, aggregated
+                # from worker heartbeats (feeds the autocache hot signal)
+                "sharing": {
+                    key: self._aggregate_cache_stats(key)
+                    for key in sorted(
+                        {k for w in self._workers.values() for k in w.cache_stats}
+                    )
+                },
+                "snapshots": {
+                    s.snapshot_id: s.view() for s in self._snapshots.values()
+                },
+            }
+
+    def rpc_list_workers(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "workers": [vars(w.info) for w in self._workers.values()],
+                "version": self._worker_list_version,
+            }
+
+    def close(self) -> None:
+        self._journal.close()

@@ -1,0 +1,60 @@
+"""Named crash-point injection for the chaos harness (tests/chaos.py).
+
+The dispatcher calls ``self._crash("<point>")`` at seams where a crash
+between the journal append and the in-memory apply (or the RPC response)
+exercises the widest torn-state window.  A ``CrashPoints`` registry armed by
+the harness fires at the Nth hit of a named point: it invokes ``on_fire``
+(the orchestrator marks the dispatcher failed and unbinds its transport —
+the process "dies") and raises :class:`DispatcherCrashed`, which subclasses
+``TransportError`` so every existing client/worker retry path rides through
+it exactly as it would a real connection loss.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+from ..transport import TransportError
+
+
+class DispatcherCrashed(TransportError):
+    """The dispatcher crashed (injected fault or post-crash call)."""
+
+
+class CrashPoints:
+    """Countdown-armed named crash points.
+
+    ``arm(point, countdown)`` makes the ``countdown``-th hit of ``point``
+    fire.  Only one crash fires per registry instance — after that every
+    further hit is a no-op (the dispatcher's ``_failed`` gate rejects calls
+    anyway).  Thread-safe: RPCs hit points from many handler threads.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._armed: Dict[str, int] = {}
+        self.on_fire: Optional[Callable[[str], None]] = None
+        self.fired: Optional[str] = None
+        self.hits: Dict[str, int] = {}
+
+    def arm(self, point: str, countdown: int = 1) -> None:
+        with self._lock:
+            self._armed[point] = max(1, int(countdown))
+
+    def hit(self, point: str) -> None:
+        with self._lock:
+            self.hits[point] = self.hits.get(point, 0) + 1
+            if self.fired is not None:
+                return
+            n = self._armed.get(point)
+            if n is None:
+                return
+            if n > 1:
+                self._armed[point] = n - 1
+                return
+            del self._armed[point]
+            self.fired = point
+            cb = self.on_fire
+        if cb is not None:
+            cb(point)
+        raise DispatcherCrashed(f"injected crash at {point!r}")

@@ -1,0 +1,278 @@
+"""Dispatcher fleet-scheduling integration (multi-tenant worker allocation).
+
+``FleetMixin`` realizes the :class:`~repro.scheduler.FleetScheduler`'s
+weighted max-min shares against live dispatcher state: granting tasks on the
+least-loaded workers, retiring them from the most-loaded ones, and running
+the deferred two-heartbeat shard-reclaim protocol that keeps retirement
+exactly-once.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Set
+
+from ..protocol import ShardingPolicy, TaskSpec
+from ..scheduler import JobDemand
+from .state import _Job
+
+
+class FleetMixin:
+    # ------------------------------------------------------------------
+    # Fleet scheduling (multi-tenant worker allocation)
+    # ------------------------------------------------------------------
+    def _schedulable(self, job: _Job) -> bool:
+        """Jobs the fleet scheduler may grow/shrink.
+
+        Coordinated-read jobs stripe rounds over the sorted worker set and
+        STATIC jobs fix their partitions up front — resizing either would
+        break their placement contract, so they keep the task-on-every-
+        worker behavior and pin the fleet instead.
+        """
+        return (
+            not job.finished
+            and job.num_consumers == 0
+            and job.policy != ShardingPolicy.STATIC
+        )
+
+    def _initial_share(self, job: _Job) -> Optional[int]:
+        """Fair-share entry allocation for a newly created job."""
+        capacity = len(self._workers)
+        if capacity == 0:
+            return None  # no fleet yet: first rebalance sets the share
+        demands = [
+            JobDemand(
+                job_id=j.job_id,
+                weight=j.weight,
+                allocated=0 if j is job else len(self._active_tasks(j)),
+                max_workers=j.max_workers,
+            )
+            for j in self._jobs.values()
+            if self._schedulable(j)
+        ]
+        return self._scheduler.plan(capacity, demands).shares.get(job.job_id)
+
+    def rebalance(self) -> Optional[Dict[str, Any]]:
+        """One fleet-scheduling round; returns the plan view or None when
+        scheduling is disabled.
+
+        Each schedulable job's demand is derived from its own fresh
+        ``client_stall`` aggregate; weighted max-min fairness arbitrates
+        the demands over the current fleet, and the dispatcher realizes
+        the resulting shares by granting tasks on the least-loaded workers
+        and retiring tasks from the most-loaded ones.  The returned
+        ``unmet``/``surplus`` feed the two-level Autoscaler: per-job share
+        adjustment happened HERE; the global pool only needs to move when
+        aggregate demand and fleet capacity disagree.
+        """
+        if self._failed:
+            from .crashpoints import DispatcherCrashed
+
+            raise DispatcherCrashed("dispatcher crashed")
+        with self._lock:
+            if self._scheduler is None:
+                return None
+            capacity = len(self._workers)
+            if (
+                self._task_grace_deadline is not None
+                and time.monotonic() < self._task_grace_deadline
+            ):
+                # post-restore grace: journaled task owners are still
+                # re-registering — rebalancing against a half-returned
+                # fleet would shuffle allocations that are about to be
+                # reclaimed verbatim
+                return {
+                    "scheduled": True,
+                    "capacity": capacity,
+                    "demand": 0,
+                    "unmet": 0,
+                    "surplus": 0,
+                    "shares": {},
+                }
+            sched_jobs = [j for j in self._jobs.values() if self._schedulable(j)]
+            if capacity == 0:
+                return {
+                    "scheduled": True,
+                    "capacity": 0,
+                    "demand": len(sched_jobs),
+                    "unmet": len(sched_jobs),
+                    "surplus": 0,
+                    "shares": {},
+                }
+            demands = []
+            for job in sched_jobs:
+                cs = self._aggregate_client_stall(job)
+                demands.append(
+                    JobDemand(
+                        job_id=job.job_id,
+                        weight=job.weight,
+                        allocated=len(self._active_tasks(job)),
+                        max_workers=job.max_workers,
+                        stall_frac=None if cs is None else float(cs["stall_frac"]),
+                    )
+                )
+            plan = self._scheduler.plan(capacity, demands)
+            load = self._worker_load()  # one map, updated as tasks move
+            for job in sched_jobs:
+                target = plan.shares.get(job.job_id)
+                if target is None:
+                    continue
+                job.target_share = target
+                self._apply_share(job, target, load)
+            # unscheduled tenants (coordinated/STATIC jobs, unfinished
+            # snapshots) use the whole fleet: they pin it against scale-in
+            pinned = any(
+                not j.finished and not self._schedulable(j)
+                for j in self._jobs.values()
+            ) or any(not s.finished for s in self._snapshots.values())
+            return {
+                "scheduled": True,
+                "capacity": capacity,
+                "demand": plan.total_demand,
+                "unmet": plan.unmet,
+                "surplus": 0 if pinned else plan.surplus,
+                "shares": dict(plan.shares),
+            }
+
+    def _worker_load(self) -> Dict[str, int]:
+        load = {wid: 0 for wid in self._workers}
+        for j in self._jobs.values():
+            if j.finished:
+                continue
+            for t in self._active_tasks(j):
+                load[t.worker_id] = load.get(t.worker_id, 0) + 1
+        return load
+
+    def _apply_share(
+        self, job: _Job, target: int, load: Optional[Dict[str, int]] = None
+    ) -> None:
+        """Grow/shrink one job's task set toward ``target`` workers.
+
+        ``load`` (per-worker active-task counts) is updated in place as
+        tasks move, so one map computed per rebalance round serves every
+        job's adjustment.
+        """
+        if load is None:
+            load = self._worker_load()
+        active = self._active_tasks(job)
+        if len(active) > target:
+            # victim order: first workers NOT holding an in-flight shard
+            # for this job (cheapest to stop — nothing to re-queue), then
+            # by descending total load (free the contended hosts)
+            inflight: Set[str] = set()
+            if job.shard_mgr is not None:
+                with job.shard_mgr._lock:
+                    inflight = {
+                        st.assigned_to
+                        for st in job.shard_mgr._states
+                        if st.assigned_to and not st.completed
+                    }
+            victims = sorted(
+                active,
+                key=lambda t: (
+                    t.worker_id in inflight,
+                    -load.get(t.worker_id, 0),
+                    t.worker_id,
+                ),
+            )
+            for t in victims[: len(active) - target]:
+                self._retire_task(job, t)
+                load[t.worker_id] = load.get(t.worker_id, 1) - 1
+        elif len(active) < target:
+            have = set(job.tasks_by_worker)
+            free = sorted(
+                (w for wid, w in self._workers.items() if wid not in have),
+                key=lambda w: (load.get(w.info.worker_id, 0), w.info.worker_id),
+            )
+            # iterate past candidates _ensure_task refuses (e.g. a worker
+            # still draining this job's retired task): a blocked candidate
+            # must not burn one of the grant slots
+            need = target - len(active)
+            for w in free:
+                if need <= 0:
+                    break
+                if self._ensure_task(job, w.info) is not None:
+                    load[w.info.worker_id] = load.get(w.info.worker_id, 0) + 1
+                    need -= 1
+
+    def _retire_task(self, job: _Job, task: TaskSpec) -> None:
+        """Shrink a job by one worker (journaled, like task creation).
+
+        The worker tears its runner down on the next heartbeat (the task
+        disappears from ``valid_tasks``) and the client stops fetching
+        when the dispatcher view stops listing it.  The worker's in-flight
+        shards are reclaimed with worker-failure semantics — re-queued at
+        the checkpointed offset with ``resume_offsets``, lost otherwise
+        (the documented at-most-once stance) — but only AFTER the worker's
+        runner has verifiably stopped (one heartbeat after the prune was
+        delivered): the retiree is alive, and re-queuing a shard it is
+        still serving would double-deliver its suffix.  A shard the
+        retiree completes before the prune lands counts as completed.
+        """
+        self._crash("retire_task.pre")
+        self._journal.append(
+            "task_retired", {"job_id": job.job_id, "task_id": task.task_id}
+        )
+        self._crash("retire_task.journaled")
+        self._apply_task_retired(job, task.task_id)
+        if job.shard_mgr is not None:
+            if task.worker_id in self._workers:
+                self._pending_reclaims[(job.job_id, task.worker_id)] = False
+            else:
+                self._reclaim_shards(job, task.worker_id)
+        self._maybe_finish(job)
+
+    def _reclaim_shards(self, job: _Job, worker_id: str) -> None:
+        """Reclaim a drained/retired worker's in-flight shards for one job
+        (worker-failure semantics; callers hold ``self._lock``)."""
+        if job.shard_mgr is None:
+            return
+        for sid in job.shard_mgr.worker_failed(worker_id):
+            self._journal.append(
+                "shard_lost",
+                {"job_id": job.job_id, "shard_id": sid, "worker_id": worker_id},
+            )
+        self._maybe_finish(job)
+
+    def _step_pending_reclaims(self, worker_id: str) -> None:
+        """Advance deferred reclaims on a heartbeat from ``worker_id``.
+
+        The first heartbeat after retirement returns a ``valid_tasks``
+        list without the retired task — the worker prunes the runner on
+        receipt — so the SECOND heartbeat proves the runner is gone and
+        its shards are safe to re-queue.
+        """
+        for key in [k for k in self._pending_reclaims if k[1] == worker_id]:
+            if not self._pending_reclaims[key]:
+                self._pending_reclaims[key] = True
+                continue
+            del self._pending_reclaims[key]
+            job = self._jobs.get(key[0])
+            if job is not None:
+                self._reclaim_shards(job, worker_id)
+
+    def _apply_task_retired(self, job: _Job, task_id: str) -> None:
+        task = job.tasks.pop(task_id, None)
+        if task is None:
+            return
+        if job.tasks_by_worker.get(task.worker_id) == task_id:
+            del job.tasks_by_worker[task.worker_id]
+        job.completed_tasks.discard(task_id)
+
+    def rpc_retire_task(self, task_id: str) -> Dict[str, Any]:
+        """Administrative task retirement (tests / external tooling); the
+        scheduler's rebalance() uses the same journaled path internally.
+
+        Under ``scheduling=True`` the job's target share is pinned to the
+        shrunk allocation so the next heartbeat doesn't re-grant the slot.
+        In a non-scheduling deployment the every-worker-has-a-task
+        invariant re-grants on the next heartbeat — retirement is durable
+        only for capped jobs already at ``max_workers``.
+        """
+        with self._lock:
+            for job in self._jobs.values():
+                if task_id in job.tasks:
+                    self._retire_task(job, job.tasks[task_id])
+                    if self._scheduler is not None and self._schedulable(job):
+                        job.target_share = len(self._active_tasks(job))
+                    return {"ok": True}
+            return {"ok": False}

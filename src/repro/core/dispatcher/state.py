@@ -1,0 +1,65 @@
+"""Dispatcher in-memory state records.
+
+Shared by the control-plane, committer, and fleet-scheduling modules; every
+mutation that must survive a restart is journaled by the code that performs
+it — these dataclasses are pure book-keeping.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+from ..protocol import ShardingPolicy, TaskSpec, WorkerInfo
+from ..sharding import ShardManager
+
+
+@dataclass
+class _Dataset:
+    dataset_id: str
+    graph_bytes: bytes
+    fingerprint: str
+
+
+@dataclass
+class _Job:
+    job_id: str
+    job_name: str
+    dataset_id: str
+    policy: ShardingPolicy
+    num_consumers: int = 0
+    sharing: bool = False
+    compression: Optional[str] = None
+    max_workers: int = 0  # 0 = use all registered workers
+    weight: float = 1.0  # fleet-scheduler share weight (multi-tenant fairness)
+    resume_offsets: bool = False
+    tasks: Dict[str, TaskSpec] = field(default_factory=dict)  # by task_id
+    tasks_by_worker: Dict[str, str] = field(default_factory=dict)
+    completed_tasks: Set[str] = field(default_factory=set)
+    shard_mgr: Optional[ShardManager] = None
+    finished: bool = False
+    clients: Set[str] = field(default_factory=set)
+    seq: int = 0  # task seeds
+    static_assignment: Optional[Dict[str, List[Dict[str, Any]]]] = None
+    autocache_decision: Optional[str] = None  # compute | write_through | read
+    # latest feed-stall report per client (repro.feed heartbeat payloads),
+    # each stamped with the monotonic receive time for staleness filtering
+    client_stall: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # fleet-scheduler worker share: None = unscheduled (task on every
+    # worker, the pre-scheduler behavior); an int caps auto-granted tasks
+    target_share: Optional[int] = None
+
+
+@dataclass
+class _Worker:
+    info: WorkerInfo
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    buffer_occupancy: float = 0.0
+    cpu_busy: float = 0.0
+    delivered: Set[str] = field(default_factory=set)  # task ids shipped
+    # (snapshot_id, stream_id) assignments shipped to this worker
+    delivered_streams: Set[Any] = field(default_factory=set)
+    # latest heartbeat-reported SlidingWindowCache counters, by cache key
+    # (pipeline fingerprint) — feeds sharing-efficiency introspection and
+    # the autocache policy's hot-pipeline signal
+    cache_stats: Dict[str, Dict[str, Any]] = field(default_factory=dict)

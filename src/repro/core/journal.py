@@ -5,9 +5,13 @@ and acknowledged; a restarted dispatcher replays the journal to recover
 registered datasets, jobs, workers, and shard-assignment state.  A snapshot
 op compacts the log.
 
-Format: [u32 length][pickled (seq, event_type, payload)] records appended to a
+Format: an 8-byte file header ``RJNL`` + u32 version, then
+[u32 length][pickled (seq, event_type, payload)] records appended to a
 single file, fsync'd per batch.  Corrupt/truncated tails (crash mid-write) are
-detected by length underrun and discarded — the WAL contract.
+detected by length underrun and discarded — the WAL contract.  Headerless v0
+journals (pre-header format) are still readable; a journal written by a
+DIFFERENT format version fails loudly with :class:`JournalVersionError`
+instead of mis-unpickling on a standby running other code.
 """
 from __future__ import annotations
 
@@ -15,9 +19,43 @@ import os
 import pickle
 import struct
 import threading
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 Event = Tuple[int, str, Dict[str, Any]]
+
+JOURNAL_MAGIC = b"RJNL"
+JOURNAL_VERSION = 1
+_HEADER = JOURNAL_MAGIC + struct.pack("<I", JOURNAL_VERSION)
+HEADER_SIZE = len(_HEADER)
+
+
+class JournalVersionError(RuntimeError):
+    """Journal file was written by an incompatible format version."""
+
+
+def _check_header(f) -> int:
+    """Validate the header of an open binary file positioned at 0.
+
+    Returns the offset where records start (``HEADER_SIZE`` for v1 files,
+    ``0`` for headerless v0 journals) and leaves ``f`` positioned there.
+    Raises :class:`JournalVersionError` on a version we do not speak.
+    """
+    head = f.read(HEADER_SIZE)
+    if head[:4] == JOURNAL_MAGIC:
+        if len(head) < HEADER_SIZE:
+            raise JournalVersionError(
+                "journal header truncated (magic present, version missing)"
+            )
+        (version,) = struct.unpack("<I", head[4:8])
+        if version != JOURNAL_VERSION:
+            raise JournalVersionError(
+                f"journal format v{version} != supported v{JOURNAL_VERSION}"
+            )
+        return HEADER_SIZE
+    # Headerless v0 journal: first 4 bytes are a record length.  b"RJNL"
+    # as a length would be a ~1.28 GB record — not produced in practice.
+    f.seek(0)
+    return 0
 
 
 class Journal:
@@ -28,9 +66,16 @@ class Journal:
         self._lock = threading.Lock()
         self._seq = 0
         self._f = None
+        self._mirror = False
         if path is not None:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            if os.path.exists(path) and os.path.getsize(path) > 0:
+                with open(path, "rb") as f:
+                    _check_header(f)  # fail loudly before appending
             self._f = open(path, "ab")
+            if self._f.tell() == 0:
+                self._f.write(_HEADER)
+                self._f.flush()
 
     # -- append -----------------------------------------------------------
     def append(self, event_type: str, payload: Dict[str, Any], sync: bool = False) -> int:
@@ -39,17 +84,47 @@ class Journal:
         would desynchronize external durable state (e.g. snapshot chunk
         commits, which acknowledge bytes already fsync'd on shared storage)."""
         with self._lock:
+            if self._mirror:
+                # A mirroring standby derives events while replaying the
+                # primary's stream; only replicated records are durable.
+                return self._seq
             self._seq += 1
-            if self._f is not None:
-                rec = pickle.dumps(
-                    (self._seq, event_type, payload), protocol=pickle.HIGHEST_PROTOCOL
-                )
-                self._f.write(struct.pack("<I", len(rec)))
-                self._f.write(rec)
-                self._f.flush()
-                if self._fsync or sync:
-                    os.fsync(self._f.fileno())
+            self._write_record(self._seq, event_type, payload, sync)
             return self._seq
+
+    def append_replica(
+        self, seq: int, event_type: str, payload: Dict[str, Any], sync: bool = False
+    ) -> None:
+        """Append a record replicated from a primary, preserving its seq.
+        Out-of-order/duplicate records (seq <= current) are dropped."""
+        with self._lock:
+            if seq <= self._seq:
+                return
+            self._seq = seq
+            self._write_record(seq, event_type, payload, sync)
+
+    def _write_record(
+        self, seq: int, event_type: str, payload: Dict[str, Any], sync: bool
+    ) -> None:
+        if self._f is None:
+            return
+        rec = pickle.dumps(
+            (seq, event_type, payload), protocol=pickle.HIGHEST_PROTOCOL
+        )
+        self._f.write(struct.pack("<I", len(rec)))
+        self._f.write(rec)
+        self._f.flush()
+        if self._fsync or sync:
+            os.fsync(self._f.fileno())
+
+    # -- mirror mode ------------------------------------------------------
+    def set_mirror(self, mirror: bool) -> None:
+        """In mirror mode ``append()`` is suppressed (standby replay derives
+        events the primary already journaled); ``append_replica`` still
+        writes.  Promotion flips mirror off and the journal becomes a normal
+        primary WAL continuing at the replicated seq."""
+        with self._lock:
+            self._mirror = mirror
 
     # -- replay -----------------------------------------------------------
     @staticmethod
@@ -57,18 +132,41 @@ class Journal:
         if not os.path.exists(path):
             return
         with open(path, "rb") as f:
-            while True:
-                hdr = f.read(4)
-                if len(hdr) < 4:
-                    return  # clean EOF or truncated length header
-                (n,) = struct.unpack("<I", hdr)
-                rec = f.read(n)
-                if len(rec) < n:
-                    return  # torn tail write — discard (WAL contract)
-                try:
-                    yield pickle.loads(rec)
-                except Exception:
-                    return  # corrupt tail
+            _check_header(f)
+            yield from Journal._read_records(f)
+
+    @staticmethod
+    def _read_records(f) -> Iterator[Event]:
+        while True:
+            hdr = f.read(4)
+            if len(hdr) < 4:
+                return  # clean EOF or truncated length header
+            (n,) = struct.unpack("<I", hdr)
+            rec = f.read(n)
+            if len(rec) < n:
+                return  # torn tail write — discard (WAL contract)
+            try:
+                yield pickle.loads(rec)
+            except Exception:
+                return  # corrupt tail
+
+    @staticmethod
+    def read_after(path: str, after_seq: int, max_records: int = 512) -> List[Event]:
+        """Read up to ``max_records`` events with seq > ``after_seq``.
+
+        Used by the replication RPC: tolerates concurrent appends and torn
+        tails (a torn tail simply ends the batch; the next poll re-reads it
+        once complete).  A compaction rewrites seqs from the snapshot record,
+        so a caller seeing an empty batch plus a first-record seq <= after_seq
+        should restart from seq 0.
+        """
+        out: List[Event] = []
+        for ev in Journal.replay(path):
+            if ev[0] > after_seq:
+                out.append(ev)
+                if len(out) >= max_records:
+                    break
+        return out
 
     # -- compaction ---------------------------------------------------------
     def snapshot(self, state_payload: Dict[str, Any]) -> None:
@@ -78,6 +176,7 @@ class Journal:
         with self._lock:
             tmp = self._path + ".tmp"
             with open(tmp, "wb") as f:
+                f.write(_HEADER)
                 rec = pickle.dumps(
                     (self._seq, "snapshot", state_payload),
                     protocol=pickle.HIGHEST_PROTOCOL,
@@ -96,6 +195,10 @@ class Journal:
             if self._f is not None:
                 self._f.close()
                 self._f = None
+
+    @property
+    def path(self) -> Optional[str]:
+        return self._path
 
     @property
     def seq(self) -> int:

@@ -50,6 +50,22 @@ Fleet scheduling (multi-tenant deployments, ``scheduling=True``):
   clients stop fetching when the dispatcher view stops listing the task.
   There is no dispatcher→worker push: retirement, like every other
   assignment change, rides the existing heartbeat pull.
+
+Dispatcher HA (hot-standby failover, paper §3.4):
+
+* ``journal_fetch`` — replication stream for a hot standby: returns the
+  primary's journal records with ``seq > after_seq`` (bounded by
+  ``max_records``) plus the primary's current ``seq``.  Read lock-free
+  from the journal file; a torn tail just ends the batch early and the
+  standby re-polls.  When the primary stops answering for longer than its
+  lease the standby finishes replaying and promotes itself at the same
+  service address.
+* ``get_shard`` carries ``holding`` — the shard ids the worker actually
+  has in flight.  The promoted (or restarted) dispatcher reconciles its
+  journaled view against it: a ``shard_assigned`` whose response the
+  crash ate delivered zero bytes worker-side, so those shards are
+  re-queued exactly, each journaled as a ``shard_requeued`` event (the
+  journal-only event type; it never travels as an RPC).
 """
 from __future__ import annotations
 

@@ -21,7 +21,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
-from .dispatcher import Dispatcher
+from .dispatcher import CrashPoints, Dispatcher, StandbyDispatcher
 from .protocol import new_id
 from .transport import INPROC, Stub, TCPServer
 from .worker import Worker
@@ -50,6 +50,9 @@ class LocalOrchestrator:
         autocache_config: Optional[Any] = None,
         scheduling: bool = False,
         scheduler_config: Optional[Any] = None,
+        crash_points: Optional[CrashPoints] = None,
+        lease_timeout: float = 1.0,
+        replication_interval: float = 0.05,
     ):
         self._transport = transport
         if journal and journal_path is None:
@@ -76,6 +79,12 @@ class LocalOrchestrator:
         self._tcp_dispatcher: Optional[TCPServer] = None
         self._stop_gc = threading.Event()
         self._gc_thread: Optional[threading.Thread] = None
+        # HA: chaos crash injection + hot-standby failover
+        self._crash_points = crash_points
+        self._lease_timeout = lease_timeout
+        self._replication_interval = replication_interval
+        self.standby: Optional[StandbyDispatcher] = None
+        self._standby_idx = 0
 
     # ------------------------------------------------------------------
     def start(self) -> ServiceHandle:
@@ -95,7 +104,10 @@ class LocalOrchestrator:
             autocache_config=self._autocache_config,
             scheduling=self._scheduling,
             scheduler_config=self._scheduler_config,
+            crash_points=self._crash_points,
         )
+        if self._crash_points is not None:
+            self._crash_points.on_fire = self._on_dispatcher_crash
         if self._transport == "tcp":
             self._tcp_dispatcher = TCPServer(self.dispatcher).start()
             self.dispatcher_address = self._tcp_dispatcher.address
@@ -198,6 +210,99 @@ class LocalOrchestrator:
             self.dispatcher.close()
             self.dispatcher = None
 
+    def crash_dispatcher(self) -> None:
+        """HA-path crash: the dispatcher stops answering but its journal
+        file handle stays open (a real dead process just stops writing) —
+        ``kill_dispatcher`` by contrast closes the journal for a clean
+        restart.  Used directly by tests; injected crash points route here
+        via ``_on_dispatcher_crash``."""
+        if self.dispatcher is not None:
+            self.dispatcher.fail()
+        self._unbind_dispatcher()
+
+    def _on_dispatcher_crash(self, point: str) -> None:
+        """CrashPoints.on_fire callback: runs ON an RPC handler thread, so
+        the transport teardown happens in a side thread (a TCP server
+        cannot shut itself down from inside one of its own handlers)."""
+        if self.dispatcher is not None:
+            self.dispatcher.fail()
+        threading.Thread(target=self._unbind_dispatcher, daemon=True).start()
+
+    def _unbind_dispatcher(self) -> None:
+        if self._transport in ("tcp", "grpc") and self._tcp_dispatcher is not None:
+            self._tcp_dispatcher.stop()
+            self._tcp_dispatcher = None
+        else:
+            INPROC.unbind(self._dispatcher_name)
+
+    # ------------------------------------------------------------------
+    # Hot-standby failover (dispatcher HA)
+    # ------------------------------------------------------------------
+    def arm_standby(self) -> StandbyDispatcher:
+        """Start a hot standby tailing the primary's journal.
+
+        The standby replays the replication stream into its own state (and
+        its own journal file); when the primary stops answering for longer
+        than ``lease_timeout`` it promotes itself and the orchestrator
+        rebinds the service address to it — clients and workers reconnect
+        through their existing backoff paths.
+        """
+        assert self._journal_path, "standby failover requires a journal"
+        self._standby_idx += 1
+        standby_path = f"{self._journal_path}.standby{self._standby_idx}"
+        self.standby = StandbyDispatcher(
+            journal_path=standby_path,
+            primary_address=self.dispatcher_address,
+            primary_journal_path=self._journal_path,
+            lease_timeout=self._lease_timeout,
+            poll_interval=self._replication_interval,
+            on_promote=self._adopt_standby,
+            heartbeat_timeout=self._hb_timeout,
+            overpartition=self._overpartition,
+            snapshot_root=self._snapshot_root,
+            autocache_config=self._autocache_config,
+            scheduling=self._scheduling,
+            scheduler_config=self._scheduler_config,
+        ).start()
+        return self.standby
+
+    def _adopt_standby(self, standby: StandbyDispatcher) -> None:
+        """on_promote callback: rebind the service address to the promoted
+        standby.  From here on ITS journal is the WAL of record (future
+        restarts and standbys chain off it)."""
+        self.dispatcher = standby.dispatcher
+        self._journal_path = standby.journal_path
+        if self._transport == "tcp":
+            host_port = self.dispatcher_address[len("tcp://") :]
+            host, port = host_port.rsplit(":", 1)
+            deadline = time.monotonic() + 5.0
+            while True:
+                try:
+                    self._tcp_dispatcher = TCPServer(
+                        self.dispatcher, host=host, port=int(port)
+                    ).start()
+                    break
+                except OSError:
+                    # the crashed primary's socket may still be closing
+                    if time.monotonic() > deadline:
+                        raise
+                    time.sleep(0.05)
+        elif self._transport == "grpc":
+            from .transport import GrpcServer
+
+            host_port = self.dispatcher_address[len("grpc://") :]
+            host, port = host_port.rsplit(":", 1)
+            self._tcp_dispatcher = GrpcServer(
+                self.dispatcher, host=host, port=int(port)
+            ).start()
+        else:
+            INPROC.bind(self._dispatcher_name, self.dispatcher)
+
+    def wait_for_failover(self, timeout: float = 10.0) -> bool:
+        """Block until the armed standby has promoted itself."""
+        assert self.standby is not None, "arm_standby first"
+        return self.standby.promoted.wait(timeout)
+
     def restart_dispatcher(self) -> None:
         """Restart from the write-ahead journal at the SAME address (workers
         and clients reconnect transparently)."""
@@ -228,6 +333,8 @@ class LocalOrchestrator:
 
     def stop(self) -> None:
         self._stop_gc.set()
+        if self.standby is not None:
+            self.standby.stop()
         for w in self.workers:
             w.stop()
         self.kill_dispatcher()

@@ -113,6 +113,31 @@ class ShardManager:
                         st.lost = True
         return affected
 
+    def assigned_to_worker(self, worker_id: str) -> List[int]:
+        """Shard ids currently assigned (in-flight) to ``worker_id``."""
+        with self._lock:
+            return [
+                st.shard_id
+                for st in self._states
+                if st.assigned_to == worker_id and not st.completed and not st.lost
+            ]
+
+    def requeue(self, shard_id: int, worker_id: str) -> bool:
+        """Return an assigned shard to the FRONT of the queue.
+
+        Used when the journal says ``worker_id`` holds the shard but the
+        worker provably does not (the assignment response was lost with a
+        crashed dispatcher): the shard delivered zero elements, so handing
+        it out again — at its current offset — is exact, not a replay.
+        """
+        with self._lock:
+            st = self._states[shard_id]
+            if st.assigned_to != worker_id or st.completed or st.lost:
+                return False
+            st.assigned_to = None
+            self._pending.appendleft(shard_id)
+            return True
+
     # -- static policy -------------------------------------------------------
     def static_assignment(self, worker_ids: List[str]) -> Dict[str, List[Dict[str, Any]]]:
         """Round-robin all shards across the worker set, up front."""

@@ -20,6 +20,7 @@ failover (clients ride through dispatcher downtime, paper §3.4).
 from __future__ import annotations
 
 import pickle
+import random
 import socket
 import socketserver
 import struct
@@ -43,6 +44,48 @@ class TransportError(Exception):
 
 class Handler(Protocol):
     def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]: ...
+
+
+class Backoff:
+    """Bounded exponential backoff with equal jitter for reconnect loops.
+
+    Delay for attempt ``n`` is drawn from ``[d/2, d]`` where
+    ``d = min(cap, base * multiplier**n)`` — the jitter spreads a fleet of
+    workers reconnecting to a freshly promoted standby across half a period
+    instead of landing them in one thundering herd; the cap bounds how long
+    any single retry sleeps once the outage is long.
+
+    ``rng`` is injectable for deterministic tests (defaults to the module
+    ``random``; only ``.uniform`` is used).
+    """
+
+    def __init__(
+        self,
+        base: float = 0.05,
+        cap: float = 2.0,
+        multiplier: float = 2.0,
+        rng: Optional[Any] = None,
+    ):
+        self.base = base
+        self.cap = cap
+        self.multiplier = multiplier
+        self._rng = rng if rng is not None else random
+        self._attempt = 0
+
+    @property
+    def attempt(self) -> int:
+        return self._attempt
+
+    def next_delay(self) -> float:
+        d = min(self.cap, self.base * self.multiplier**self._attempt)
+        if d < self.cap:
+            # stop growing the exponent once capped (a long outage must not
+            # overflow float pow after thousands of attempts)
+            self._attempt += 1
+        return d / 2 + self._rng.uniform(0.0, d / 2)
+
+    def reset(self) -> None:
+        self._attempt = 0
 
 
 # ---------------------------------------------------------------------------

@@ -41,7 +41,7 @@ from .protocol import (
     ShardingPolicy,
     new_id,
 )
-from .transport import INPROC, Stub, TCPServer, TransportError, compress
+from .transport import INPROC, Backoff, Stub, TCPServer, TransportError, compress
 
 
 @dataclass
@@ -181,51 +181,131 @@ class _BufferedRunner(_TaskRunner):
 
 
 class _DynamicRunner(_BufferedRunner):
-    """DYNAMIC: pull disjoint shards from the dispatcher FCFS (paper §3.3)."""
+    """DYNAMIC: pull disjoint shards from the dispatcher FCFS (paper §3.3).
+
+    Elements travel through the buffer annotated with (shard, offset) so the
+    runner knows exactly how far each shard has been DELIVERED to clients —
+    not just produced into the buffer.  Offset checkpoints report the
+    delivered watermark (always ≤ delivered, so re-queuing at it never
+    skips an undelivered element), and a pruned runner files one final
+    truth-report through the redelivery queue so the dispatcher's deferred
+    task-retirement reclaim resumes the shard at the exact delivered
+    position: 0 duplicates, 0 lost, even when the checkpoints sent during a
+    dispatcher outage were dropped.
+    """
 
     CHECKPOINT_EVERY = 64
+
+    def __init__(self, worker: "Worker", spec: Dict[str, Any], buffer_size: int):
+        # watermarks must exist before the base ctor starts the producer
+        self._delivered: Dict[int, int] = {}  # shard_id -> delivered offset
+        self._active_shard: Optional[int] = None
+        super().__init__(worker, spec, buffer_size)
 
     def _iterate(self) -> Iterator[Element]:
         graph = Graph.from_bytes(self._spec["graph_bytes"])
         job_id = self._spec["job_id"]
         wid = self._worker.worker_id
+        backoff = Backoff(base=0.05, cap=1.0)
         while not self._worker._stopping.is_set() and not self._stopped.is_set():
             try:
                 resp = self._worker._dispatcher.call(
-                    "get_shard", job_id=job_id, worker_id=wid
+                    "get_shard",
+                    job_id=job_id,
+                    worker_id=wid,
+                    # shard ids we journaled-but-unacked completions for: lets
+                    # a freshly promoted dispatcher re-queue assignments whose
+                    # response died with the old primary (we never got them)
+                    holding=self._held_shards(job_id),
                 )
             except TransportError:
                 # dispatcher down: no NEW shards can be handed out, but we keep
-                # serving what we have (paper §3.4) — retry after a pause.
-                time.sleep(0.2)
+                # serving what we have (paper §3.4) — retry with jittered
+                # backoff so a worker fleet doesn't stampede the standby.
+                self._stopped.wait(backoff.next_delay())
                 continue
+            backoff.reset()
             if resp.get("done"):
                 return
             if resp.get("wait"):  # queue empty but a shard may be re-queued
                 time.sleep(0.05)
                 continue
             sid, shard, offset = resp["shard_id"], resp["shard"], resp.get("offset", 0)
+            self._delivered.setdefault(sid, offset)
+            self._active_shard = sid
             g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"] + sid)
             produced = 0
             for i, elem in enumerate(build_iterator(g, ExecContext())):
                 if i < offset:  # resume after checkpointed prefix
                     continue
                 produced += 1
-                yield elem
+                yield (elem, sid, i + 1)  # get()/get_many() strip the tag
                 if (
                     self._spec.get("resume_offsets")
                     and produced % self.CHECKPOINT_EVERY == 0
                 ):
+                    # checkpoint the DELIVERED watermark, not the produced
+                    # position: elements still in the buffer would be lost
+                    # to a re-queue that skips past them
                     self._try_call(
                         "checkpoint_offset",
                         job_id=job_id,
                         shard_id=sid,
                         worker_id=wid,
-                        offset=i + 1,
+                        offset=self._delivered[sid],
                     )
+            self._active_shard = None
             self._try_call(
                 "complete_shard", job_id=job_id, shard_id=sid, worker_id=wid
             )
+
+    def _unwrap(self, entry: Any) -> Element:
+        elem, sid, off = entry
+        self._delivered[sid] = off  # pops follow production order: monotonic
+        return elem
+
+    def get(self, job_id: str, round_index: int, consumer_index: int):
+        status, entry = super().get(job_id, round_index, consumer_index)
+        if entry is None:
+            return status, None
+        return status, self._unwrap(entry)
+
+    def get_many(self, job_id: str, max_batch: int, timeout: float = 0.0):
+        status, entries = super().get_many(job_id, max_batch, timeout)
+        return status, [self._unwrap(e) for e in entries]
+
+    def stop(self) -> None:
+        super().stop()
+        sid = self._active_shard
+        if sid is not None and self._spec.get("resume_offsets"):
+            # Pruned mid-shard (task retirement): file one final offset
+            # truth-report through the redelivery queue.  It drains on the
+            # next heartbeat — before the dispatcher's second-heartbeat
+            # reclaim — so the re-queue resumes at exactly the delivered
+            # position even though checkpoints sent while the dispatcher
+            # was down were dropped.
+            self._worker._pending_control.append(
+                (
+                    "checkpoint_offset",
+                    {
+                        "job_id": self._spec["job_id"],
+                        "shard_id": sid,
+                        "worker_id": self._worker.worker_id,
+                        "offset": self._delivered.get(sid, 0),
+                    },
+                )
+            )
+
+    def _held_shards(self, job_id: str) -> List[int]:
+        """Shard ids this worker finished but has not had acknowledged yet
+        (queued ``complete_shard`` redeliveries).  At get_shard time there is
+        no in-process shard, so these ARE the shards the dispatcher may
+        still see as assigned to us that must NOT be re-queued."""
+        return [
+            kw["shard_id"]
+            for (m, kw) in list(self._worker._pending_control)
+            if m == "complete_shard" and kw.get("job_id") == job_id
+        ]
 
     def _try_call(self, method: str, **kw: Any) -> None:
         try:
@@ -593,81 +673,96 @@ class Worker:
             return self._caches[key]
 
     def _heartbeat_loop(self) -> None:
-        while not self._stopping.wait(self._hb_interval):
+        backoff = Backoff(
+            base=self._hb_interval, cap=max(1.0, 4 * self._hb_interval)
+        )
+        delay = self._hb_interval
+        while not self._stopping.wait(delay):
             try:
-                while self._pending_control:
-                    method, kw = self._pending_control[0]
-                    resp = self._dispatcher.call(method, **kw)  # raises if still down
-                    self._pending_control.popleft()
-                    if resp and resp.get("reassigned") and "snapshot_id" in kw:
-                        # a queued snapshot ack answered "reassigned": a
-                        # replacement owns the stream — stop our writer
-                        # (the direct-call path learns this in _report_commit;
-                        # the queued path must honor it too)
-                        with self._lock:
-                            r = self._snapshot_writers.get(
-                                (kw["snapshot_id"], kw["stream_id"])
-                            )
-                        if r is not None:
-                            r.stop()
-                with self._lock:
-                    occ = [r.buffer_occupancy() for r in self._tasks.values()]
-                    completed = [
-                        tid for tid, r in self._tasks.items() if r.status == "done"
-                    ]
-                    # sharing-efficiency counters ride along with every
-                    # heartbeat so the dispatcher (and the autocache policy)
-                    # can observe per-fingerprint cache behavior (§3.5)
-                    cache_stats = {
-                        k: dict(vars(c.stats), num_jobs=c.num_jobs)
-                        for k, c in self._caches.items()
-                    }
-                    # streams whose writer died on an exception: hand them
-                    # back so the dispatcher can reassign (possibly to us —
-                    # a fresh runner retries from the committed offset)
-                    failed_streams = [
-                        list(key)
-                        for key, r in self._snapshot_writers.items()
-                        if r.status == "failed"
-                    ]
-                resp = self._dispatcher.call(
-                    "worker_heartbeat",
-                    worker_id=self.worker_id,
-                    buffer_occupancy=sum(occ) / len(occ) if occ else 0.0,
-                    cpu_busy=self.metrics.busy_time,
-                    completed_tasks=completed,
-                    cache_stats=cache_stats,
-                    failed_streams=failed_streams,
-                )
-                if failed_streams:
-                    # the dispatcher has released them; drop the dead
-                    # runners so a re-assignment starts a fresh one
-                    with self._lock:
-                        for key in failed_streams:
-                            r = self._snapshot_writers.get(tuple(key))
-                            if r is not None and r.status == "failed":
-                                del self._snapshot_writers[tuple(key)]
-                if resp.get("reregister"):
-                    resp = self._dispatcher.call(
-                        "register_worker",
-                        worker_id=self.worker_id,
-                        address=self.address,
-                        tags=self._tags,
-                    )
-                    for spec in resp.get("tasks", []):
-                        self._add_task(spec)
-                    for spec in resp.get("snapshot_streams", []):
-                        self._add_snapshot_stream(spec)
-                    continue
-                for spec in resp.get("new_tasks", []):
-                    self._add_task(spec)
-                for spec in resp.get("snapshot_streams", []):
-                    self._add_snapshot_stream(spec)
-                valid = resp.get("valid_tasks")
-                if valid is not None:
-                    self._prune_tasks(set(valid))
+                self._heartbeat_once()
             except TransportError:
-                continue  # dispatcher down: keep serving current tasks (§3.4)
+                # dispatcher down: keep serving current tasks (§3.4) and
+                # retry with jittered backoff — a whole fleet reconnecting
+                # to a freshly promoted standby must not thundering-herd it
+                delay = backoff.next_delay()
+                continue
+            backoff.reset()
+            delay = self._hb_interval
+
+    def _heartbeat_once(self) -> None:
+        """One heartbeat round-trip; raises TransportError when the
+        dispatcher is unreachable (the loop above backs off and retries)."""
+        while self._pending_control:
+            method, kw = self._pending_control[0]
+            resp = self._dispatcher.call(method, **kw)  # raises if still down
+            self._pending_control.popleft()
+            if resp and resp.get("reassigned") and "snapshot_id" in kw:
+                # a queued snapshot ack answered "reassigned": a
+                # replacement owns the stream — stop our writer
+                # (the direct-call path learns this in _report_commit;
+                # the queued path must honor it too)
+                with self._lock:
+                    r = self._snapshot_writers.get(
+                        (kw["snapshot_id"], kw["stream_id"])
+                    )
+                if r is not None:
+                    r.stop()
+        with self._lock:
+            occ = [r.buffer_occupancy() for r in self._tasks.values()]
+            completed = [
+                tid for tid, r in self._tasks.items() if r.status == "done"
+            ]
+            # sharing-efficiency counters ride along with every
+            # heartbeat so the dispatcher (and the autocache policy)
+            # can observe per-fingerprint cache behavior (§3.5)
+            cache_stats = {
+                k: dict(vars(c.stats), num_jobs=c.num_jobs)
+                for k, c in self._caches.items()
+            }
+            # streams whose writer died on an exception: hand them
+            # back so the dispatcher can reassign (possibly to us —
+            # a fresh runner retries from the committed offset)
+            failed_streams = [
+                list(key)
+                for key, r in self._snapshot_writers.items()
+                if r.status == "failed"
+            ]
+        resp = self._dispatcher.call(
+            "worker_heartbeat",
+            worker_id=self.worker_id,
+            buffer_occupancy=sum(occ) / len(occ) if occ else 0.0,
+            cpu_busy=self.metrics.busy_time,
+            completed_tasks=completed,
+            cache_stats=cache_stats,
+            failed_streams=failed_streams,
+        )
+        if failed_streams:
+            # the dispatcher has released them; drop the dead
+            # runners so a re-assignment starts a fresh one
+            with self._lock:
+                for key in failed_streams:
+                    r = self._snapshot_writers.get(tuple(key))
+                    if r is not None and r.status == "failed":
+                        del self._snapshot_writers[tuple(key)]
+        if resp.get("reregister"):
+            resp = self._dispatcher.call(
+                "register_worker",
+                worker_id=self.worker_id,
+                address=self.address,
+                tags=self._tags,
+            )
+            for spec in resp.get("tasks", []):
+                self._add_task(spec)
+            for spec in resp.get("snapshot_streams", []):
+                self._add_snapshot_stream(spec)
+            return
+        for spec in resp.get("new_tasks", []):
+            self._add_task(spec)
+        for spec in resp.get("snapshot_streams", []):
+            self._add_snapshot_stream(spec)
+        valid = resp.get("valid_tasks")
+        if valid is not None:
+            self._prune_tasks(set(valid))
 
     def drain_stats(self) -> Dict[str, float]:
         """What scale-in victim selection needs to know (see

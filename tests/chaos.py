@@ -1,0 +1,328 @@
+"""Chaos harness: seed-controlled crash injection + hot-standby failover.
+
+Each scenario builds a journaled deployment with a ``CrashPoints`` registry,
+arms a hot standby, and kills the primary dispatcher at a named crash point
+chosen by the seed (mid-snapshot-chunk-commit, mid-rebalance task
+retirement, mid-coordinated-round).  The crash fires AFTER the journal
+append and BEFORE the in-memory apply / RPC response wherever possible —
+the widest torn-state window — and raises through the transport layer so
+every client/worker retry path sees an ordinary connection loss.
+
+Scenario functions return a :class:`ChaosRun` with everything the test
+asserts on: whether the crash fired, failover downtime, and scenario
+payload (element lists, chunk digests, per-round bucket widths).  They
+raise AssertionError only for harness-level invariants (run completed);
+exactly-once / byte-identity checks live in ``test_chaos.py`` so a failure
+names the violated guarantee.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    CrashPoints,
+    DispatcherCrashed,
+    LocalOrchestrator,
+    materialize,
+)
+from repro.data import Dataset, register
+from repro.snapshot import read_manifest, snapshot_status
+from repro.snapshot.format import chunk_path
+
+SNAPSHOT_POINTS = ("commit_chunk.pre", "commit_chunk.journaled")
+REBALANCE_POINTS = ("retire_task.pre", "retire_task.journaled")
+ROUND_POINTS = ("client_heartbeat", "worker_heartbeat")
+
+# generous harness-level ceiling; the journal-replay bound itself is
+# asserted in test_chaos.py from the measured lease timeout + promote time
+FAILOVER_TIMEOUT = 30.0
+
+
+@register("chaos_transform")
+def chaos_transform(x, *, delay=0.0):
+    if delay:
+        time.sleep(delay)
+    return np.asarray(x, dtype=np.int64) * 5 + 2
+
+
+@register("chaos_slow")
+def chaos_slow(x, *, delay=0.0):
+    if delay:
+        time.sleep(delay)
+    return x
+
+
+@dataclass
+class ChaosRun:
+    seed: int
+    point: str
+    countdown: int
+    fired: bool
+    downtime_s: Optional[float]  # crash -> standby promoted (None: no crash)
+    lease_timeout: float
+    promote_s: float = 0.0
+    catchup_records: int = 0
+    details: Dict[str, Any] = field(default_factory=dict)
+
+
+def chaos_orchestrator(crash_points: CrashPoints, **kw: Any) -> LocalOrchestrator:
+    kw.setdefault("num_workers", 2)
+    kw.setdefault("journal", True)
+    kw.setdefault("heartbeat_timeout", 0.8)
+    kw.setdefault("gc_interval", 0.1)
+    kw.setdefault("worker_heartbeat_interval", 0.1)
+    kw.setdefault("lease_timeout", 0.4)
+    kw.setdefault("replication_interval", 0.02)
+    return LocalOrchestrator(crash_points=crash_points, **kw)
+
+
+def _arm_failover_probe(
+    orch: LocalOrchestrator, cp: CrashPoints, times: Dict[str, float]
+) -> None:
+    """Timestamp the crash (on_fire wrapper) and the promotion (watcher
+    thread) so downtime = promoted - crashed is measured, not inferred."""
+    orig_on_fire = cp.on_fire
+
+    def on_fire(point: str) -> None:
+        times["crashed"] = time.monotonic()
+        if orig_on_fire is not None:
+            orig_on_fire(point)
+
+    cp.on_fire = on_fire
+    standby = orch.standby
+
+    def watch() -> None:
+        if standby.promoted.wait(FAILOVER_TIMEOUT):
+            times["promoted"] = time.monotonic()
+
+    threading.Thread(target=watch, daemon=True).start()
+
+
+def _finish_run(
+    seed: int,
+    cp: CrashPoints,
+    orch: LocalOrchestrator,
+    times: Dict[str, float],
+    point: str,
+    countdown: int,
+    details: Dict[str, Any],
+) -> ChaosRun:
+    downtime = None
+    promote_s = 0.0
+    catchup = 0
+    if cp.fired is not None:
+        assert orch.wait_for_failover(FAILOVER_TIMEOUT), "standby never promoted"
+        # the watcher thread may be a beat behind promoted.set()
+        deadline = time.monotonic() + 2.0
+        while "promoted" not in times and time.monotonic() < deadline:
+            time.sleep(0.01)
+        downtime = times.get("promoted", time.monotonic()) - times["crashed"]
+        promote_s = orch.standby.promote_stats.get("promote_s", 0.0)
+        catchup = int(orch.standby.promote_stats.get("catchup_records", 0))
+    return ChaosRun(
+        seed=seed,
+        point=cp.fired or point,
+        countdown=countdown,
+        fired=cp.fired is not None,
+        downtime_s=downtime,
+        lease_timeout=orch._lease_timeout,
+        promote_s=promote_s,
+        catchup_records=catchup,
+        details=details,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1: crash mid-snapshot-chunk-commit
+# ---------------------------------------------------------------------------
+SNAP_N = 160
+SNAP_CHUNK_BYTES = 128
+SNAP_WORKERS = 2
+
+
+def _snap_pipeline(delay: float = 0.003) -> Dataset:
+    return Dataset.range(SNAP_N).map(chaos_transform, delay=delay).batch(2)
+
+
+def snapshot_digests(path: str) -> Dict[Tuple[int, str], str]:
+    """sha256 of every committed chunk file, keyed by (stream, filename)."""
+    out: Dict[Tuple[int, str], str] = {}
+    for s in snapshot_status(path)["streams"]:
+        sid = s["stream_id"]
+        for rec in read_manifest(path, sid).chunks:
+            with open(chunk_path(path, sid, rec), "rb") as f:
+                out[(sid, rec.filename)] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def reference_snapshot(root: str) -> Dict[Tuple[int, str], str]:
+    """Materialize the scenario pipeline once with NO chaos; the chunk
+    digests are the byte-identity baseline for every seeded run."""
+    path = os.path.join(root, "reference")
+    orch = chaos_orchestrator(CrashPoints(), num_workers=SNAP_WORKERS)
+    svc = orch.start()
+    try:
+        st = materialize(
+            svc, _snap_pipeline(), path, chunk_bytes=SNAP_CHUNK_BYTES, timeout=120
+        )
+        assert st["finished"], f"reference snapshot failed: {st}"
+        return snapshot_digests(path)
+    finally:
+        orch.stop()
+
+
+def run_snapshot_chaos(seed: int, tmp_dir: str) -> ChaosRun:
+    rng = random.Random(seed)
+    point = rng.choice(SNAPSHOT_POINTS)
+    countdown = rng.randint(1, 5)
+    cp = CrashPoints()
+    cp.arm(point, countdown)
+    orch = chaos_orchestrator(cp, num_workers=SNAP_WORKERS)
+    svc = orch.start()
+    path = os.path.join(tmp_dir, f"snap-{seed}")
+    try:
+        orch.arm_standby()
+        times: Dict[str, float] = {}
+        _arm_failover_probe(orch, cp, times)
+        st = materialize(
+            svc, _snap_pipeline(), path, chunk_bytes=SNAP_CHUNK_BYTES, timeout=120
+        )
+        assert st["finished"], f"snapshot never finished: {st}"
+        details = {"digests": snapshot_digests(path), "status": st}
+        return _finish_run(seed, cp, orch, times, point, countdown, details)
+    finally:
+        orch.stop()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2: crash mid-rebalance task retirement
+# ---------------------------------------------------------------------------
+REB_NA, REB_NB = 240, 160
+
+
+def run_rebalance_chaos(seed: int) -> ChaosRun:
+    rng = random.Random(seed)
+    point = rng.choice(REBALANCE_POINTS)
+    countdown = rng.randint(1, 2)
+    cp = CrashPoints()
+    cp.arm(point, countdown)
+    orch = chaos_orchestrator(cp, num_workers=4, scheduling=True)
+    svc = orch.start()
+    try:
+        orch.arm_standby()
+        times: Dict[str, float] = {}
+        _arm_failover_probe(orch, cp, times)
+
+        results: Dict[str, List[int]] = {"a": [], "b": []}
+
+        def consume(name: str, n: int) -> None:
+            dds = (
+                Dataset.range(n)
+                # slow enough that A and B overlap for several scheduler
+                # ticks — A's share must actually shrink (task retirement)
+                # for the armed retire_task.* point to fire
+                .map(chaos_slow, delay=0.01)
+                .batch(1)
+                .distribute(
+                    service=svc,
+                    processing_mode="dynamic",
+                    job_name=f"chaos-{name}",
+                    resume_offsets=True,
+                )
+            )
+            for b in dds:
+                results[name].extend(int(v) for v in np.ravel(b))
+
+        ta = threading.Thread(target=consume, args=("a", REB_NA))
+        ta.start()
+        time.sleep(0.4)  # job A claims the whole fleet first
+        tb = threading.Thread(target=consume, args=("b", REB_NB))
+        tb.start()
+        # manual scheduler ticks: job B's arrival shrinks A's share, the
+        # retirement path journals task_retired — and the armed point kills
+        # the primary mid-retirement.  DispatcherCrashed is the injected
+        # death; after failover the ticks drive the promoted standby.
+        deadline = time.monotonic() + 60.0
+        while (ta.is_alive() or tb.is_alive()) and time.monotonic() < deadline:
+            try:
+                orch.rebalance()
+            except DispatcherCrashed:
+                pass
+            time.sleep(0.05)
+        ta.join(5)
+        tb.join(5)
+        assert not ta.is_alive() and not tb.is_alive(), "consumers wedged"
+        return _finish_run(
+            seed, cp, orch, times, point, countdown,
+            {"a": results["a"], "b": results["b"], "na": REB_NA, "nb": REB_NB},
+        )
+    finally:
+        orch.stop()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3: crash mid-coordinated-round
+# ---------------------------------------------------------------------------
+def _coord_pipeline(lens: List[int], m: int) -> Dataset:
+    return (
+        Dataset.from_list([np.full((n,), n, dtype=np.int64) for n in lens])
+        .map(chaos_slow, delay=0.004)
+        .bucket_by_sequence_length(boundaries=[4, 8], batch_size=2, length_fn=len)
+        .group_by_window(key_fn=lambda b: b.shape[1], window_size=m)
+        .flat_map(lambda w: w)
+    )
+
+
+def run_round_chaos(seed: int) -> ChaosRun:
+    rng = random.Random(seed)
+    point = rng.choice(ROUND_POINTS)
+    countdown = rng.randint(1, 4)
+    m = 2
+    # 48 elements per bucket -> 24 batches per bucket -> every
+    # group_by_window(m=2) window fills with same-bucket batches; an odd
+    # batch count would flush a ragged mixed-bucket tail window that has
+    # nothing to do with failover
+    lens = [1, 2, 3, 5, 6, 7] * 16
+    rng.shuffle(lens)
+    cp = CrashPoints()
+    cp.arm(point, countdown)
+    orch = chaos_orchestrator(cp, num_workers=2)
+    svc = orch.start()
+    try:
+        orch.arm_standby()
+        times: Dict[str, float] = {}
+        _arm_failover_probe(orch, cp, times)
+        pipe = _coord_pipeline(lens, m)
+        out: List[Optional[List[np.ndarray]]] = [None] * m
+
+        def consume(i: int) -> None:
+            dds = pipe.distribute(
+                service=svc,
+                processing_mode="off",
+                job_name="chaos-coord",
+                num_consumers=m,
+                consumer_index=i,
+            )
+            out[i] = [np.asarray(b) for b in dds]
+
+        ts = [threading.Thread(target=consume, args=(i,)) for i in range(m)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+        assert all(not t.is_alive() for t in ts), "coordinated consumers wedged"
+        widths = [[b.shape[1] for b in r] for r in out if r is not None]
+        return _finish_run(
+            seed, cp, orch, times, point, countdown,
+            {"rounds": widths, "consumers": len(out)},
+        )
+    finally:
+        orch.stop()

@@ -1,0 +1,72 @@
+"""Client/worker reconnect backoff: bounded exponential with equal jitter,
+tested against a deterministic fake rng (no sleeping, no wall clock)."""
+import pytest
+
+from repro.core import Backoff
+
+
+class _FakeRng:
+    """uniform(a, b) returns a + frac * (b - a), recorded for inspection."""
+
+    def __init__(self, frac=0.0):
+        self.frac = frac
+        self.calls = []
+
+    def uniform(self, a, b):
+        self.calls.append((a, b))
+        return a + self.frac * (b - a)
+
+
+class TestBackoff:
+    def test_doubles_from_base(self):
+        b = Backoff(base=0.1, cap=10.0, rng=_FakeRng(0.0))
+        # jitter frac 0 -> delay is exactly half the raw exponential
+        assert b.next_delay() == pytest.approx(0.05)
+        assert b.next_delay() == pytest.approx(0.10)
+        assert b.next_delay() == pytest.approx(0.20)
+        assert b.next_delay() == pytest.approx(0.40)
+
+    def test_jitter_stays_within_half_to_full(self):
+        lo = Backoff(base=0.2, cap=10.0, rng=_FakeRng(0.0))
+        hi = Backoff(base=0.2, cap=10.0, rng=_FakeRng(1.0))
+        for expected_raw in (0.2, 0.4, 0.8, 1.6):
+            assert lo.next_delay() == pytest.approx(expected_raw / 2)
+            assert hi.next_delay() == pytest.approx(expected_raw)
+
+    def test_cap_bounds_delay(self):
+        b = Backoff(base=1.0, cap=2.0, rng=_FakeRng(1.0))
+        delays = [b.next_delay() for _ in range(6)]
+        assert delays[0] == pytest.approx(1.0)
+        assert delays[1] == pytest.approx(2.0)
+        assert all(d == pytest.approx(2.0) for d in delays[2:])
+
+    def test_attempt_stops_growing_at_cap(self):
+        """Once capped, the exponent must freeze — an hour-long outage
+        would otherwise overflow float pow (2.0**1100)."""
+        b = Backoff(base=0.05, cap=1.0, rng=_FakeRng(0.5))
+        for _ in range(10_000):
+            d = b.next_delay()
+            assert 0.0 < d <= 1.0
+        assert b.attempt <= 6  # 0.05 * 2**5 = 1.6 > cap
+
+    def test_reset_restarts_schedule(self):
+        b = Backoff(base=0.1, cap=10.0, rng=_FakeRng(0.0))
+        b.next_delay()
+        b.next_delay()
+        assert b.attempt == 2
+        b.reset()
+        assert b.attempt == 0
+        assert b.next_delay() == pytest.approx(0.05)
+
+    def test_jitter_window_is_equal_split(self):
+        rng = _FakeRng(0.3)
+        b = Backoff(base=0.4, cap=10.0, rng=rng)
+        b.next_delay()
+        # equal jitter: fixed half + uniform(0, half)
+        assert rng.calls == [(0.0, pytest.approx(0.2))]
+
+    def test_default_rng_produces_valid_delays(self):
+        b = Backoff(base=0.1, cap=1.0)
+        for _ in range(50):
+            d = b.next_delay()
+            assert 0.05 <= d <= 1.0

@@ -170,3 +170,83 @@ class TestCheckpointRestore:
         os.makedirs(tmp_path / "step_00000099.tmp", exist_ok=True)
         restored, step = restore_checkpoint(str(tmp_path), state)
         assert step == 1
+
+
+class TestCoordinatedWorkerLoss:
+    def test_round_reforms_without_duplicate_slots(self, service_factory):
+        """Kill a worker between round announcement and consumption: the
+        consumers remap the pending round onto the surviving worker, the
+        re-formed round still hands every consumer a distinct slot of one
+        same-bucket window, and no consumer wedges."""
+        import threading
+
+        svc = service_factory(
+            num_workers=2,
+            heartbeat_timeout=0.6,
+            gc_interval=0.1,
+            worker_heartbeat_interval=0.1,
+        )
+        m = 2
+        # unique fill values per sentence: a duplicated consumer slot would
+        # surface as the SAME batch served to both consumers in one round
+        lens = [1, 2, 3, 5, 6, 7] * 8
+        pipe = (
+            Dataset.from_list(
+                [np.full((n,), 100 * i + n, dtype=np.int64) for i, n in enumerate(lens)]
+            )
+            .bucket_by_sequence_length(boundaries=[4, 8], batch_size=2, length_fn=len)
+            .group_by_window(key_fn=lambda b: b.shape[1], window_size=m)
+            .flat_map(lambda w: w)
+        )
+
+        gate = threading.Event()
+        gate.set()
+        out = [[] for _ in range(m)]
+
+        def consume(i):
+            dds = pipe.distribute(
+                service=svc,
+                processing_mode="off",
+                job_name="coord-loss",
+                num_consumers=m,
+                consumer_index=i,
+            )
+            for b in dds:
+                out[i].append(np.asarray(b))
+                time.sleep(0.03)  # pace steps so the kill lands mid-stream
+                gate.wait(30)
+
+        ts = [threading.Thread(target=consume, args=(i,)) for i in range(m)]
+        for t in ts:
+            t.start()
+
+        deadline = time.time() + 30
+        while min(len(r) for r in out) < 3 and time.time() < deadline:
+            time.sleep(0.02)
+        assert min(len(r) for r in out) >= 3, "consumers never got going"
+        # park both consumers between rounds: the NEXT round is announced
+        # (striped to a worker) but nobody has consumed a slot of it yet
+        gate.clear()
+        while len(out[0]) != len(out[1]) and time.time() < deadline:
+            time.sleep(0.02)
+        time.sleep(0.2)  # let in-flight fetches land at the gate
+        rounds_before = len(out[0])
+        svc.orchestrator.kill_worker(0)
+        gate.set()
+
+        for t in ts:
+            t.join(timeout=60)
+        assert all(not t.is_alive() for t in ts), "a consumer wedged after loss"
+        # progress resumed past the kill: the pending round re-formed on the
+        # surviving worker instead of stranding its consumers
+        assert min(len(r) for r in out) > rounds_before
+        rounds = min(len(r) for r in out)
+        for r in range(rounds):
+            widths = {out[c][r].shape[1] for c in range(m)}
+            assert len(widths) == 1, (
+                f"round {r}: consumers saw different bucket widths {widths}"
+            )
+            assert not np.array_equal(out[0][r], out[1][r]), (
+                f"round {r}: identical batch served to both consumers "
+                f"(duplicate slot in re-formed round)"
+            )

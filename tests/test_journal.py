@@ -1,0 +1,226 @@
+"""Journal format: header/versioning, v0 compat, torn-tail truncation,
+replication reads (``read_after``), and standby mirror semantics."""
+import pickle
+import struct
+
+import pytest
+
+from repro.core.journal import (
+    HEADER_SIZE,
+    JOURNAL_MAGIC,
+    JOURNAL_VERSION,
+    Journal,
+    JournalVersionError,
+)
+
+
+def _write_v0(path, events):
+    """Hand-write a headerless (pre-versioning) journal file."""
+    with open(path, "wb") as f:
+        for seq, etype, payload in events:
+            rec = pickle.dumps((seq, etype, payload), protocol=pickle.HIGHEST_PROTOCOL)
+            f.write(struct.pack("<I", len(rec)))
+            f.write(rec)
+
+
+class TestHeader:
+    def test_new_journal_writes_magic_and_version(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.append("a", {"x": 1})
+        j.close()
+        with open(p, "rb") as f:
+            head = f.read(HEADER_SIZE)
+        assert head[:4] == JOURNAL_MAGIC
+        assert struct.unpack("<I", head[4:8])[0] == JOURNAL_VERSION
+
+    def test_header_roundtrip(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.append("a", {"x": 1})
+        j.append("b", {"y": 2})
+        j.close()
+        assert list(Journal.replay(p)) == [(1, "a", {"x": 1}), (2, "b", {"y": 2})]
+
+    def test_reopen_appends_without_second_header(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.append("a", {})
+        j.close()
+        j2 = Journal(p)
+        j2.append("b", {}, )
+        j2.close()
+        evs = list(Journal.replay(p))
+        assert [e[1] for e in evs] == ["a", "b"]
+
+    def test_v0_headerless_journal_still_readable(self, tmp_path):
+        p = str(tmp_path / "v0")
+        _write_v0(p, [(1, "a", {"x": 1}), (2, "b", {})])
+        assert list(Journal.replay(p)) == [(1, "a", {"x": 1}), (2, "b", {})]
+        # and a Journal opened on it keeps appending in place
+        j = Journal(p)
+        j.set_seq(2)
+        j.append("c", {})
+        j.close()
+        assert [e[1] for e in Journal.replay(p)] == ["a", "b", "c"]
+
+    def test_future_version_fails_loudly(self, tmp_path):
+        p = str(tmp_path / "future")
+        with open(p, "wb") as f:
+            f.write(JOURNAL_MAGIC + struct.pack("<I", JOURNAL_VERSION + 1))
+        with pytest.raises(JournalVersionError, match="v2"):
+            list(Journal.replay(p))
+        with pytest.raises(JournalVersionError):
+            Journal(p)
+
+    def test_truncated_header_fails_loudly(self, tmp_path):
+        p = str(tmp_path / "trunc")
+        with open(p, "wb") as f:
+            f.write(JOURNAL_MAGIC + b"\x01")  # magic present, version cut off
+        with pytest.raises(JournalVersionError, match="truncated"):
+            list(Journal.replay(p))
+
+    def test_compaction_preserves_header(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        for i in range(5):
+            j.append("e", {"i": i})
+        j.snapshot({"state": "compact"})
+        j.append("after", {})
+        j.close()
+        with open(p, "rb") as f:
+            assert f.read(4) == JOURNAL_MAGIC
+        evs = list(Journal.replay(p))
+        assert evs[0][1] == "snapshot" and evs[0][0] == 5
+        assert evs[1] == (6, "after", {})
+
+
+def _events(n):
+    return [(i + 1, f"e{i}", {"i": i, "blob": "x" * (i % 7)}) for i in range(n)]
+
+
+class TestTornTail:
+    def test_truncation_at_every_byte_yields_clean_prefix(self, tmp_path):
+        """The WAL contract, brute-forced: cutting the file at ANY byte
+        offset must replay to an exact prefix of the original events —
+        never a corrupted/partial record, never an out-of-order subset."""
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        full = _events(12)
+        for seq, etype, payload in full:
+            j.append(etype, payload)
+        j.close()
+        data = open(p, "rb").read()
+        cut = str(tmp_path / "cut")
+        for k in range(len(data) + 1):
+            with open(cut, "wb") as f:
+                f.write(data[:k])
+            try:
+                got = list(Journal.replay(cut))
+            except JournalVersionError:
+                # full magic + torn version bytes fails loudly by design
+                assert 4 <= k < HEADER_SIZE
+                continue
+            assert got == full[: len(got)], f"cut at byte {k}"
+
+    def test_garbage_tail_is_discarded(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.append("a", {})
+        j.close()
+        with open(p, "ab") as f:
+            f.write(struct.pack("<I", 64) + b"\x00" * 10)  # length > bytes
+        assert [e[1] for e in Journal.replay(p)] == ["a"]
+
+
+class TestTornTailProperty:
+    def test_truncation_property(self, tmp_path):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        full = _events(20)
+        for seq, etype, payload in full:
+            j.append(etype, payload)
+        j.close()
+        data = open(p, "rb").read()
+        cut = str(tmp_path / "cut")
+
+        @hyp.given(st.integers(min_value=HEADER_SIZE, max_value=len(data)))
+        @hyp.settings(max_examples=200, deadline=None)
+        def prop(k):
+            with open(cut, "wb") as f:
+                f.write(data[:k])
+            got = list(Journal.replay(cut))
+            assert got == full[: len(got)]
+
+        prop()
+
+
+class TestReadAfter:
+    def test_reads_only_newer_records(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        for _, etype, payload in _events(10):
+            j.append(etype, payload)
+        j.close()
+        out = Journal.read_after(p, after_seq=7)
+        assert [e[0] for e in out] == [8, 9, 10]
+
+    def test_max_records_bounds_batch(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        for _, etype, payload in _events(10):
+            j.append(etype, payload)
+        j.close()
+        out = Journal.read_after(p, after_seq=0, max_records=4)
+        assert [e[0] for e in out] == [1, 2, 3, 4]
+
+    def test_torn_tail_ends_batch(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        for _, etype, payload in _events(5):
+            j.append(etype, payload)
+        j.close()
+        with open(p, "ab") as f:
+            f.write(struct.pack("<I", 999) + b"partial")
+        assert [e[0] for e in Journal.read_after(p, 0)] == [1, 2, 3, 4, 5]
+
+    def test_missing_file_is_empty(self, tmp_path):
+        assert Journal.read_after(str(tmp_path / "nope"), 0) == []
+
+
+class TestMirror:
+    def test_mirror_suppresses_append_replica_writes(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.set_mirror(True)
+        assert j.append("derived", {}) == 0  # suppressed, seq unchanged
+        j.append_replica(1, "from_primary", {"a": 1})
+        j.append_replica(2, "from_primary", {"a": 2})
+        assert j.append("derived", {}) == 2  # still suppressed at current seq
+        j.close()
+        assert [e[1] for e in Journal.replay(p)] == ["from_primary"] * 2
+
+    def test_replica_drops_duplicates_and_stale(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.append_replica(3, "a", {})
+        j.append_replica(3, "a", {})  # duplicate
+        j.append_replica(2, "b", {})  # stale
+        j.append_replica(4, "c", {})
+        j.close()
+        assert [(e[0], e[1]) for e in Journal.replay(p)] == [(3, "a"), (4, "c")]
+
+    def test_promotion_continues_at_replicated_seq(self, tmp_path):
+        p = str(tmp_path / "j")
+        j = Journal(p)
+        j.set_mirror(True)
+        j.append_replica(5, "replicated", {})
+        j.set_mirror(False)
+        assert j.append("own", {}) == 6
+        j.close()
+        assert [(e[0], e[1]) for e in Journal.replay(p)] == [
+            (5, "replicated"),
+            (6, "own"),
+        ]
