@@ -1,0 +1,77 @@
+"""repro.analysis — repo-specific static analysis for the control plane.
+
+Three AST passes over ``src/repro/`` (see the sibling modules for the rule
+details):
+
+1. ``locks``        — lock discipline: unlocked writes to guarded
+                      attributes, lock-order cycles, blocking calls under
+                      a lock (L001/L002/L003).
+2. ``journal_pass`` — journal/replay conformance: every
+                      ``_journal.append("etype")`` needs an ``apply_event``
+                      branch and vice versa; journaled state must not be
+                      mutated off the replay/append path (J001/J002/J003).
+3. ``rpc_pass``     — RPC surface conformance: ``rpc_*`` handlers need a
+                      ``protocol.py`` doc entry, a client stub call site,
+                      and dict payloads (R001/R002/R003).
+
+Run it as ``python -m repro.analysis --strict`` (the CI gate): exit 1 on
+any finding that is neither in ``analysis/baseline.txt`` nor suppressed
+inline with ``# analysis: allow(CODE)``.  The dynamic chaos harness
+(``tests/chaos.py``) samples the same invariants at runtime; this package
+pins them at review time.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Set, Tuple
+
+from . import journal_pass, locks, rpc_pass
+from .findings import (
+    Finding,
+    SuppressionIndex,
+    load_baseline,
+    split_new,
+    write_baseline,
+)
+from .model import Project, build_project
+
+__all__ = [
+    "Finding",
+    "analyze",
+    "build_project",
+    "default_root",
+    "default_baseline",
+    "run_analysis",
+]
+
+PASSES = (locks.run, journal_pass.run, rpc_pass.run)
+
+
+def default_root() -> Path:
+    """The tree the analyzer self-hosts on: ``src/repro`` (this package's parent)."""
+    return Path(__file__).resolve().parents[1]
+
+
+def default_baseline() -> Path:
+    return Path(__file__).resolve().parent / "baseline.txt"
+
+
+def run_analysis(root: Path) -> List[Finding]:
+    """All passes over ``root``; findings sorted by (file, line, code)."""
+    project = build_project(root)
+    findings: List[Finding] = []
+    for p in PASSES:
+        findings.extend(p(project))
+    return sorted(set(findings), key=lambda f: (f.file, f.line, f.code, f.message))
+
+
+def analyze(
+    root: Optional[Path] = None, baseline_path: Optional[Path] = None
+) -> Tuple[List[Finding], List[Finding]]:
+    """Returns (new, accepted) findings after baseline + inline suppressions."""
+    root = (root or default_root()).resolve()
+    findings = run_analysis(root)
+    files = sorted(root.rglob("*.py"))
+    suppressions = SuppressionIndex.scan(root, files)
+    baseline: Set[str] = load_baseline(baseline_path or default_baseline())
+    return split_new(findings, baseline, suppressions)

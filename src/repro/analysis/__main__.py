@@ -1,0 +1,58 @@
+"""CLI for the static-analysis suite.
+
+    python -m repro.analysis                 # report all findings
+    python -m repro.analysis --strict        # CI gate: exit 1 on NEW findings
+    python -m repro.analysis --write-baseline
+    python -m repro.analysis --root PATH     # analyze a different tree
+                                             # (used by the seeded-divergence test)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import analyze, default_baseline, default_root, run_analysis
+from .findings import SuppressionIndex, write_baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="tree to analyze (default: the installed src/repro)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: analysis/baseline.txt)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any finding is not baselined/suppressed")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--show-accepted", action="store_true",
+                    help="also print baselined/suppressed findings")
+    args = ap.parse_args(argv)
+
+    root = (args.root or default_root()).resolve()
+    baseline_path = args.baseline or default_baseline()
+
+    if args.write_baseline:
+        findings = run_analysis(root)
+        suppressions = SuppressionIndex.scan(root, sorted(root.rglob("*.py")))
+        kept = [f for f in findings if not suppressions.allows(f)]
+        write_baseline(baseline_path, kept)
+        print(f"wrote {len(kept)} finding(s) to {baseline_path}")
+        return 0
+
+    new, accepted = analyze(root, baseline_path)
+    for f in new:
+        print(f.render())
+    if args.show_accepted:
+        for f in accepted:
+            print(f"[accepted] {f.render()}")
+    summary = f"{len(new)} new finding(s), {len(accepted)} accepted (baseline/inline)"
+    print(summary, file=sys.stderr)
+    if args.strict and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Finding model, inline suppressions, and the checked-in baseline.
+
+A finding is ``file:line CODE message``.  Two escape hatches keep the CI
+gate (`python -m repro.analysis --strict`) quiet on *accepted* findings
+while still failing on new ones:
+
+* **Inline suppression** — ``# analysis: allow(CODE)`` on the flagged line
+  or the line directly above it.  Use for intentional, load-bearing
+  exceptions and put the justification in the same comment.
+* **Baseline** — ``analysis/baseline.txt`` holds accepted findings as
+  ``<relpath> <CODE> <message>`` (line numbers omitted so the baseline
+  survives unrelated edits).  ``--write-baseline`` regenerates it.
+
+Codes:
+
+=====  ====================================================================
+L001   write to a lock-guarded attribute without holding the lock
+L002   lock-order cycle across classes (deadlock risk)
+L003   blocking call (I/O, sleep, RPC, fsync) while holding a lock
+J001   journal append of an event type with no apply_event branch
+J002   apply_event branch for an event type that is never appended
+J003   mutation of journaled dispatcher state outside the replay/append path
+R001   rpc_* handler not documented in protocol.py
+R002   rpc_* handler with no client stub call site
+R003   rpc_* handler returning a non-dict / non-serializable payload
+=====  ====================================================================
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+ALL_CODES = (
+    "L001", "L002", "L003",
+    "J001", "J002", "J003",
+    "R001", "R002", "R003",
+)
+
+_ALLOW_RE = re.compile(r"analysis:\s*allow\(([A-Z0-9,\s]+)\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    file: str  # path relative to the analysis root, POSIX separators
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} {self.code} {self.message}"
+
+    def baseline_key(self) -> str:
+        # Line numbers are deliberately absent: the baseline must survive
+        # unrelated edits shifting code around.
+        return f"{self.file} {self.code} {self.message}"
+
+
+@dataclass
+class SuppressionIndex:
+    """Per-file map of line -> codes allowed on that line."""
+
+    by_file: Dict[str, Dict[int, Set[str]]] = field(default_factory=dict)
+
+    @staticmethod
+    def scan(root: Path, files: List[Path]) -> "SuppressionIndex":
+        idx = SuppressionIndex()
+        for path in files:
+            rel = path.relative_to(root).as_posix()
+            lines: Dict[int, Set[str]] = {}
+            try:
+                text = path.read_text()
+            except OSError:
+                continue
+            for i, src_line in enumerate(text.splitlines(), start=1):
+                m = _ALLOW_RE.search(src_line)
+                if not m:
+                    continue
+                codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                # The comment covers its own line and the line below it
+                # (so a suppression can sit above a multi-line statement).
+                lines.setdefault(i, set()).update(codes)
+                lines.setdefault(i + 1, set()).update(codes)
+            if lines:
+                idx.by_file[rel] = lines
+        return idx
+
+    def allows(self, f: Finding) -> bool:
+        return f.code in self.by_file.get(f.file, {}).get(f.line, set())
+
+
+def load_baseline(path: Path) -> Set[str]:
+    """Baseline file: one ``baseline_key`` per line; ``#`` comments allowed."""
+    if not path.exists():
+        return set()
+    keys: Set[str] = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        keys.add(line)
+    return keys
+
+
+def write_baseline(path: Path, findings: List[Finding]) -> None:
+    keys = sorted({f.baseline_key() for f in findings})
+    header = (
+        "# repro.analysis baseline — accepted findings, one per line as\n"
+        "# '<relpath> <CODE> <message>' (no line numbers; see findings.py).\n"
+        "# Regenerate with: python -m repro.analysis --write-baseline\n"
+        "# Shrink it when you fix an entry; --strict fails on NEW findings only.\n"
+    )
+    path.write_text(header + "\n".join(keys) + ("\n" if keys else ""))
+
+
+def split_new(
+    findings: List[Finding], baseline: Set[str], suppressions: SuppressionIndex
+) -> Tuple[List[Finding], List[Finding]]:
+    """Partition into (new, accepted) against baseline + inline allows."""
+    new: List[Finding] = []
+    accepted: List[Finding] = []
+    for f in findings:
+        if suppressions.allows(f) or f.baseline_key() in baseline:
+            accepted.append(f)
+        else:
+            new.append(f)
+    return new, accepted

@@ -1,0 +1,195 @@
+"""Pass 2 — journal/replay conformance (J001, J002, J003).
+
+The dispatcher's WAL contract is append-before-apply: every state change is
+journaled as ``self._journal.append("<etype>", payload)`` and must be
+reproducible by ``apply_event`` replaying that record (restart and
+hot-standby tail both go through it).  The chaos harness samples this
+equivalence dynamically; this pass pins it statically:
+
+* **J001** — an appended event type with no matching branch in any
+  ``apply*_event`` function: replay silently drops the event.
+* **J002** — an ``apply*_event`` branch for an event type that is never
+  appended: dead replay code, usually a rename that forgot the write path.
+  (The ``"snapshot"`` record is exempt: it is produced by journal
+  compaction — ``Journal.snapshot()`` — not by ``append``.)
+* **J003** — a mutation of journaled dispatcher state (an attribute the
+  replay path writes) from a function that is neither reachable from
+  ``apply*_event`` nor itself journaling (no ``_journal.append`` in it or
+  in a direct callee): such a write exists only on the primary and is lost
+  on replay.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from .findings import Finding
+from .model import ClassInfo, FunctionInfo, Project
+
+APPLY_NAMES_HINT = "apply"  # functions named apply*_event* are replay entry points
+# Event types that legitimately appear in replay without an append call site.
+REPLAY_ONLY_ETYPES = {"snapshot"}
+
+
+def _is_apply_func(name: str) -> bool:
+    return name.startswith("apply") and "event" in name
+
+
+def _journal_append_sites(func: FunctionInfo) -> List:
+    return [
+        c for c in func.calls
+        if c.name.rsplit(".", 1)[-1] == "append" and "journal" in c.name.lower()
+    ]
+
+
+def _collect_branch_etypes(project: Project, func: FunctionInfo) -> Dict[str, int]:
+    """Parse the apply function's source for ``etype == "x"`` branches."""
+    path = project.root / func.module
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return {}
+    target: ast.AST = None
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and node.name == func.name
+            and node.lineno == func.line
+        ):
+            target = node
+            break
+    if target is None:
+        return {}
+    etypes: Dict[str, int] = {}
+    for node in ast.walk(target):
+        if not isinstance(node, ast.Compare) or len(node.ops) != 1:
+            continue
+        op, comp = node.ops[0], node.comparators[0]
+        if isinstance(op, ast.Eq) and isinstance(comp, ast.Constant) and isinstance(
+            comp.value, str
+        ):
+            etypes.setdefault(comp.value, node.lineno)
+        elif isinstance(op, ast.In) and isinstance(comp, (ast.Tuple, ast.Set, ast.List)):
+            for el in comp.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    etypes.setdefault(el.value, node.lineno)
+    return etypes
+
+
+def _dispatcher_group(project: Project) -> List[ClassInfo]:
+    """The class group containing the apply*_event replay entry points."""
+    for group in project.class_groups():
+        for c in group:
+            for f in c.functions.values():
+                if _is_apply_func(f.name):
+                    return group
+    return []
+
+
+def _replay_closure(group: List[ClassInfo]) -> Set[str]:
+    """Method names reachable from the apply entry points via self.* calls."""
+    methods: Dict[str, List[FunctionInfo]] = {}
+    for c in group:
+        for f in c.functions.values():
+            if not f.is_nested:
+                methods.setdefault(f.name, []).append(f)
+    frontier = [n for n in methods if _is_apply_func(n)]
+    seen: Set[str] = set(frontier)
+    while frontier:
+        name = frontier.pop()
+        for f in methods[name]:
+            for call in f.calls:
+                parts = call.name.split(".")
+                if len(parts) == 2 and parts[0] == "self" and parts[1] in methods:
+                    if parts[1] not in seen:
+                        seen.add(parts[1])
+                        frontier.append(parts[1])
+    return seen
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    group = _dispatcher_group(project)
+    if not group:
+        return findings
+    funcs: List[FunctionInfo] = [
+        f for c in group for f in c.functions.values()
+    ]
+
+    # -- appended vs applied ------------------------------------------------
+    appended: Dict[str, List[Tuple[str, int]]] = {}
+    for f in funcs:
+        for site in _journal_append_sites(f):
+            if site.str_arg0 is not None:
+                appended.setdefault(site.str_arg0, []).append((f.module, site.line))
+    applied: Dict[str, Tuple[str, int]] = {}
+    for f in funcs:
+        if not _is_apply_func(f.name):
+            continue
+        for etype, line in _collect_branch_etypes(project, f).items():
+            applied.setdefault(etype, (f.module, line))
+
+    for etype, sites in sorted(appended.items()):
+        if etype not in applied:
+            module, line = sites[0]
+            findings.append(
+                Finding(
+                    file=module, line=line, code="J001",
+                    message=(
+                        f"journal append of '{etype}' has no apply_event "
+                        "branch (replay drops it)"
+                    ),
+                )
+            )
+    for etype, (module, line) in sorted(applied.items()):
+        if etype not in appended and etype not in REPLAY_ONLY_ETYPES:
+            findings.append(
+                Finding(
+                    file=module, line=line, code="J002",
+                    message=(
+                        f"apply_event branch for '{etype}' but nothing "
+                        "appends it (dead replay path)"
+                    ),
+                )
+            )
+
+    # -- J003: journaled-state writes off the replay/append path ------------
+    closure = _replay_closure(group)
+    journaled_attrs: Set[str] = set()
+    lock_attrs = {a for c in group for a in c.lock_attrs}
+    for f in funcs:
+        if f.name in closure and not f.is_nested:
+            for w in f.writes:
+                if w.root == "self" and w.attr.split(".")[0] not in lock_attrs:
+                    journaled_attrs.add(w.attr)
+    appenders: Set[str] = {
+        f.name for f in funcs if _journal_append_sites(f) and not f.is_nested
+    }
+    method_names = {f.name for f in funcs if not f.is_nested}
+    for f in funcs:
+        if f.is_nested or f.name in closure or f.name in appenders:
+            continue
+        if f.name == "__init__" or f.name.startswith("close"):
+            continue
+        # One hop of grace: a function that calls an appender is on the
+        # append path (the append dominates the mutation by convention).
+        calls_appender = any(
+            c.name.split(".")[1] in appenders
+            for c in f.calls
+            if c.name.startswith("self.") and len(c.name.split(".")) == 2
+            and c.name.split(".")[1] in method_names
+        )
+        if calls_appender:
+            continue
+        for w in f.writes:
+            if w.root == "self" and w.attr in journaled_attrs:
+                findings.append(
+                    Finding(
+                        file=f.module, line=w.line, code="J003",
+                        message=(
+                            f"write to journaled state '{w.attr}' outside "
+                            "the replay/append path (lost on replay)"
+                        ),
+                    )
+                )
+    return findings

@@ -1,0 +1,336 @@
+"""Pass 1 — lock discipline (L001 unlocked write, L002 order cycle, L003
+blocking call under lock).
+
+Ground truth is inferred, not declared: for every class group (a class plus
+its mixins/bases analyzed as one unit) that owns a ``threading.Lock /
+RLock / Condition`` attribute, the set of attributes mutated under ``with
+self.<lock>:`` defines the guarded set.  A later write to a guarded
+attribute with no lock held is an L001.
+
+Two refinements keep the false-positive rate workable:
+
+* **Lock-held helpers.** The codebase's convention is a docstring marker —
+  ``Caller holds ``self._lock``.`` — on internal helpers invoked from
+  locked scopes.  The pass honors the marker, and additionally runs a
+  fixed point: a method whose every intra-group call site is itself inside
+  a locked scope (or inside another lock-held method) inherits the held
+  set.  ``__init__`` is exempt (construction is single-threaded).
+* **Condition waits.** ``self._cond.wait()`` while holding ``self._cond``
+  releases the lock by contract and is not a blocking call under lock.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .model import ClassInfo, FunctionInfo, Project
+
+_HOLDS_RE = re.compile(r"callers?\s+(?:must\s+)?hold", re.IGNORECASE)
+
+# Callee-name predicates for "this call can block" (L003).
+_BLOCKING_EXACT = {
+    "time.sleep", "os.fsync", "os.replace", "shutil.rmtree",
+    "socket.create_connection", "open",
+}
+_BLOCKING_SUFFIX = (".sendall", ".recv", ".accept", ".connect", ".fsync")
+
+
+def _held_locks(with_items: Tuple[str, ...], group_locks: Set[str]) -> FrozenSet[str]:
+    held = set()
+    for item in with_items:
+        parts = item.split(".")
+        if len(parts) == 2 and parts[0] == "self" and parts[1] in group_locks:
+            held.add(parts[1])
+    return frozenset(held)
+
+
+def _annotated_locks(func: FunctionInfo, group_locks: Set[str]) -> FrozenSet[str]:
+    doc = func.docstring
+    if not doc or not _HOLDS_RE.search(doc):
+        return frozenset()
+    mentioned = {a for a in group_locks if f"self.{a}" in doc}
+    if mentioned:
+        return frozenset(mentioned)
+    if len(group_locks) == 1:
+        return frozenset(group_locks)
+    return frozenset()
+
+
+class GroupAnalysis:
+    """Resolved lock facts for one class group."""
+
+    def __init__(self, project: Project, group: List[ClassInfo]):
+        self.project = project
+        self.group = group
+        self.locks: Set[str] = set()
+        for c in group:
+            self.locks.update(c.lock_attrs)
+        self.lock_owner: Dict[str, str] = {}
+        for c in sorted(group, key=lambda c: (c.module, c.line)):
+            for a in c.lock_attrs:
+                self.lock_owner.setdefault(a, c.name)
+        # method name -> FunctionInfo list (mixins could collide; keep all)
+        self.methods: Dict[str, List[FunctionInfo]] = {}
+        self.functions: List[FunctionInfo] = []
+        for c in group:
+            for key, f in c.functions.items():
+                self.functions.append(f)
+                if not f.is_nested:
+                    self.methods.setdefault(f.name, []).append(f)
+        self.assumed = self._fixed_point()
+
+    def _fixed_point(self) -> Dict[str, FrozenSet[str]]:
+        """assumed[qualname] = locks a method may assume its caller holds."""
+        # Intra-group call sites per callee method name.
+        callsites: Dict[str, List] = {name: [] for name in self.methods}
+        for f in self.functions:
+            for c in f.calls:
+                parts = c.name.split(".")
+                if len(parts) == 2 and parts[0] == "self" and parts[1] in self.methods:
+                    callsites[parts[1]].append(c)
+        assumed: Dict[str, FrozenSet[str]] = {}
+        annotated: Dict[str, FrozenSet[str]] = {}
+        for name, funcs in self.methods.items():
+            ann = frozenset().union(*(_annotated_locks(f, self.locks) for f in funcs))
+            annotated[name] = ann
+            if ann:
+                assumed[name] = ann
+            elif callsites[name]:
+                assumed[name] = frozenset(self.locks)  # optimistic top; shrink below
+            else:
+                assumed[name] = frozenset()
+        changed = True
+        while changed:
+            changed = False
+            for name in self.methods:
+                if annotated[name] or not callsites[name]:
+                    continue
+                meet: Optional[FrozenSet[str]] = None
+                for site in callsites[name]:
+                    caller = site.func
+                    caller_assumed = (
+                        assumed.get(caller.name, frozenset())
+                        if caller.class_name and not caller.is_nested
+                        else frozenset()
+                    )
+                    eff = _held_locks(site.with_items, self.locks) | caller_assumed
+                    meet = eff if meet is None else (meet & eff)
+                meet = meet or frozenset()
+                if meet != assumed[name]:
+                    assumed[name] = meet
+                    changed = True
+        return assumed
+
+    def effective(self, func: FunctionInfo, with_items: Tuple[str, ...]) -> FrozenSet[str]:
+        held = _held_locks(with_items, self.locks)
+        if func.class_name and not func.is_nested:
+            held |= self.assumed.get(func.name, frozenset())
+        return held
+
+
+def _check_unlocked_writes(ga: GroupAnalysis, findings: List[Finding]) -> None:
+    if not ga.locks:
+        return
+    guarded: Dict[str, Set[str]] = {}
+    for f in ga.functions:
+        if f.name == "__init__":
+            continue
+        for w in f.writes:
+            if w.root != "self" or w.attr.split(".")[0] in ga.locks:
+                continue
+            locks = ga.effective(f, w.with_items)
+            if locks:
+                guarded.setdefault(w.attr, set()).update(locks)
+    for f in ga.functions:
+        if f.name == "__init__":
+            continue
+        for w in f.writes:
+            if w.root != "self" or w.attr not in guarded:
+                continue
+            locks = ga.effective(f, w.with_items)
+            if locks & guarded[w.attr]:
+                continue
+            lock = sorted(guarded[w.attr])[0]
+            owner = ga.lock_owner.get(lock, f.class_name or "?")
+            findings.append(
+                Finding(
+                    file=f.module, line=w.line, code="L001",
+                    message=(
+                        f"unlocked write to '{w.attr}' "
+                        f"(guarded by '{owner}.{lock}' elsewhere)"
+                    ),
+                )
+            )
+
+
+def _is_blocking(name: str, const_kwargs, with_items: Tuple[str, ...]) -> Optional[str]:
+    if name in _BLOCKING_EXACT or name.endswith(_BLOCKING_SUFFIX):
+        return name
+    last = name.rsplit(".", 1)[-1]
+    if last == "call" and "." in name:
+        return name  # RPC stub call (Stub.call / conn.call)
+    if last == "wait" and "." in name:
+        receiver = name.rsplit(".", 1)[0]
+        if receiver not in with_items:
+            return name  # Event.wait etc.; cond.wait on a HELD cond releases it
+        return None
+    if last in ("append", "append_replica") and "journal" in name.lower():
+        if const_kwargs.get("sync") is True:
+            return f"{name}(sync=True)"  # fsync'd WAL append
+    return None
+
+
+def _check_blocking_under_lock(ga: GroupAnalysis, findings: List[Finding]) -> None:
+    if not ga.locks:
+        return
+    for f in ga.functions:
+        if f.name == "__init__":
+            continue
+        for c in f.calls:
+            locks = ga.effective(f, c.with_items)
+            if not locks:
+                continue
+            blocked = _is_blocking(c.name, c.const_kwargs, c.with_items)
+            if blocked is None:
+                continue
+            lock = sorted(locks)[0]
+            owner = ga.lock_owner.get(lock, f.class_name or "?")
+            findings.append(
+                Finding(
+                    file=f.module, line=c.line, code="L003",
+                    message=(
+                        f"blocking call '{blocked}' while holding "
+                        f"'{owner}.{lock}'"
+                    ),
+                )
+            )
+
+
+# -- L002: lock-order cycles -------------------------------------------------
+def _resolve_lock_node(
+    project: Project, ga: GroupAnalysis, func: FunctionInfo, item: str
+) -> Optional[str]:
+    """Map a with-item expression to a ``Class.lockattr`` node, or None."""
+    parts = item.split(".")
+    # one alias hop: ``mgr._lock`` with ``mgr = job.shard_mgr``
+    if parts[0] != "self" and parts[0] in func.local_aliases:
+        parts = func.local_aliases[parts[0]].split(".") + parts[1:]
+    if len(parts) == 2 and parts[0] == "self" and parts[1] in ga.locks:
+        return f"{ga.lock_owner[parts[1]]}.{parts[1]}"
+    if len(parts) >= 2:
+        lock_attr, holder_attr = parts[-1], parts[-2]
+        for cls_name in sorted(project.attr_classes.get(holder_attr, ())):
+            for c in project.all_classes():
+                if c.name == cls_name and lock_attr in c.lock_attrs:
+                    return f"{c.name}.{lock_attr}"
+    return None
+
+
+def _callee_lock_nodes(
+    project: Project, call_name: str, func: FunctionInfo
+) -> List[str]:
+    """``self.<attr>.<meth>()`` -> lock nodes that callee is known to take."""
+    parts = call_name.split(".")
+    if parts[0] != "self" and parts[0] in func.local_aliases:
+        parts = func.local_aliases[parts[0]].split(".") + parts[1:]
+    if len(parts) != 3 or parts[0] != "self":
+        return []
+    holder_attr, meth = parts[1], parts[2]
+    nodes: List[str] = []
+    for cls_name in sorted(project.attr_classes.get(holder_attr, ())):
+        for c in project.all_classes():
+            if c.name != cls_name or meth not in c.functions:
+                continue
+            callee = c.functions[meth]
+            for acq in callee.acquires:
+                p = acq.item.split(".")
+                if len(p) == 2 and p[0] == "self" and p[1] in c.lock_attrs:
+                    nodes.append(f"{c.name}.{p[1]}")
+    return nodes
+
+
+def _check_lock_order(
+    project: Project, analyses: List[GroupAnalysis], findings: List[Finding]
+) -> None:
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}  # edge -> exemplar site
+
+    def add_edge(a: str, b: str, module: str, line: int) -> None:
+        if a != b:
+            edges.setdefault((a, b), (module, line))
+
+    for ga in analyses:
+        for f in ga.functions:
+            for acq in f.acquires:
+                target = _resolve_lock_node(project, ga, f, acq.item)
+                if target is None:
+                    continue
+                held_nodes = [
+                    n for it in acq.held_before
+                    if (n := _resolve_lock_node(project, ga, f, it))
+                ]
+                assumed = (
+                    ga.assumed.get(f.name, frozenset())
+                    if f.class_name and not f.is_nested else frozenset()
+                )
+                held_nodes += [f"{ga.lock_owner[a]}.{a}" for a in assumed]
+                for h in held_nodes:
+                    add_edge(h, target, f.module, acq.line)
+            for c in f.calls:
+                locks = ga.effective(f, c.with_items)
+                if not locks:
+                    continue
+                for target in _callee_lock_nodes(project, c.name, f):
+                    for a in locks:
+                        add_edge(f"{ga.lock_owner[a]}.{a}", target, f.module, c.line)
+
+    # cycle detection (iterative DFS, deterministic order)
+    adj: Dict[str, List[str]] = {}
+    for (a, b) in edges:
+        adj.setdefault(a, []).append(b)
+    for k in adj:
+        adj[k].sort()
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color: Dict[str, int] = {}
+    stack_path: List[str] = []
+    reported: Set[Tuple[str, ...]] = set()
+
+    def dfs(node: str) -> None:
+        color[node] = GRAY
+        stack_path.append(node)
+        for nxt in adj.get(node, ()):
+            if color.get(nxt, WHITE) == WHITE:
+                dfs(nxt)
+            elif color.get(nxt) == GRAY:
+                i = stack_path.index(nxt)
+                cycle = tuple(stack_path[i:]) + (nxt,)
+                canon = tuple(sorted(cycle[:-1]))
+                if canon not in reported:
+                    reported.add(canon)
+                    module, line = edges[(node, nxt)]
+                    findings.append(
+                        Finding(
+                            file=module, line=line, code="L002",
+                            message="lock-order cycle: " + " -> ".join(cycle),
+                        )
+                    )
+        stack_path.pop()
+        color[node] = BLACK
+
+    for node in sorted(adj):
+        if color.get(node, WHITE) == WHITE:
+            dfs(node)
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    analyses = [
+        GroupAnalysis(project, group)
+        for group in project.class_groups()
+        if any(c.lock_attrs for c in group)
+    ]
+    for ga in analyses:
+        _check_unlocked_writes(ga, findings)
+        _check_blocking_under_lock(ga, findings)
+    _check_lock_order(project, analyses, findings)
+    return findings

@@ -1,0 +1,421 @@
+"""Shared AST extraction for the analysis passes.
+
+One walk per module produces a language-neutral model:
+
+* which classes own ``threading.Lock/RLock/Condition`` attributes,
+* every write to a ``self.<attr>`` (with the stack of ``with``-items held
+  at the write site),
+* every call site (dotted callee name, held ``with``-items, string first
+  argument, keyword constants),
+* class inheritance, so mixin families (the dispatcher is four classes)
+  are analyzed as one unit ("class group").
+
+The model is intentionally syntactic — no type inference beyond a small
+``attr name -> class`` registry built from ``x.<attr> = ClassName(...)``
+assignments.  The passes consume it in a resolve phase where the merged
+class groups are known.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+LOCK_CTORS = {"Lock", "RLock", "Condition"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` chains; None for anything not a pure name chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    if isinstance(node, ast.Call):
+        # ``Stub(addr).call`` — render the callee chain with () marker so
+        # consumers can still match the trailing attribute.
+        base = dotted_name(node.func)
+        return f"{base}()" if base else None
+    return None
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    """``threading.Lock()`` / ``Lock()`` / ``field(default_factory=threading.Lock)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func) or ""
+    last = name.rsplit(".", 1)[-1]
+    if last in LOCK_CTORS:
+        return True
+    if last == "field":
+        for kw in node.keywords:
+            if kw.arg == "default_factory":
+                factory = dotted_name(kw.value) or ""
+                if factory.rsplit(".", 1)[-1] in LOCK_CTORS:
+                    return True
+    return False
+
+
+@dataclass
+class AttrWrite:
+    attr: str  # first attribute after the root (``self._seq`` -> ``_seq``)
+    root: str  # root name of the target chain (usually ``self``)
+    line: int
+    with_items: Tuple[str, ...]  # dotted exprs of enclosing with-statements
+    func: "FunctionInfo" = field(repr=False, default=None)  # back-ref
+    augmented: bool = False
+
+
+@dataclass
+class CallSite:
+    name: str  # dotted callee, e.g. ``self._journal.append`` or ``time.sleep``
+    line: int
+    with_items: Tuple[str, ...]
+    str_arg0: Optional[str] = None  # first positional arg if a str constant
+    const_kwargs: Dict[str, object] = field(default_factory=dict)
+    func: "FunctionInfo" = field(repr=False, default=None)
+
+
+@dataclass
+class WithAcquire:
+    item: str  # dotted expr of the with-item, e.g. ``self._lock``
+    line: int
+    held_before: Tuple[str, ...]  # with-items already held at this point
+
+
+@dataclass
+class FunctionInfo:
+    name: str
+    qualname: str  # Class.meth or Class.meth.<locals>.inner
+    class_name: Optional[str]
+    module: str  # relpath of the module
+    line: int
+    docstring: str
+    is_nested: bool
+    writes: List[AttrWrite] = field(default_factory=list)
+    calls: List[CallSite] = field(default_factory=list)
+    acquires: List[WithAcquire] = field(default_factory=list)
+    returns: List[ast.Return] = field(default_factory=list)
+    # ``mgr = job.shard_mgr`` — lets the lock-order pass resolve
+    # ``with mgr._lock:`` one alias hop deep.
+    local_aliases: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: str
+    line: int
+    bases: List[str]
+    lock_attrs: Set[str] = field(default_factory=set)
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleInfo:
+    relpath: str
+    classes: Dict[str, ClassInfo] = field(default_factory=dict)
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)  # module-level
+    docstring: str = ""
+
+
+@dataclass
+class Project:
+    root: Path
+    modules: Dict[str, ModuleInfo] = field(default_factory=dict)
+    # attr name -> class names assigned via ``<x>.<attr> = ClassName(...)``
+    attr_classes: Dict[str, Set[str]] = field(default_factory=dict)
+
+    def all_classes(self) -> List[ClassInfo]:
+        return [c for m in self.modules.values() for c in m.classes.values()]
+
+    def all_functions(self) -> List[FunctionInfo]:
+        out: List[FunctionInfo] = []
+        for m in self.modules.values():
+            out.extend(m.functions.values())
+            for c in m.classes.values():
+                out.extend(c.functions.values())
+        return out
+
+    def class_groups(self) -> List[List[ClassInfo]]:
+        """Merge classes related by (name-resolved) inheritance.
+
+        ``Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin)`` and its
+        mixins form one group: the lock lives on the subclass but the guarded
+        writes live in the mixins.
+        """
+        by_name: Dict[str, List[ClassInfo]] = {}
+        for c in self.all_classes():
+            by_name.setdefault(c.name, []).append(c)
+        parent: Dict[Tuple[str, str], Tuple[str, str]] = {}
+
+        def key(c: ClassInfo) -> Tuple[str, str]:
+            return (c.module, c.name)
+
+        def find(k):
+            while parent.get(k, k) != k:
+                parent[k] = parent.get(parent[k], parent[k])
+                k = parent[k]
+            return k
+
+        def union(a, b):
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[ra] = rb
+
+        for c in self.all_classes():
+            parent.setdefault(key(c), key(c))
+            for base in c.bases:
+                base_name = base.rsplit(".", 1)[-1]
+                for bc in by_name.get(base_name, []):
+                    parent.setdefault(key(bc), key(bc))
+                    union(key(c), key(bc))
+        groups: Dict[Tuple[str, str], List[ClassInfo]] = {}
+        for c in self.all_classes():
+            groups.setdefault(find(key(c)), []).append(c)
+        return list(groups.values())
+
+
+class _FunctionWalker(ast.NodeVisitor):
+    """Walk one function body tracking the enclosing with-item stack."""
+
+    def __init__(self, info: FunctionInfo, collector: "_ModuleCollector"):
+        self.info = info
+        self.collector = collector
+        self.with_stack: List[str] = []
+
+    # -- scope boundaries --------------------------------------------------
+    def _nested_function(self, node) -> None:
+        # A nested def runs later, not under the locks held at the def site.
+        qual = f"{self.info.qualname}.<locals>.{node.name}"
+        self.collector.collect_function(
+            node, qual, self.info.class_name, nested=True
+        )
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._nested_function(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._nested_function(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.collector.collect_class(node, nested_in=self.info.qualname)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass  # lambdas run later; their bodies rarely matter here
+
+    # -- with / writes / calls --------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        items: List[str] = []
+        for item in node.items:
+            name = dotted_name(item.context_expr)
+            if name:
+                self.info.acquires.append(
+                    WithAcquire(
+                        item=name, line=item.context_expr.lineno,
+                        held_before=tuple(self.with_stack),
+                    )
+                )
+                items.append(name)
+            # visit the context expression itself (it may be a call)
+            self.visit(item.context_expr)
+        self.with_stack.extend(items)
+        for stmt in node.body:
+            self.visit(stmt)
+        del self.with_stack[len(self.with_stack) - len(items):]
+
+    def _record_write(self, target: ast.AST, augmented: bool) -> None:
+        # Render the full store path, seeing through subscripts:
+        # ``self._tasks[tid] = ...``         -> attr ``_tasks``
+        # ``self.metrics.rpc_count += 1``    -> attr ``metrics.rpc_count``
+        # ``self._jobs[jid].finished = ...`` -> attr ``_jobs.finished``
+        # Full paths keep guard inference per-field: mutating a field of a
+        # shared sub-object is distinct from rebinding the attribute.
+        line = getattr(target, "lineno", None)
+        parts: List[str] = []
+        node = target
+        while True:
+            if isinstance(node, ast.Attribute):
+                parts.append(node.attr)
+                node = node.value
+            elif isinstance(node, ast.Subscript):
+                node = node.value
+            elif isinstance(node, ast.Name):
+                parts.append(node.id)
+                break
+            else:
+                return
+        parts.reverse()
+        if len(parts) < 2 or line is None:
+            return
+        self.info.writes.append(
+            AttrWrite(
+                attr=".".join(parts[1:]),
+                root=parts[0],
+                line=line,
+                with_items=tuple(self.with_stack),
+                func=self.info,
+                augmented=augmented,
+            )
+        )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if isinstance(t, ast.Tuple):
+                for el in t.elts:
+                    self._record_write(el, augmented=False)
+            else:
+                self._record_write(t, augmented=False)
+        self.collector.register_attr_class(node)
+        self.collector.register_lock_attr(node, self.info.class_name)
+        if (
+            len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and isinstance(node.value, (ast.Attribute, ast.Name))
+        ):
+            chain = dotted_name(node.value)
+            if chain:
+                self.info.local_aliases[node.targets[0].id] = chain
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_write(node.target, augmented=True)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_write(node.target, augmented=False)
+            self.visit(node.value)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            self._record_write(t, augmented=False)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func)
+        if name:
+            str_arg0 = None
+            if node.args and isinstance(node.args[0], ast.Constant) and isinstance(
+                node.args[0].value, str
+            ):
+                str_arg0 = node.args[0].value
+            const_kwargs = {
+                kw.arg: kw.value.value
+                for kw in node.keywords
+                if kw.arg and isinstance(kw.value, ast.Constant)
+            }
+            self.info.calls.append(
+                CallSite(
+                    name=name, line=node.lineno,
+                    with_items=tuple(self.with_stack),
+                    str_arg0=str_arg0, const_kwargs=const_kwargs,
+                    func=self.info,
+                )
+            )
+        self.generic_visit(node)
+
+    def visit_Return(self, node: ast.Return) -> None:
+        self.info.returns.append(node)
+        if node.value is not None:
+            self.visit(node.value)
+
+
+class _ModuleCollector:
+    def __init__(self, project: Project, relpath: str, tree: ast.Module):
+        self.project = project
+        self.mod = ModuleInfo(relpath=relpath, docstring=ast.get_docstring(tree) or "")
+        self.current_class: Optional[ClassInfo] = None
+        project.modules[relpath] = self.mod
+        for node in tree.body:
+            self._top(node)
+
+    def _top(self, node: ast.AST) -> None:
+        if isinstance(node, ast.ClassDef):
+            self.collect_class(node, nested_in=None)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.collect_function(node, node.name, class_name=None, nested=False)
+        elif isinstance(node, ast.Assign):
+            self.register_attr_class(node)
+
+    def collect_class(self, node: ast.ClassDef, nested_in: Optional[str]) -> None:
+        name = node.name if not nested_in else f"{nested_in}.<locals>.{node.name}"
+        cls = ClassInfo(
+            name=node.name, module=self.mod.relpath, line=node.lineno,
+            bases=[dotted_name(b) or "?" for b in node.bases],
+        )
+        # Keep nested classes distinct (``TCPServer.__init__.<locals>._Server``).
+        self.mod.classes[name] = cls
+        prev = self.current_class
+        self.current_class = cls
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.collect_function(
+                    stmt, f"{cls.name}.{stmt.name}", class_name=cls.name, nested=False
+                )
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                # dataclass-style: ``_lock: threading.Lock = field(...)``
+                if isinstance(stmt.target, ast.Name) and _is_lock_ctor(stmt.value):
+                    cls.lock_attrs.add(stmt.target.id)
+            elif isinstance(stmt, ast.Assign) and _is_lock_ctor(stmt.value):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        cls.lock_attrs.add(t.id)
+            elif isinstance(stmt, ast.ClassDef):
+                self.collect_class(stmt, nested_in=cls.name)
+        self.current_class = prev
+
+    def collect_function(
+        self, node, qualname: str, class_name: Optional[str], nested: bool
+    ) -> None:
+        info = FunctionInfo(
+            name=node.name, qualname=qualname, class_name=class_name,
+            module=self.mod.relpath, line=node.lineno,
+            docstring=ast.get_docstring(node) or "", is_nested=nested,
+        )
+        owner = self.current_class
+        if owner is not None:
+            owner.functions[qualname.split(".", 1)[-1] if not nested else qualname] = info
+        elif class_name is None:
+            self.mod.functions[qualname] = info
+        walker = _FunctionWalker(info, self)
+        for stmt in node.body:
+            walker.visit(stmt)
+
+    def register_lock_attr(self, node: ast.Assign, class_name: Optional[str]) -> None:
+        """``self.X = threading.Lock()`` inside a method registers X on the class."""
+        if not _is_lock_ctor(node.value) or self.current_class is None:
+            return
+        for t in node.targets:
+            if isinstance(t, ast.Attribute):
+                self.current_class.lock_attrs.add(t.attr)
+
+    def register_attr_class(self, node: ast.Assign) -> None:
+        """``<x>.<attr> = ClassName(...)`` feeds the attr -> class registry."""
+        if not isinstance(node.value, ast.Call):
+            return
+        ctor = dotted_name(node.value.func)
+        if not ctor:
+            return
+        cls_name = ctor.rsplit(".", 1)[-1]
+        if not cls_name or not cls_name[0].isupper():
+            return
+        for t in node.targets:
+            if isinstance(t, ast.Attribute):
+                self.project.attr_classes.setdefault(t.attr, set()).add(cls_name)
+
+
+def build_project(root: Path, skip_dirs: Tuple[str, ...] = ()) -> Project:
+    """Parse every ``.py`` under ``root`` into a :class:`Project` model."""
+    root = root.resolve()
+    project = Project(root=root)
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root)
+        if any(part in skip_dirs or part == "__pycache__" for part in rel.parts):
+            continue
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError:
+            continue  # not our job; python/pytest will report it
+        _ModuleCollector(project, rel.as_posix(), tree)
+    return project

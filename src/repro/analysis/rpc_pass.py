@@ -1,0 +1,156 @@
+"""Pass 3 — RPC surface conformance (R001, R002, R003).
+
+Handlers are the ``rpc_*`` methods dispatched by ``Dispatcher.handle`` /
+``Worker.handle``.  For each one:
+
+* **R001** — the bare method name (without the ``rpc_`` prefix) must appear
+  in the ``protocol.py`` module docstring: that docstring IS the protocol
+  spec; an undocumented method is an undocumented wire surface.
+* **R002** — some client-side stub call site must invoke it: a call whose
+  callee ends in ``call`` with the method name as a string first argument
+  (``stub.call("get_shard", ...)``, ``self._try_call("complete_shard", …)``).
+  A handler nothing calls is dead wire surface — or its caller builds the
+  method name dynamically, which defeats this pass and grep alike.
+* **R003** — the handler must return dict payloads (both transports ship
+  dicts; a set anywhere in the payload does not survive msgpack/JSON).
+  Only provable violations are flagged: a literal non-dict return, or a
+  set literal inside the returned expression.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .model import FunctionInfo, Project
+
+
+def _protocol_docstring(project: Project) -> Tuple[Optional[str], str]:
+    for relpath, mod in sorted(project.modules.items()):
+        if relpath.rsplit("/", 1)[-1] == "protocol.py":
+            return relpath, mod.docstring
+    return None, ""
+
+
+def _handlers(project: Project) -> List[FunctionInfo]:
+    out = []
+    for mod in project.modules.values():
+        for cls in mod.classes.values():
+            for f in cls.functions.values():
+                if f.name.startswith("rpc_") and not f.is_nested:
+                    out.append(f)
+    return out
+
+
+def _stub_called_methods(project: Project) -> Set[str]:
+    called: Set[str] = set()
+    for f in project.all_functions():
+        for c in f.calls:
+            if c.str_arg0 is not None and c.name.rsplit(".", 1)[-1].endswith("call"):
+                called.add(c.str_arg0)
+    return called
+
+
+def _check_returns(project: Project, func: FunctionInfo) -> List[Tuple[int, str]]:
+    """Provable non-dict / non-serializable returns in one handler."""
+    path = project.root / func.module
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return []
+    target = None
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and node.name == func.name
+            and node.lineno == func.line
+        ):
+            target = node
+            break
+    if target is None:
+        return []
+    bad: List[Tuple[int, str]] = []
+    returns: List[ast.Return] = []
+    stack: List[ast.AST] = list(target.body)
+    while stack:  # stop at nested def/class boundaries (their returns aren't ours)
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef)):
+            continue
+        if isinstance(node, ast.Return):
+            returns.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    for node in sorted(returns, key=lambda n: n.lineno):
+        if node.value is None:
+            continue
+        v = node.value
+        if isinstance(v, (ast.Set, ast.SetComp)):
+            bad.append((node.lineno, "returns a set (not wire-serializable)"))
+        elif isinstance(v, (ast.Tuple, ast.List, ast.ListComp)):
+            bad.append((node.lineno, "returns a non-dict payload"))
+        elif isinstance(v, ast.Constant) and not isinstance(v.value, dict):
+            bad.append((node.lineno, "returns a non-dict constant payload"))
+        else:
+            # A set that is immediately consumed by a list-/scalar-producing
+            # builtin (``sorted({...})``) never reaches the wire.
+            consumed = set()
+            for sub in ast.walk(v):
+                if isinstance(sub, ast.Call):
+                    fn = sub.func
+                    if isinstance(fn, ast.Name) and fn.id in (
+                        "sorted", "list", "tuple", "len", "sum",
+                        "min", "max", "any", "all",
+                    ):
+                        consumed.update(
+                            id(a) for a in sub.args
+                            if isinstance(a, (ast.Set, ast.SetComp))
+                        )
+            for sub in ast.walk(v):
+                if isinstance(sub, (ast.Set, ast.SetComp)) and id(sub) not in consumed:
+                    bad.append(
+                        (node.lineno, "set literal inside the returned payload")
+                    )
+                    break
+    return bad
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    handlers = _handlers(project)
+    if not handlers:
+        return findings
+    proto_path, proto_doc = _protocol_docstring(project)
+    called = _stub_called_methods(project)
+
+    for f in sorted(handlers, key=lambda f: (f.module, f.line)):
+        method = f.name[len("rpc_"):]
+        if proto_path is not None and not re.search(
+            rf"(?<!\w){re.escape(method)}(?!\w)", proto_doc
+        ):
+            findings.append(
+                Finding(
+                    file=f.module, line=f.line, code="R001",
+                    message=(
+                        f"rpc handler '{method}' is not documented in "
+                        f"{proto_path}"
+                    ),
+                )
+            )
+        if method not in called:
+            findings.append(
+                Finding(
+                    file=f.module, line=f.line, code="R002",
+                    message=(
+                        f"rpc handler '{method}' has no client stub call "
+                        "site (dead wire surface?)"
+                    ),
+                )
+            )
+        for line, why in _check_returns(project, f):
+            findings.append(
+                Finding(
+                    file=f.module, line=line, code="R003",
+                    message=f"rpc handler '{method}' {why}",
+                )
+            )
+    return findings

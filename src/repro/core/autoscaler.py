@@ -107,6 +107,11 @@ class Autoscaler:
         self._thread: Optional[threading.Thread] = None
         self._logged_errors: Set[type] = set()
         self.decisions: list = []
+        # Serializes scaling decisions: tests and benchmarks drive step()
+        # synchronously while the start()ed background loop also calls it;
+        # unserialized, both read the same stale pool size / _last_action
+        # and can double-actuate one decision.
+        self._step_lock = threading.Lock()
 
     # -- signal extraction --------------------------------------------------
     @staticmethod
@@ -140,6 +145,11 @@ class Autoscaler:
     # -- one scaling decision (callable synchronously from tests) ----------
     def step(self) -> int:
         """Returns the delta applied to the worker pool (-step, 0, +step)."""
+        with self._step_lock:
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
+        """One decision.  Caller must hold ``self._step_lock``."""
         cfg = self.config
         now = time.monotonic()
         if now - self._last_action < cfg.cooldown_s:
@@ -197,6 +207,7 @@ class Autoscaler:
 
     def _fleet_step(self, plan: Dict[str, Any], now: float) -> int:
         """Level 2: resize the global pool only on aggregate imbalance.
+        Caller must hold ``self._step_lock``.
 
         ``unmet`` > 0 means a starving job wanted workers the (already
         rebalanced) fleet could not provide — grow.  ``surplus`` > 0 means

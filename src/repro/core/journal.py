@@ -205,4 +205,13 @@ class Journal:
         return self._seq
 
     def set_seq(self, seq: int) -> None:
-        self._seq = max(self._seq, seq)
+        """Advance the sequence counter to at least ``seq`` (replay path).
+
+        Must hold ``_lock``: ``max`` is a read-modify-write, and a standby
+        tail calls ``append_replica`` (which also writes ``_seq`` under the
+        lock) concurrently with replay-driven ``set_seq`` — an unlocked
+        race here can move ``_seq`` backwards, and the next ``append``
+        would then reuse a sequence number already on disk.
+        """
+        with self._lock:
+            self._seq = max(self._seq, seq)

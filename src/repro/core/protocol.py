@@ -9,6 +9,38 @@ Naming follows the paper's architecture (§3.1): clients register *datasets*
 and join *jobs*; the dispatcher creates per-worker *tasks*; workers serve
 *elements* (batches) to clients.
 
+This docstring is the protocol spec of record: every ``rpc_*`` handler on
+the dispatcher and the workers must be named here (the ``repro.analysis``
+R001 pass enforces it).
+
+Control-plane methods exposed by the dispatcher:
+
+* ``get_or_register_dataset`` — register a serialized pipeline definition;
+  idempotent by fingerprint, so N clients sharing one input pipeline get
+  the same ``dataset_id`` (the paper's ephemeral-sharing precondition).
+* ``get_or_create_job``       — create/join a job over a dataset (name-keyed
+  get-or-create); returns the task list.  Accepts ``weight`` (fleet-
+  scheduler share) next to ``max_workers``; both are journaled.
+* ``client_heartbeat``        — client liveness + consumption progress; the
+  response carries the refreshed task list (worker set changes ride this
+  pull, there is no dispatcher→client push) and round-advance info for
+  coordinated reads.
+* ``register_worker`` / ``worker_heartbeat`` — worker bring-up and liveness;
+  responses carry task assignments and ``snapshot_streams``, heartbeats
+  carry ``cache_stats`` back up (see below).
+* ``remove_worker``           — administrative scale-in: deregister a worker
+  so its tasks migrate immediately instead of waiting for the heartbeat
+  timeout sweep.
+* ``complete_shard``          — dynamic sharding: a worker reports a shard
+  exhausted; the dispatcher journals the completion (at-most-once bookkeeping).
+* ``checkpoint_offset``       — client-side offset checkpoint for the
+  exactly-once visitation path; journaled so a restarted dispatcher
+  resumes handing out elements after the checkpoint.
+* ``stats``                   — aggregate observability snapshot (jobs,
+  workers, cache sharing, autoscaler state); read-only, safe to poll.
+* ``list_workers``            — admin view of registered workers and their
+  tags/liveness; read-only (``LocalOrchestrator.list_workers`` wraps it).
+
 Data-plane methods exposed by workers:
 
 * ``get_element``  — v1: one element per RPC (kept as the compatibility
@@ -21,6 +53,10 @@ Data-plane methods exposed by workers:
 
 Clients discover a v1-only worker by the unknown-method error and fall back
 to ``get_element`` for that task (see ``client.DataServiceClient``).
+
+Workers also answer two control-plane probes: ``ping`` (liveness + advertised
+data-plane version, used by the orchestrator at worker bring-up) and
+``stats`` (the worker-local metrics snapshot mirrored into heartbeats).
 
 Snapshot / materialization RPCs (dispatcher-side, see ``repro.snapshot``):
 

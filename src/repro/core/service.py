@@ -14,12 +14,15 @@ rounds while an idle worker exists).
 """
 from __future__ import annotations
 
+import logging
 import os
 import tempfile
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple, Type
+
+logger = logging.getLogger(__name__)
 
 from .dispatcher import CrashPoints, Dispatcher, StandbyDispatcher
 from .protocol import new_id
@@ -85,6 +88,20 @@ class LocalOrchestrator:
         self._replication_interval = replication_interval
         self.standby: Optional[StandbyDispatcher] = None
         self._standby_idx = 0
+        # Log-first-instance: background/cleanup paths swallow expected
+        # failures (worker mid-shutdown, dispatcher already gone) but each
+        # distinct (context, exception type) is logged once so a systemic
+        # fault is visible instead of silently eaten in a loop.
+        self._logged_errors: Set[Tuple[str, Type[BaseException]]] = set()
+
+    def _note_error(self, context: str, exc: BaseException) -> None:
+        key = (context, type(exc))
+        if key in self._logged_errors:
+            return
+        self._logged_errors.add(key)
+        logger.warning(
+            "orchestrator: %s failed with %r (suppressing repeats)", context, exc
+        )
 
     # ------------------------------------------------------------------
     def start(self) -> ServiceHandle:
@@ -136,6 +153,13 @@ class LocalOrchestrator:
             cache_capacity=self._cache_capacity,
             tags=tags,
         ).start()
+        try:
+            # Readiness probe: a worker that answers ping has bound its
+            # transport, so bring-up failures surface here instead of as
+            # timeouts in the first data fetch.
+            Stub(w.address).call("ping")
+        except Exception as e:
+            self._note_error(f"worker {w.worker_id} bring-up ping", e)
         self.workers.append(w)
         return w
 
@@ -153,8 +177,10 @@ class LocalOrchestrator:
                 Stub(self.dispatcher_address).call(
                     "remove_worker", worker_id=worker.worker_id
                 )
-            except Exception:
-                pass
+            except Exception as e:
+                # Expected when the dispatcher is mid-restart; its GC sweep
+                # reclaims the worker's tasks anyway.
+                self._note_error("remove_worker deregistration", e)
 
     def kill_worker(self, index: int = 0) -> Worker:
         """Fault injection: crash a worker without notifying the dispatcher."""
@@ -188,8 +214,10 @@ class LocalOrchestrator:
         for w in self.live_workers:
             try:
                 ds = w.drain_stats()
-            except Exception:
-                continue  # worker mid-shutdown: not a candidate
+            except Exception as e:
+                # Worker mid-shutdown: not a candidate this round.
+                self._note_error("drain_stats during pick_removable", e)
+                continue
             if ds["active_snapshot_streams"] or ds["pending_coordinated_rounds"]:
                 continue
             candidates.append((ds["buffer_occupancy"], w.worker_id, w))
@@ -328,8 +356,21 @@ class LocalOrchestrator:
             INPROC.bind(self._dispatcher_name, self.dispatcher)
 
     # ------------------------------------------------------------------
+    # Admin / observability surface (thin wrappers over dispatcher RPCs)
+    # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         return Stub(self.dispatcher_address).call("stats")
+
+    def list_workers(self) -> Dict[str, Any]:
+        """Dispatcher-side view of registered workers (id, address, tags,
+        liveness) — the admin counterpart of ``self.workers``, which only
+        knows about workers THIS orchestrator started."""
+        return Stub(self.dispatcher_address).call("list_workers")
+
+    def retire_task(self, task_id: str) -> Dict[str, Any]:
+        """Administratively retire one task through the journaled path; the
+        owning worker prunes its runner on its next heartbeat."""
+        return Stub(self.dispatcher_address).call("retire_task", task_id=task_id)
 
     def stop(self) -> None:
         self._stop_gc.set()

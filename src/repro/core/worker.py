@@ -17,11 +17,12 @@ it never persists local state (paper §3.4).
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple, Type
 
 from ..data.elements import (
     Element,
@@ -44,14 +45,39 @@ from .protocol import (
 from .transport import INPROC, Backoff, Stub, TCPServer, TransportError, compress
 
 
+logger = logging.getLogger(__name__)
+
+
 @dataclass
 class WorkerMetrics:
+    """Cumulative worker counters, hammered concurrently by every runner
+    producer thread and every data-plane handler thread.
+
+    Mutation goes through :meth:`add`, which holds ``_lock``: a bare
+    ``metrics.busy_time += dt`` is a read-modify-write that loses updates
+    under thread switches — and ``busy_time`` feeds the autoscaler's
+    ``cpu_busy`` heartbeat signal, so lost updates read as idle capacity.
+    """
+
     batches_produced: int = 0
     batches_served: int = 0
     bytes_served: int = 0
     rpc_count: int = 0
     busy_time: float = 0.0
     pending_responses: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def add(self, **deltas: float) -> None:
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Consistent copy for heartbeats/stats (readers never take _lock)."""
+        with self._lock:
+            return {
+                k: v for k, v in vars(self).items() if not k.startswith("_")
+            }
 
 
 class _TaskRunner:
@@ -128,9 +154,10 @@ class _BufferedRunner(_TaskRunner):
                             return
                         self._cond.wait(timeout=0.1)
                     self._buffer.append(elem)
-                    self._worker.metrics.batches_produced += 1
                     self._cond.notify_all()
-                self._worker.metrics.busy_time += time.perf_counter() - t0
+                self._worker.metrics.add(
+                    batches_produced=1, busy_time=time.perf_counter() - t0
+                )
                 if self._stopped.is_set():
                     return
         finally:
@@ -330,9 +357,11 @@ class _SharedRunner(_TaskRunner):
     def get(self, job_id: str, round_index: int, consumer_index: int):
         t0 = time.perf_counter()
         batch, eos = self._cache.read(job_id)
-        self._worker.metrics.busy_time += time.perf_counter() - t0
+        self._worker.metrics.add(busy_time=time.perf_counter() - t0)
         if eos:
-            self.status = "done"
+            # Single monotonic str store (running -> done) read by the
+            # heartbeat thread; atomic under the GIL, so no lock needed.
+            self.status = "done"  # analysis: allow(L001)
             return FetchStatus.END_OF_TASK, None
         return FetchStatus.OK, batch
 
@@ -393,12 +422,12 @@ class _CoordinatedRunner(_TaskRunner):
             except StopIteration:
                 self._exhausted = True
                 break
-        self._worker.metrics.busy_time += time.perf_counter() - t0
+        self._worker.metrics.add(busy_time=time.perf_counter() - t0)
         if len(window) < self._m:
             return False
         self._rounds[round_index] = window
         self._consumed[round_index] = set()
-        self._worker.metrics.batches_produced += self._m
+        self._worker.metrics.add(batches_produced=self._m)
         return True
 
     def extra_stats(self) -> Dict[str, Any]:
@@ -524,13 +553,19 @@ class _SnapshotStreamRunner:
                         continue  # committed by a previous owner
                     t0 = time.perf_counter()
                     self.writer.append(elem)
-                    self._worker.metrics.busy_time += time.perf_counter() - t0
+                    self._worker.metrics.add(busy_time=time.perf_counter() - t0)
             self.writer.finish()
             self.status = "done"
             self._report_done()
         except StreamReassigned:
             self.status = "stopped"  # a replacement owns the stream now
         except Exception as e:  # surface in worker stats, don't kill the worker
+            # Log-first-instance (the autoscaler's pattern): a stream that
+            # fails every retry would otherwise die in silence — the status
+            # travels in heartbeats, but nobody greps heartbeats.
+            self._worker._note_error(
+                f"snapshot stream {self._spec['stream_id']}", e
+            )
             self.status = "failed"
             self.error = repr(e)
 
@@ -575,6 +610,8 @@ class Worker:
         # (snapshot_id, stream_id) -> runner materializing that stream
         self._snapshot_writers: Dict[Any, _SnapshotStreamRunner] = {}
         self._pending_control: deque = deque()  # control calls to redeliver
+        # log-first-instance bookkeeping for background-thread exceptions
+        self._logged_errors: Set[Tuple[str, Type[BaseException]]] = set()
         self._lock = threading.RLock()
         self._stopping = threading.Event()
         self._failed = threading.Event()  # simulated crash (tests/benchmarks)
@@ -731,7 +768,7 @@ class Worker:
             "worker_heartbeat",
             worker_id=self.worker_id,
             buffer_occupancy=sum(occ) / len(occ) if occ else 0.0,
-            cpu_busy=self.metrics.busy_time,
+            cpu_busy=self.metrics.snapshot()["busy_time"],
             completed_tasks=completed,
             cache_stats=cache_stats,
             failed_streams=failed_streams,
@@ -786,6 +823,20 @@ class Worker:
             "buffer_occupancy": sum(occ) / len(occ) if occ else 0.0,
         }
 
+    def _note_error(self, context: str, exc: BaseException) -> None:
+        """Log the FIRST instance of each (context, exception type) from a
+        background thread; repeats are suppressed (the retry loops would
+        otherwise flood the log at their poll interval)."""
+        key = (context, type(exc))
+        with self._lock:
+            if key in self._logged_errors:
+                return
+            self._logged_errors.add(key)
+        logger.warning(
+            "worker %s: %s failed with %r (suppressing repeats)",
+            self.worker_id, context, exc,
+        )
+
     def _prune_tasks(self, valid: set) -> None:
         """Drop orphaned tasks (finished/garbage-collected jobs)."""
         with self._lock:
@@ -799,22 +850,23 @@ class Worker:
     # RPC entry point (data plane)
     # ------------------------------------------------------------------
     def handle(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        # Same getattr dispatch as Dispatcher.handle: one rpc_* method per
+        # wire method, so the RPC-conformance pass sees one uniform surface.
         if self._failed.is_set():
             raise TransportError(f"worker {self.worker_id} is down")
-        if method == "get_elements":
-            return self._get_elements(**payload)
-        if method == "get_element":
-            return self._get_element(**payload)
-        if method == "ping":
-            return {
-                "worker_id": self.worker_id,
-                "data_plane_version": DATA_PLANE_VERSION,
-            }
-        if method == "stats":
-            return self._stats()
-        raise ValueError(f"worker: unknown method {method}")
+        fn = getattr(self, f"rpc_{method}", None)
+        if fn is None:
+            raise ValueError(f"worker: unknown method {method}")
+        return fn(**payload)
 
-    def _get_elements(
+    def rpc_ping(self) -> Dict[str, Any]:
+        """Liveness + data-plane version probe (used at worker bring-up)."""
+        return {
+            "worker_id": self.worker_id,
+            "data_plane_version": DATA_PLANE_VERSION,
+        }
+
+    def rpc_get_elements(
         self,
         task_id: str,
         job_id: str = "",
@@ -828,7 +880,7 @@ class Worker:
         retry/backoff round trip.  With a negotiated codec the whole batch
         is one compressed frame (compressed once, worker-side).
         """
-        self.metrics.rpc_count += 1
+        self.metrics.add(rpc_count=1)
         with self._lock:
             runner = self._tasks.get(task_id)
             spec = self._task_specs.get(task_id)
@@ -839,9 +891,8 @@ class Worker:
         )
         out: Dict[str, Any] = {"status": status.value, "count": len(elems)}
         if elems:
-            self.metrics.batches_served += len(elems)
             nbytes = sum(element_nbytes(e) for e in elems)
-            self.metrics.bytes_served += nbytes
+            self.metrics.add(batches_served=len(elems), bytes_served=nbytes)
             out["nbytes"] = nbytes
             if spec and spec.get("compression"):
                 encoded = encode_elements(elems)
@@ -858,14 +909,14 @@ class Worker:
                 out["elements"] = elems
         return out
 
-    def _get_element(
+    def rpc_get_element(
         self,
         task_id: str,
         job_id: str = "",
         round_index: int = -1,
         consumer_index: int = -1,
     ) -> Dict[str, Any]:
-        self.metrics.rpc_count += 1
+        self.metrics.add(rpc_count=1)
         with self._lock:
             runner = self._tasks.get(task_id)
             spec = self._task_specs.get(task_id)
@@ -874,9 +925,8 @@ class Worker:
         status, elem = runner.get(job_id, round_index, consumer_index)
         out: Dict[str, Any] = {"status": status.value}
         if elem is not None:
-            self.metrics.batches_served += 1
             nbytes = element_nbytes(elem)
-            self.metrics.bytes_served += nbytes
+            self.metrics.add(batches_served=1, bytes_served=nbytes)
             if spec and spec.get("compression"):
                 out["element_compressed"] = compress(
                     encode_element(elem), spec["compression"]
@@ -886,11 +936,11 @@ class Worker:
             out["nbytes"] = nbytes
         return out
 
-    def _stats(self) -> Dict[str, Any]:
+    def rpc_stats(self) -> Dict[str, Any]:
         with self._lock:
             return {
                 "worker_id": self.worker_id,
-                "metrics": vars(self.metrics).copy(),
+                "metrics": self.metrics.snapshot(),
                 "tasks": {
                     tid: {
                         "status": r.status,

@@ -47,6 +47,11 @@ class Autotuner:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._logged_errors: Set[type] = set()
+        # Serializes tuning steps: tests drive step() synchronously while
+        # the start()ed background thread also calls it; the _KnobState
+        # rate windows are read-modify-write, so two overlapping steps
+        # would compute a bogus rate from a half-updated window.
+        self._step_lock = threading.Lock()
 
     # -- lifecycle -------------------------------------------------------
     def start(self) -> None:
@@ -79,13 +84,20 @@ class Autotuner:
     # -- one tuning step (also callable synchronously from tests) ---------
     def step(self) -> None:
         now = time.perf_counter()
-        for idx, stats in list(self._ctx.stats.items()):
-            if stats.parallelism is not None and stats.parallelism.autotune:
-                self._tune_parallelism(idx, stats, now)
-            if stats.buffer_size is not None and stats.buffer_size.autotune:
-                self._tune_buffer(stats)
+        with self._step_lock:
+            # ctx.stats values are written by the pipeline's iterator
+            # threads WITHOUT this lock: OpStats counters are monotonic
+            # and GIL-atomic, so an unlocked read is at worst one window
+            # stale — it delays a tuning decision, never corrupts one.
+            # list() snapshots the dict against concurrent op insertion.
+            for idx, stats in list(self._ctx.stats.items()):
+                if stats.parallelism is not None and stats.parallelism.autotune:
+                    self._tune_parallelism(idx, stats, now)
+                if stats.buffer_size is not None and stats.buffer_size.autotune:
+                    self._tune_buffer(stats)
 
     def _tune_parallelism(self, idx: int, stats: OpStats, now: float) -> None:
+        """Caller must hold ``self._step_lock`` (_KnobState windows)."""
         knob = stats.parallelism
         st = self._states.setdefault(idx, _KnobState(last_value=knob.get()))
         dt = now - st.last_time

@@ -1,0 +1,31 @@
+"""Journal-conformance true negatives: append and apply in lockstep."""
+
+
+class Journal:
+    def append(self, etype, payload):
+        return 0
+
+
+class MiniDispatcher:
+    def __init__(self):
+        self._journal = Journal()
+        self._jobs = {}
+
+    def create_job(self, jid):
+        payload = {"jid": jid}
+        self._journal.append("job_created", payload)
+        self.apply_event("job_created", payload)
+
+    def finish_job(self, jid):
+        payload = {"jid": jid}
+        self._journal.append("job_finished", payload)
+        self.apply_event("job_finished", payload)
+
+    def apply_event(self, etype, payload):
+        if etype == "job_created":
+            self._jobs[payload["jid"]] = {}
+        elif etype == "job_finished":
+            self._jobs.pop(payload["jid"], None)
+        elif etype == "snapshot":
+            # compaction record: journal-produced, exempt from J002
+            self._jobs = dict(payload.get("jobs", {}))

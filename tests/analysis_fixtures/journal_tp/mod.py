@@ -1,0 +1,33 @@
+"""Journal-conformance true positives: one J001, one J002, one J003."""
+
+
+class Journal:
+    def append(self, etype, payload):
+        return 0
+
+
+class MiniDispatcher:
+    def __init__(self):
+        self._journal = Journal()
+        self._jobs = {}
+        self._names = {}
+
+    def create_job(self, jid):
+        payload = {"jid": jid}
+        self._journal.append("job_created", payload)
+        self.apply_event("job_created", payload)
+
+    def drop_job(self, jid):
+        # J001: appended but apply_event has no 'job_dropped' branch
+        self._journal.append("job_dropped", {"jid": jid})
+
+    def rename(self, jid, name):
+        # J003: _jobs is replay-written state, mutated here with no append
+        self._jobs[jid] = name
+
+    def apply_event(self, etype, payload):
+        if etype == "job_created":
+            self._jobs[payload["jid"]] = {}
+        elif etype == "job_renamed":
+            # J002: no append site ever journals 'job_renamed'
+            self._names[payload["jid"]] = payload["name"]

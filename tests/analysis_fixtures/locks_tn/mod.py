@@ -1,0 +1,31 @@
+"""Lock-discipline true negatives: everything the L-rules must NOT flag."""
+import threading
+
+
+class Clean:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._count = 0
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def reset(self):
+        with self._lock:
+            self._count = 0
+
+    def _bump_locked(self):
+        """Caller must hold ``self._lock``."""
+        self._count += 1
+
+    def bump_twice(self):
+        with self._lock:
+            self._bump_locked()
+            self._bump_locked()
+
+    def wait_ready(self):
+        with self._cond:
+            # cond.wait on a HELD condition releases the lock: not L003
+            self._cond.wait(timeout=0.1)

@@ -1,0 +1,39 @@
+"""Lock-discipline true positives: one L001, one L002 cycle, one L003."""
+import threading
+import time
+
+
+class Guarded:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def reset(self):
+        # L001: _count is guarded by _lock in bump() but written bare here
+        self._count = 0
+
+    def slow(self):
+        with self._lock:
+            # L003: sleeping while holding the lock
+            time.sleep(0.1)
+
+
+class Ordered:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def ab(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def ba(self):
+        # L002: acquires in the opposite order of ab() -> deadlock cycle
+        with self._b:
+            with self._a:
+                pass

@@ -1,0 +1,14 @@
+"""Client stub sites for every handler."""
+
+
+class Client:
+    def __init__(self, stub):
+        self._stub = stub
+
+    def get(self, key):
+        return self._stub.call("get_item", key=key)
+
+    def put(self, key, value):
+        return self._stub.call(
+            "put_item", key=key, value=value
+        )

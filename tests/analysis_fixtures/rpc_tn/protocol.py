@@ -1,0 +1,7 @@
+"""Fixture protocol spec.
+
+Documented methods:
+
+* ``get_item``  — fetch one item by key.
+* ``put_item``  — store one item.
+"""

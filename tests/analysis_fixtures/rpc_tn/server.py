@@ -1,0 +1,10 @@
+"""RPC-conformance true negatives: documented, called, dict payloads."""
+
+
+class Server:
+    def rpc_get_item(self, key):
+        return {"value": key, "tags": sorted({"a", "b"})}
+
+    def rpc_put_item(self, key, value):
+        self._store = {key: value}
+        return {"ok": True}

@@ -1,0 +1,9 @@
+"""Client stub site for the documented method only."""
+
+
+class Client:
+    def __init__(self, stub):
+        self._stub = stub
+
+    def get(self, key):
+        return self._stub.call("get_item", key=key)

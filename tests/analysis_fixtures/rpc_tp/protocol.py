@@ -1,0 +1,6 @@
+"""Fixture protocol spec.
+
+Documented methods:
+
+* ``get_item`` — fetch one item by key.
+"""

@@ -1,0 +1,11 @@
+"""RPC-conformance true positives: R001 + R002 + R003 on drop_item."""
+
+
+class Server:
+    def rpc_get_item(self, key):
+        return {"value": key}
+
+    def rpc_drop_item(self, key):
+        # R001: not in protocol.py; R002: no stub call site;
+        # R003: returns a set, which no wire codec serializes
+        return {key}

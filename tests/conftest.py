@@ -2,10 +2,39 @@
 the real single CPU device; only launch/dryrun.py forces 512 devices."""
 import os
 import sys
+import threading
+import time
 
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def threads_leaked():
+    """Fail any test that leaks a non-daemon thread.
+
+    A leaked non-daemon thread hangs interpreter shutdown (the classic
+    symptom: the suite passes, then CI times out on exit).  Daemon threads
+    are tolerated — every service background loop in this tree is
+    deliberately daemonized — so this only catches the unjoinable kind.
+    Threads are given a short grace window to finish: a test that stopped
+    its service is allowed the join that is already in flight.
+    """
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 2.0
+    while time.monotonic() < deadline:
+        leaked = [
+            t
+            for t in threading.enumerate()
+            if t not in before and t.is_alive() and not t.daemon
+        ]
+        if not leaked:
+            return
+        time.sleep(0.05)
+    names = ", ".join(t.name for t in leaked)
+    pytest.fail(f"test leaked non-daemon thread(s): {names}")
 
 
 @pytest.fixture

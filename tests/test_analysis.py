@@ -1,0 +1,192 @@
+"""Tests for the repro.analysis static-analysis suite.
+
+Three layers:
+
+1. Per-rule fixtures (``tests/analysis_fixtures/``): each rule family has a
+   true-positive tree, a true-negative tree, and a suppression tree.
+2. Self-run smoke: the live ``src/repro`` tree must be baseline-clean —
+   the same check CI runs as ``python -m repro.analysis --strict``.
+3. Seeded divergence: deleting an ``apply_event`` branch from a scratch
+   copy of the tree must produce a J001 and a non-zero strict exit.
+
+Plus behavioral regression tests for the two real concurrency findings the
+analyzer surfaced (Journal.set_seq, WorkerMetrics counters).
+"""
+import re
+import shutil
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+from repro.analysis import analyze, default_baseline, default_root, run_analysis
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+SRC = Path(__file__).parent.parent / "src"
+
+
+def codes(findings):
+    return {f.code for f in findings}
+
+
+def run_on(name):
+    return run_analysis(FIXTURES / name)
+
+
+# -- lock discipline ---------------------------------------------------------
+def test_lock_rules_true_positive():
+    found = run_on("locks_tp")
+    assert {"L001", "L002", "L003"} <= codes(found)
+    l1 = [f for f in found if f.code == "L001"]
+    assert any("_count" in f.message for f in l1)
+    assert any("time.sleep" in f.message for f in found if f.code == "L003")
+
+
+def test_lock_rules_true_negative():
+    assert not {"L001", "L002", "L003"} & codes(run_on("locks_tn"))
+
+
+# -- journal conformance -----------------------------------------------------
+def test_journal_rules_true_positive():
+    found = run_on("journal_tp")
+    assert {"J001", "J002", "J003"} <= codes(found)
+    assert any(
+        f.code == "J001" and "job_dropped" in f.message for f in found
+    )
+    assert any(
+        f.code == "J002" and "job_renamed" in f.message for f in found
+    )
+    assert any(f.code == "J003" and "_jobs" in f.message for f in found)
+
+
+def test_journal_rules_true_negative():
+    # includes the exempt 'snapshot' compaction branch: must not be J002
+    assert not {"J001", "J002", "J003"} & codes(run_on("journal_tn"))
+
+
+# -- rpc surface -------------------------------------------------------------
+def test_rpc_rules_true_positive():
+    found = run_on("rpc_tp")
+    assert {"R001", "R002", "R003"} <= codes(found)
+    offenders = {f.code: f.message for f in found}
+    assert "drop_item" in offenders["R001"]
+    assert "drop_item" in offenders["R002"]
+
+
+def test_rpc_rules_true_negative():
+    # includes sorted({...}) in a payload: consumed sets are not R003
+    assert not {"R001", "R002", "R003"} & codes(run_on("rpc_tn"))
+
+
+# -- suppressions + baseline -------------------------------------------------
+def test_inline_suppression_accepts_findings(tmp_path):
+    new, accepted = analyze(
+        FIXTURES / "suppressed", baseline_path=tmp_path / "empty.txt"
+    )
+    assert new == []
+    assert {"L001", "L003"} <= codes(accepted)
+
+
+def test_live_tree_is_baseline_clean():
+    """The CI gate in test form: src/repro has no unbaselined findings."""
+    new, _accepted = analyze(default_root(), default_baseline())
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_cli_strict_fails_on_fixture_true_positive(tmp_path):
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "--strict",
+            "--root", str(FIXTURES / "locks_tp"),
+            "--baseline", str(tmp_path / "empty.txt"),
+        ],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 1, proc.stderr
+    assert "L001" in proc.stdout
+
+
+def test_seeded_divergence_is_caught(tmp_path):
+    """Acceptance check: delete one apply_event branch in a scratch copy of
+    the real tree -> the journal pass must emit J001 and fail --strict."""
+    scratch = tmp_path / "repro"
+    shutil.copytree(SRC / "repro", scratch, ignore=shutil.ignore_patterns("__pycache__"))
+    control = scratch / "core" / "dispatcher" / "control.py"
+    text = control.read_text()
+    # Disable the 'job_finished' replay branch (the etype keeps being
+    # appended, so replay now silently drops it).
+    mangled, n = re.subn(
+        r'elif etype == "job_finished":',
+        'elif etype == "job_finished_disabled":',
+        text,
+    )
+    assert n == 1
+    control.write_text(mangled)
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "--strict",
+            "--root", str(scratch),
+            "--baseline", str(scratch / "analysis" / "baseline.txt"),
+        ],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "J001" in proc.stdout and "job_finished" in proc.stdout
+
+
+# -- behavioral regressions for analyzer-surfaced fixes ----------------------
+def test_journal_set_seq_serialized_with_lock(tmp_path):
+    """set_seq must take Journal._lock (it raced append_replica's
+    read-modify-write of _seq before the fix; an unserialized set_seq could
+    move _seq backwards and reuse an on-disk sequence number)."""
+    from repro.core.journal import Journal
+
+    j = Journal(str(tmp_path / "j.bin"))
+    entered = threading.Event()
+
+    def hold():
+        with j._lock:
+            entered.set()
+            time.sleep(0.3)
+
+    t = threading.Thread(target=hold)
+    t.start()
+    assert entered.wait(2.0)
+    t0 = time.monotonic()
+    j.set_seq(5)  # must block until hold() releases the lock
+    blocked_for = time.monotonic() - t0
+    t.join()
+    j.close()
+    assert blocked_for > 0.1
+    assert j.seq == 5
+
+
+def test_worker_metrics_concurrent_add_is_exact():
+    """WorkerMetrics counters are += read-modify-writes from runner threads
+    AND rpc handler threads; pre-fix, concurrent bumps lost updates."""
+    from repro.core.worker import WorkerMetrics
+
+    m = WorkerMetrics()
+    per_thread, n_threads = 1000, 8
+
+    def bump():
+        for _ in range(per_thread):
+            m.add(batches_produced=1, busy_time=0.5)
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)  # force frequent thread switches
+    try:
+        threads = [threading.Thread(target=bump) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    snap = m.snapshot()
+    assert snap["batches_produced"] == per_thread * n_threads
+    assert abs(snap["busy_time"] - 0.5 * per_thread * n_threads) < 1e-6
+    assert "_lock" not in snap

@@ -79,7 +79,7 @@ class TestCoordinatedReads:
         lens = [3] * 32
         res = run_consumers(svc, nlp_pipeline(lens, m=2), m=2, steps=4)
         stats = {
-            w.worker_id: w._stats() for w in svc.orchestrator.live_workers
+            w.worker_id: w.rpc_stats() for w in svc.orchestrator.live_workers
         }
         served = {
             wid: sum(t.get("coordinated_rounds_served", 0) for t in s["tasks"].values())

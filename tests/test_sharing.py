@@ -150,5 +150,5 @@ class TestSharedServiceE2E:
         )
         _ = [b for b in dds]
         w = svc.orchestrator.live_workers[0]
-        stats = w._stats()
+        stats = w.rpc_stats()
         assert any("cache" in k for k in stats), stats

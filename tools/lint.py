@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Repo lint driver: the repro.analysis static passes, strict by default.
+
+Thin wrapper so `python tools/lint.py` works from a fresh checkout without
+an editable install (it prepends src/ like tests/conftest.py does).  CI
+runs the module form: `PYTHONPATH=src python -m repro.analysis --strict`.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["--strict"]))
