@@ -1,0 +1,140 @@
+"""Observability overhead: data-plane throughput with tracing off vs on.
+
+Tracing is sampling-gated (``trace_sample``): an unsampled fetch carries NO
+extra payload field and takes no tracer locks on the hot path, so the
+default-off and sampled configurations must stay within noise of each
+other.  The headline row — ``obs/tracing_sampled_ratio`` — is the
+acceptance gate: sampled tracing (5% of fetches) must hold ≥ 0.95x the
+tracing-off elements/sec.  ``tracing_full`` (every fetch sampled) is
+reported for scale but not gated; it is the worst case no production
+deployment runs.
+
+Also measured: one ``metrics_dump`` scrape round (dispatcher + workers,
+what ``repro.obs.top`` pays per refresh) and one ``trace_dump`` drain.
+
+Run:  PYTHONPATH=src python benchmarks/obs.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import start_service  # noqa: E402
+from repro.core.transport import Stub  # noqa: E402
+from repro.data import Dataset  # noqa: E402
+
+try:
+    from .common import Row, print_rows  # running under benchmarks.run
+except ImportError:
+    from common import Row, print_rows  # noqa: E402  (direct script run)
+
+_PAYLOADS = np.random.default_rng(0).standard_normal((8, 64, 64)).astype(np.float32)
+
+
+def _payload(i):
+    return _PAYLOADS[int(i) % len(_PAYLOADS)]
+
+
+def measure(trace_sample: float, n_elements: int, reps: int) -> float:
+    """Best-of-``reps`` steady-state elements/sec at one sample rate.
+
+    Best-of (not mean) because the 1-core container's scheduler noise only
+    ever subtracts throughput; the max is the least-noisy estimate of the
+    code path's actual cost, which is what the on/off ratio gates.
+    """
+    best = 0.0
+    for _ in range(reps):
+        svc = start_service(num_workers=2, worker_buffer_size=128)
+        try:
+            dds = (
+                Dataset.range(n_elements)
+                .map(_payload)
+                .distribute(
+                    service=svc,
+                    processing_mode="off",
+                    buffer_size=128,
+                    trace_sample=trace_sample,
+                )
+            )
+            it = iter(dds.session())
+            next(it)  # ramp: job rollout + first production
+            t0 = time.perf_counter()
+            n = sum(1 for _ in it)
+            dt = time.perf_counter() - t0
+            expect = n_elements * 2 - 1  # off policy: full dataset per worker
+            assert n == expect, f"consumed {n}, expected {expect}"
+            best = max(best, n / dt)
+        finally:
+            svc.orchestrator.stop()
+    return best
+
+
+def measure_scrape() -> tuple:
+    """(metrics_dump round ms, trace_dump ms, spans drained) on a live job."""
+    svc = start_service(num_workers=2, worker_buffer_size=64)
+    try:
+        dds = (
+            Dataset.range(256)
+            .map(_payload)
+            .distribute(service=svc, processing_mode="off", trace_sample=1.0)
+        )
+        for _ in dds.session():
+            pass
+        stub = Stub(svc.dispatcher_address)
+        t0 = time.perf_counter()
+        dump = stub.call("metrics_dump")
+        for addr in dump["workers"].values():
+            Stub(addr).call("metrics_dump")
+        dump_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        spans = list(stub.call("trace_dump", max_spans=0)["spans"])
+        for addr in dump["workers"].values():
+            spans += Stub(addr).call("trace_dump", max_spans=0)["spans"]
+        trace_ms = (time.perf_counter() - t0) * 1e3
+        return dump_ms, trace_ms, len(spans)
+    finally:
+        svc.orchestrator.stop()
+
+
+def main() -> List[Row]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer elements")
+    args, _ = ap.parse_known_args()
+    n = 512 if args.quick else 1024
+    reps = 2 if args.quick else 3
+
+    off = measure(0.0, n, reps)
+    sampled = measure(0.05, n, reps)
+    full = measure(1.0, n, reps)
+    dump_ms, trace_ms, n_spans = measure_scrape()
+
+    rows = [
+        Row("obs/tracing_off", off, "elements/s", "real", "trace_sample=0"),
+        Row("obs/tracing_sampled", sampled, "elements/s", "real", "trace_sample=0.05"),
+        Row(
+            "obs/tracing_sampled_ratio", sampled / off, "x_vs_off", "real",
+            "acceptance gate: must be >= 0.95",
+        ),
+        Row("obs/tracing_full", full, "elements/s", "real", "trace_sample=1.0"),
+        Row("obs/tracing_full_ratio", full / off, "x_vs_off", "real", "not gated"),
+        Row(
+            "obs/metrics_dump_round_ms", dump_ms, "ms", "real",
+            "dispatcher + 2 workers, one dashboard refresh",
+        ),
+        Row(
+            "obs/trace_dump_round_ms", trace_ms, "ms", "real",
+            f"drained {n_spans} spans",
+        ),
+    ]
+    print_rows(rows, "observability: tracing overhead + scrape cost")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ SUITES = (
     ("feed", "benchmarks.feed"),
     ("multi_job", "benchmarks.multi_job"),
     ("ha", "benchmarks.ha"),
+    ("obs", "benchmarks.obs"),
 )
 
 

@@ -51,6 +51,8 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Protocol, Set, runtime_checkable
 
+from ..obs.registry import get_registry
+
 logger = logging.getLogger(__name__)
 
 
@@ -274,7 +276,11 @@ class Autoscaler:
             except Exception as e:
                 # scaling must never kill the deployment, but going silent
                 # forever on e.g. a malformed stats() dict hid real bugs —
-                # log the first occurrence of each exception type
+                # count every occurrence, log the first of each type
+                get_registry().counter(
+                    "autoscaler_errors_total",
+                    "swallowed autoscaler step failures, by exception type",
+                ).labels(kind=type(e).__name__).inc()
                 if type(e) not in self._logged_errors:
                     self._logged_errors.add(type(e))
                     logger.warning(

@@ -30,11 +30,13 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional
 
 from ..data.elements import Element, decode_element, decode_elements
 from ..data.graph import Graph
+from ..obs.registry import MetricsRegistry
+from ..obs.tracing import TraceContext, Tracer
 from .protocol import (
     DEFAULT_FETCH_WINDOW,
     DEFAULT_MAX_BATCH,
@@ -46,15 +48,46 @@ from .codecs import available_codecs
 from .transport import Backoff, Stub, TransportError, decompress
 
 
-@dataclass
 class ClientMetrics:
-    batches: int = 0
-    bytes_received: int = 0
-    stall_time: float = 0.0
-    fetch_time: float = 0.0
-    rpcs: int = 0
-    retries: int = 0
-    fallback_tasks: int = 0  # tasks demoted to the single-element v1 path
+    """Session counters, now backed by a :class:`MetricsRegistry`.
+
+    The old dataclass was mutated with bare ``+=`` from every fetcher
+    thread in the window — read-modify-writes that lose updates under
+    thread switches.  Mutation now goes through :meth:`add` (per-series
+    locked, exact); reads stay attribute-style (``metrics.batches``) via
+    ``__getattr__`` so callers and tests are unchanged, and the same
+    series surface in the registry scraped by ``metrics_dump`` dashboards.
+    """
+
+    _FIELDS = (
+        "batches",
+        "bytes_received",
+        "stall_time",
+        "fetch_time",
+        "rpcs",
+        "retries",
+        "fallback_tasks",  # tasks demoted to the single-element v1 path
+    )
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._series = {
+            name: self.registry.counter(f"client_{name}", "client session counter")
+            for name in self._FIELDS
+        }
+
+    def add(self, **deltas: float) -> None:
+        for name, delta in deltas.items():
+            self._series[name].add(delta)
+
+    def __getattr__(self, name: str):
+        series = self.__dict__.get("_series") or {}
+        if name in series:
+            return series[name].value
+        raise AttributeError(name)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {name: s.value for name, s in self._series.items()}
 
 
 @dataclass
@@ -123,9 +156,17 @@ class DataServiceClient:
         prefer_batched: bool = True,
         heartbeat_interval: float = 0.3,
         optimize: bool = True,
+        trace_sample: float = 0.0,
     ):
         self.client_id = new_id("client")
         self.metrics = ClientMetrics()
+        # trace_sample > 0 mints a session-level root trace at registration
+        # (journaled dispatcher-side with the job) and samples that fraction
+        # of element-batch fetches into cross-process spans
+        self.tracer = Tracer(
+            process=f"client:{self.client_id}", sample_rate=trace_sample
+        )
+        self.trace_root: Optional[TraceContext] = None
         self._dispatcher = Stub(dispatcher_address)
         # the RAW graph is registered; the dispatcher optimizes it once so
         # identical pipelines from different jobs share a dataset_id (§3.5)
@@ -174,8 +215,8 @@ class DataServiceClient:
         resp = self._dispatcher.call(
             "get_or_register_dataset", graph_bytes=self._graph.to_bytes()
         )
-        view = self._dispatcher.call(
-            "get_or_create_job",
+        self.trace_root = self.tracer.start_trace()
+        kw: Dict[str, Any] = dict(
             dataset_id=resp["dataset_id"],
             job_name=self._job_name,
             policy=self._mode,
@@ -189,6 +230,21 @@ class DataServiceClient:
             client_codecs=available_codecs(),  # negotiation: what WE decode
             autocache=self._autocache,
         )
+        if self.trace_root is not None:
+            # the job-level root context: journaled with job_created, so a
+            # promoted standby keeps stamping spans with the same trace_id
+            kw["trace"] = self.trace_root.to_wire()
+            # zero-duration root marker, recorded BEFORE anything downstream
+            # can parent to it, so every span's parent chain resolves even
+            # if the dispatcher crashes mid-registration
+            self.tracer.record(
+                "client.session",
+                self.trace_root,
+                time.time(),
+                0.0,
+                client_id=self.client_id,
+            )
+        view = self._dispatcher.call("get_or_create_job", **kw)
         self._job_id = view["job_id"]
         self.negotiated_compression = view.get("compression")
         self.autocache_decision = view.get("autocache")
@@ -253,7 +309,29 @@ class DataServiceClient:
                 stall_stats, self._feed_stats = self._feed_stats, None
                 if stall_stats is not None:
                     kw["stall_stats"] = stall_stats
-                view = self._dispatcher.call("client_heartbeat", **kw)
+                hbctx = (
+                    self.trace_root.child()
+                    if self.trace_root is not None
+                    else None
+                )
+                if hbctx is not None:
+                    kw["trace"] = hbctx.to_wire()
+                wall, t0 = time.time(), time.perf_counter()
+                try:
+                    view = self._dispatcher.call("client_heartbeat", **kw)
+                finally:
+                    # record even when the call dies mid-flight: the
+                    # dispatcher may have recorded its child span before
+                    # crashing, and that child's parent must exist
+                    if hbctx is not None:
+                        self.tracer.record(
+                            "client.heartbeat",
+                            hbctx,
+                            wall,
+                            time.perf_counter() - t0,
+                            parent_id=self.trace_root.span_id,
+                            job_id=self._job_id,
+                        )
                 self._sync_tasks(view)
             except TransportError:
                 # dispatcher down: keep consuming from workers (§3.4);
@@ -311,22 +389,46 @@ class DataServiceClient:
         """
         backoff = 0.005
         while not self._closed.is_set() and not handle.done and not handle.failed:
+            # per-element-batch sampling decision: unsampled fetches carry
+            # no trace key at all, keeping the hot-path payload unchanged
+            ctx = (
+                self.trace_root.child()
+                if self.trace_root is not None and self.tracer.should_sample()
+                else None
+            )
             try:
+                wall = time.time() if ctx is not None else 0.0
                 t0 = time.perf_counter()
-                if handle.batched:
-                    resp = stub.call(
-                        "get_elements",
-                        task_id=handle.task_id,
-                        job_id=self._job_id,
-                        max_batch=self._max_batch,
-                        timeout=DEFAULT_POLL_TIMEOUT,  # worker long-polls
+                try:
+                    kw: Dict[str, Any] = dict(
+                        task_id=handle.task_id, job_id=self._job_id
                     )
-                else:
-                    resp = stub.call(
-                        "get_element", task_id=handle.task_id, job_id=self._job_id
-                    )
-                self.metrics.fetch_time += time.perf_counter() - t0
-                self.metrics.rpcs += 1
+                    if ctx is not None:
+                        kw["trace"] = ctx.to_wire()
+                    if handle.batched:
+                        resp = stub.call(
+                            "get_elements",
+                            max_batch=self._max_batch,
+                            timeout=DEFAULT_POLL_TIMEOUT,  # worker long-polls
+                            **kw,
+                        )
+                    else:
+                        resp = stub.call("get_element", **kw)
+                finally:
+                    # span recorded even on failure: the worker may have
+                    # recorded children before the response was lost
+                    if ctx is not None:
+                        self.tracer.record(
+                            "client.fetch",
+                            ctx,
+                            wall,
+                            time.perf_counter() - t0,
+                            parent_id=self.trace_root.span_id,
+                            task_id=handle.task_id,
+                        )
+                self.metrics.add(
+                    fetch_time=time.perf_counter() - t0, rpcs=1
+                )
             except (TransportError, ValueError) as e:
                 # ValueError surfaces directly over inproc://; TransportError
                 # wraps the remote repr over tcp:// and grpc://.
@@ -334,7 +436,7 @@ class DataServiceClient:
                     with self._tasks_lock:  # dedup across window threads
                         if handle.batched:
                             handle.batched = False
-                            self.metrics.fallback_tasks += 1
+                            self.metrics.add(fallback_tasks=1)
                     continue
                 handle.failed = True  # worker died; dispatcher will notice
                 break
@@ -342,7 +444,10 @@ class DataServiceClient:
             if status == FetchStatus.OK.value:
                 backoff = 0.005
                 try:
-                    elems = self._decode_batch(resp)
+                    with self.tracer.span(
+                        "client.decode", ctx, task_id=handle.task_id
+                    ):
+                        elems = self._decode_batch(resp)
                 except Exception as e:
                     # corrupt/undecodable frame (e.g. codec tag this process
                     # cannot handle): poison the task — permanently failed,
@@ -355,7 +460,7 @@ class DataServiceClient:
                 for elem in elems:
                     self._enqueue(elem)
             elif status == FetchStatus.PENDING.value:
-                self.metrics.retries += 1
+                self.metrics.add(retries=1)
                 time.sleep(backoff)
                 # batched calls already long-polled worker-side, so PENDING
                 # means "genuinely dry" — keep the client-side pause short.
@@ -369,7 +474,7 @@ class DataServiceClient:
             elem = decode_element(decompress(resp["element_compressed"]))
         else:
             elem = resp["element"]
-        self.metrics.bytes_received += resp.get("nbytes", 0)
+        self.metrics.add(bytes_received=resp.get("nbytes", 0))
         return elem
 
     def _decode_batch(self, resp: Dict[str, Any]) -> List[Element]:
@@ -380,7 +485,7 @@ class DataServiceClient:
             elems = resp["elements"]
         else:
             return [self._decode(resp)]
-        self.metrics.bytes_received += resp.get("nbytes", 0)
+        self.metrics.add(bytes_received=resp.get("nbytes", 0))
         return elems
 
     def _enqueue(self, elem: Element) -> None:
@@ -426,7 +531,7 @@ class DataServiceClient:
             try:
                 item = self._queue.get(timeout=0.2)
             except queue.Empty:
-                self.metrics.stall_time += time.perf_counter() - t0
+                self.metrics.add(stall_time=time.perf_counter() - t0)
                 with self._tasks_lock:
                     # fetcher threads may still hold decoded elements after
                     # their task flips done — wait for them to exit too
@@ -438,7 +543,7 @@ class DataServiceClient:
                 if done and self._job_finished.is_set() and self._queue.empty():
                     return
                 continue
-            self.metrics.stall_time += time.perf_counter() - t0
+            self.metrics.add(stall_time=time.perf_counter() - t0)
             if item is self._END:
                 return
             if isinstance(item, _FetchError):
@@ -447,7 +552,7 @@ class DataServiceClient:
                     f"({item.error!r}) — client/worker codec registries "
                     f"likely disagree"
                 ) from item.error
-            self.metrics.batches += 1
+            self.metrics.add(batches=1)
             yield item
 
     def _iter_coordinated(self) -> Iterator[Element]:
@@ -466,29 +571,47 @@ class DataServiceClient:
                 time.sleep(0.02)
                 continue
             handle = live[round_index % len(live)]
+            ctx = (
+                self.trace_root.child()
+                if self.trace_root is not None and self.tracer.should_sample()
+                else None
+            )
+            kw: Dict[str, Any] = dict(
+                task_id=handle.task_id,
+                job_id=self._job_id,
+                round_index=round_index,
+                consumer_index=self._consumer_index,
+            )
+            if ctx is not None:
+                kw["trace"] = ctx.to_wire()
+            wall = time.time() if ctx is not None else 0.0
             t0 = time.perf_counter()
             try:
-                resp = handle.stub.call(
-                    "get_element",
-                    task_id=handle.task_id,
-                    job_id=self._job_id,
-                    round_index=round_index,
-                    consumer_index=self._consumer_index,
-                )
-                self.metrics.rpcs += 1
+                resp = handle.stub.call("get_element", **kw)
+                self.metrics.add(rpcs=1)
             except TransportError:
                 handle.failed = True
                 continue
             finally:
-                self.metrics.stall_time += time.perf_counter() - t0
+                self.metrics.add(stall_time=time.perf_counter() - t0)
+                if ctx is not None:
+                    self.tracer.record(
+                        "client.fetch",
+                        ctx,
+                        wall,
+                        time.perf_counter() - t0,
+                        parent_id=self.trace_root.span_id,
+                        task_id=handle.task_id,
+                        round_index=round_index,
+                    )
             status = resp["status"]
             if status == FetchStatus.OK.value:
-                self.metrics.batches += 1
+                self.metrics.add(batches=1)
                 backoff = 0.005
                 yield self._decode(resp)
                 round_index += 1
             elif status == FetchStatus.PENDING.value:
-                self.metrics.retries += 1
+                self.metrics.add(retries=1)
                 time.sleep(backoff)
                 backoff = min(backoff * 2, 0.05)
             else:  # END_OF_TASK: coordinated jobs end at first exhausted worker
@@ -520,6 +643,7 @@ class DistributedDataset:
         fetch_window: int = DEFAULT_FETCH_WINDOW,
         max_batch: int = DEFAULT_MAX_BATCH,
         prefer_batched: bool = True,
+        trace_sample: float = 0.0,
     ):
         self._graph = graph
         address = getattr(service, "dispatcher_address", service)
@@ -542,6 +666,7 @@ class DistributedDataset:
             fetch_window=fetch_window,
             max_batch=max_batch,
             prefer_batched=prefer_batched,
+            trace_sample=trace_sample,
         )
         self.last_client: Optional[DataServiceClient] = None
 

@@ -87,6 +87,9 @@ class CommitterMixin:
                     from ...snapshot.reader import snapshot_status
 
                     return dict(snapshot_status(path), existing=True, path=path)
+                # wall clock on purpose: last_progress_unix is an mtime
+                # stamped by whichever process owned the write — epoch time
+                # is the only clock both sides share
                 idle = time.time() - last_progress_unix(path)
                 if replace_stale_s is None or idle < replace_stale_s:
                     raise ValueError(

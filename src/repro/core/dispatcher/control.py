@@ -12,6 +12,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from ...data.graph import Graph, Node
+from ...obs.tracing import TraceContext
 from ..protocol import ShardingPolicy, TaskSpec, WorkerInfo, new_id
 from ..sharding import ShardManager
 from ..codecs import resolve_codec
@@ -67,6 +68,7 @@ class ControlPlaneMixin:
         client_id: Optional[str] = None,
         client_codecs: Optional[List[str]] = None,
         autocache: bool = False,
+        trace: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         with self._lock:
             if job_name and job_name in self._jobs_by_name:
@@ -98,6 +100,10 @@ class ControlPlaneMixin:
                 # into the SAME shards (ids must stay aligned with the log)
                 shard_hint=max(1, len(self._workers)) * self._overpartition,
                 autocache_decision=decision,
+                # job-level trace root (observability): journaled so a
+                # restarted/promoted dispatcher ships task specs carrying
+                # the SAME trace_id the client minted
+                trace=trace,
             )
             self._journal.append("job_created", payload)
             job = self._apply_job(payload)
@@ -200,6 +206,7 @@ class ControlPlaneMixin:
             resume_offsets=p.get("resume_offsets", False),
             autocache_decision=p.get("autocache_decision"),
             target_share=p.get("target_share"),
+            trace=p.get("trace"),
         )
         if job.policy in (ShardingPolicy.DYNAMIC, ShardingPolicy.STATIC):
             graph = Graph.from_bytes(self._datasets[job.dataset_id].graph_bytes)
@@ -343,8 +350,12 @@ class ControlPlaneMixin:
         client_id: str,
         starving: bool = False,
         stall_stats: Optional[Dict[str, Any]] = None,
+        trace: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         self._crash("client_heartbeat")
+        ctx = TraceContext.from_wire(trace) if trace else None
+        wall = time.time() if ctx is not None else 0.0
+        t0 = time.perf_counter()
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None:
@@ -358,7 +369,19 @@ class ControlPlaneMixin:
             self._maybe_finish(job)
             view = self._job_view(job)
             view["starving_ack"] = starving
-            return view
+        if ctx is not None:
+            # control-plane span: the chaos suite asserts these keep the
+            # job's trace_id across a standby promotion
+            self.tracer.record(
+                "dispatcher.heartbeat",
+                ctx.child(),
+                wall,
+                time.perf_counter() - t0,
+                parent_id=ctx.span_id,
+                job_id=job_id,
+                client_id=client_id,
+            )
+        return view
 
     # ------------------------------------------------------------------
     # Workers
@@ -408,6 +431,9 @@ class ControlPlaneMixin:
         p["compression"] = job.compression
         p["resume_offsets"] = job.resume_offsets
         p["static_shards"] = None
+        if job.trace:
+            # worker pipeline spans parent to the job's root trace context
+            p["trace"] = job.trace
         if job.policy == ShardingPolicy.STATIC and job.shard_mgr is not None:
             # computed ONCE over the workers present at first hand-out (the
             # paper's "up-front" semantics) and journaled for restart stability

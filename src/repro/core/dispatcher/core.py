@@ -20,6 +20,8 @@ import time
 from typing import Any, Dict, Optional
 
 from ...data.graph import Graph
+from ...obs.registry import MetricsRegistry, get_registry
+from ...obs.tracing import Tracer
 from ...snapshot.manager import SnapshotState
 from ...snapshot.policy import AutocacheConfig, AutocachePolicy
 from ..journal import Journal
@@ -45,6 +47,11 @@ class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
         crash_points: Optional[CrashPoints] = None,
         standby: bool = False,
     ):
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(process="dispatcher")
+        self._rpc_counter = self.registry.counter(
+            "dispatcher_rpcs_total", "control-plane RPCs handled, by method"
+        )
         self._lock = threading.RLock()
         self._datasets: Dict[str, _Dataset] = {}
         self._datasets_by_fp: Dict[str, str] = {}
@@ -108,6 +115,7 @@ class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
         fn = getattr(self, f"rpc_{method}", None)
         if fn is None:
             raise ValueError(f"dispatcher: unknown method {method}")
+        self._rpc_counter.labels(method=method).inc()
         return fn(**payload)
 
     # ------------------------------------------------------------------
@@ -285,6 +293,7 @@ class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
                             "resume_offsets": j.resume_offsets,
                             "autocache_decision": j.autocache_decision,
                             "target_share": j.target_share,
+                            "trace": j.trace,
                         },
                         "finished": j.finished,
                         "shard_mgr": j.shard_mgr.to_payload() if j.shard_mgr else None,
@@ -350,6 +359,31 @@ class Dispatcher(ControlPlaneMixin, FleetMixin, CommitterMixin):
                 "workers": [vars(w.info) for w in self._workers.values()],
                 "version": self._worker_list_version,
             }
+
+    def rpc_metrics_dump(self) -> Dict[str, Any]:
+        """Observability scrape (``python -m repro.obs.top``): the control-
+        plane stats view + the merged registry snapshot.  The process-
+        default registry rides along so background singletons that share
+        the dispatcher's process (autoscaler, autotuner, orchestrator
+        error counters) surface in the same dump."""
+        with self._lock:
+            workers = {
+                wid: w.info.address for wid, w in self._workers.items()
+            }
+        return {
+            "process": "dispatcher",
+            "stats": self.rpc_stats(),
+            "workers": workers,
+            "registry": {**get_registry().snapshot(), **self.registry.snapshot()},
+            "trace": {"buffered": len(self.tracer), "dropped": self.tracer.dropped},
+        }
+
+    def rpc_trace_dump(self, max_spans: int = 0) -> Dict[str, Any]:
+        """Drain the dispatcher's span ring buffer (``repro.obs.export``)."""
+        return {
+            "process": self.tracer.process,
+            "spans": self.tracer.drain(max_spans),
+        }
 
     def close(self) -> None:
         self._journal.close()

@@ -48,6 +48,10 @@ class _Job:
     # fleet-scheduler worker share: None = unscheduled (task on every
     # worker, the pre-scheduler behavior); an int caps auto-granted tasks
     target_share: Optional[int] = None
+    # the job-level trace context (wire dict) minted by the registering
+    # client; journaled with job_created so task specs shipped by a
+    # promoted standby keep stamping spans with the same trace_id
+    trace: Optional[Dict[str, Any]] = None
 
 
 @dataclass

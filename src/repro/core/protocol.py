@@ -102,6 +102,32 @@ Dispatcher HA (hot-standby failover, paper §3.4):
   crash ate delivered zero bytes worker-side, so those shards are
   re-queued exactly, each journaled as a ``shard_requeued`` event (the
   journal-only event type; it never travels as an RPC).
+
+Observability (``repro.obs``):
+
+* ``metrics_dump`` — full metrics snapshot, answered by BOTH processes.
+  The dispatcher returns ``{process, stats, workers, registry, trace}``
+  (``workers`` maps worker_id → address so a scraper can fan out);
+  workers return ``{worker_id, registry, stall_report, tasks, trace}``
+  where ``stall_report`` is the per-op bottleneck attribution and
+  ``tasks`` carries per-task op profiles.  ``registry`` is the
+  ``MetricsRegistry`` snapshot (counter/gauge/histogram families, with
+  labeled series); read-only, safe to poll — the fleet dashboard
+  (``python -m repro.obs.top``) scrapes it every interval.
+* ``trace_dump``   — drain up to ``max_spans`` buffered trace spans (0 =
+  all), answered by both processes; returns ``{process, spans}``.  The
+  Chrome-trace exporter (``python -m repro.obs.export``) collects these
+  from the dispatcher and every worker into one Perfetto-loadable file.
+  Draining is destructive by design: each span is exported once.
+
+Trace context propagation: ``get_or_create_job``, ``client_heartbeat``,
+``get_elements``, and ``get_element`` all accept an OPTIONAL ``trace``
+payload field — ``{trace_id, span_id, sample}`` minted by the client's
+tracer.  It is omitted entirely when the client samples the call out, so
+the unsampled hot path's payload is byte-identical to pre-tracing
+builds.  The job-level context rides ``get_or_create_job``, is journaled
+with ``job_created`` (a promoted standby keeps stamping the same
+trace_id), and returns to workers inside task specs.
 """
 from __future__ import annotations
 

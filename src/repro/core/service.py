@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple, Type
 
 logger = logging.getLogger(__name__)
 
+from ..obs.registry import get_registry
 from .dispatcher import CrashPoints, Dispatcher, StandbyDispatcher
 from .protocol import new_id
 from .transport import INPROC, Stub, TCPServer
@@ -95,6 +96,10 @@ class LocalOrchestrator:
         self._logged_errors: Set[Tuple[str, Type[BaseException]]] = set()
 
     def _note_error(self, context: str, exc: BaseException) -> None:
+        get_registry().counter(
+            "orchestrator_errors_total",
+            "swallowed background errors in the orchestrator, by context",
+        ).labels(context=context, kind=type(exc).__name__).inc()
         key = (context, type(exc))
         if key in self._logged_errors:
             return
@@ -366,6 +371,12 @@ class LocalOrchestrator:
         liveness) — the admin counterpart of ``self.workers``, which only
         knows about workers THIS orchestrator started."""
         return Stub(self.dispatcher_address).call("list_workers")
+
+    def metrics_dump(self) -> Dict[str, Any]:
+        """Dispatcher-side metrics snapshot (registry families, per-job
+        stats, worker addresses, trace-buffer depth) — what the fleet
+        dashboard (``python -m repro.obs.top``) scrapes each interval."""
+        return Stub(self.dispatcher_address).call("metrics_dump")
 
     def retire_task(self, task_id: str) -> Dict[str, Any]:
         """Administratively retire one task through the journaled path; the

@@ -21,7 +21,6 @@ import logging
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional, Set, Tuple, Type
 
 from ..data.elements import (
@@ -32,6 +31,9 @@ from ..data.elements import (
 )
 from ..data.graph import Graph
 from ..data.iterators import ExecContext, build_iterator
+from ..obs.profiling import attribute_stalls, merge_profiles, profile_ops
+from ..obs.registry import MetricsRegistry
+from ..obs.tracing import TraceContext, Tracer
 from ..snapshot.format import ChunkRecord
 from ..snapshot.writer import StreamReassigned, StreamWriter
 from .cache import SlidingWindowCache
@@ -48,36 +50,42 @@ from .transport import INPROC, Backoff, Stub, TCPServer, TransportError, compres
 logger = logging.getLogger(__name__)
 
 
-@dataclass
 class WorkerMetrics:
     """Cumulative worker counters, hammered concurrently by every runner
     producer thread and every data-plane handler thread.
 
-    Mutation goes through :meth:`add`, which holds ``_lock``: a bare
-    ``metrics.busy_time += dt`` is a read-modify-write that loses updates
-    under thread switches — and ``busy_time`` feeds the autoscaler's
-    ``cpu_busy`` heartbeat signal, so lost updates read as idle capacity.
+    Now a facade over :class:`repro.obs.registry.MetricsRegistry` — each
+    counter is a registry family named ``worker_<field>`` so the same
+    numbers the heartbeat reports are scraped by ``metrics_dump`` / the
+    fleet dashboard with no second bookkeeping path.  The exactness
+    contract is unchanged: every mutation is serialized per-series (a bare
+    ``+=`` loses updates under thread switches, and ``busy_time`` feeds the
+    autoscaler's ``cpu_busy`` signal, so lost updates read as idle
+    capacity); ``snapshot()`` stays lock-free for readers.
     """
 
-    batches_produced: int = 0
-    batches_served: int = 0
-    bytes_served: int = 0
-    rpc_count: int = 0
-    busy_time: float = 0.0
-    pending_responses: int = 0
-    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _COUNTERS = ("batches_produced", "batches_served", "bytes_served", "rpc_count", "busy_time")
+    _GAUGES = ("pending_responses",)
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._series: Dict[str, Any] = {}
+        for name in self._COUNTERS:
+            self._series[name] = self.registry.counter(
+                f"worker_{name}", "cumulative worker data-plane counter"
+            )
+        for name in self._GAUGES:
+            self._series[name] = self.registry.gauge(
+                f"worker_{name}", "current worker data-plane level"
+            )
 
     def add(self, **deltas: float) -> None:
-        with self._lock:
-            for name, delta in deltas.items():
-                setattr(self, name, getattr(self, name) + delta)
+        for name, delta in deltas.items():
+            self._series[name].add(delta)
 
     def snapshot(self) -> Dict[str, Any]:
-        """Consistent copy for heartbeats/stats (readers never take _lock)."""
-        with self._lock:
-            return {
-                k: v for k, v in vars(self).items() if not k.startswith("_")
-            }
+        """Point-in-time copy for heartbeats/stats (never blocks writers)."""
+        return {name: s.value for name, s in self._series.items()}
 
 
 class _TaskRunner:
@@ -85,6 +93,21 @@ class _TaskRunner:
 
     def __init__(self) -> None:
         self._stopped = threading.Event()
+        # every pipeline this runner executed keeps its ExecContext here so
+        # per-op timings survive shard restarts and roll up in op_profile()
+        self._ctxs: List[ExecContext] = []
+
+    def _new_ctx(self) -> ExecContext:
+        # fresh context per build_iterator call: sharing one would replay
+        # the `cache` op's store across shards; stats are merged at rollup
+        ctx = ExecContext()
+        self._ctxs.append(ctx)
+        return ctx
+
+    def op_profile(self) -> List[Dict[str, Any]]:
+        """Per-op wall/CPU/element rollup across every pipeline context this
+        runner has executed (feeds metrics_dump + stall attribution)."""
+        return merge_profiles(profile_ops(c.stats) for c in list(self._ctxs))
 
     def get(self, job_id: str, round_index: int, consumer_index: int):
         raise NotImplementedError
@@ -126,6 +149,10 @@ class _BufferedRunner(_TaskRunner):
         super().__init__()
         self._worker = worker
         self._spec = spec
+        # the job's root trace context rides in the task spec (journaled
+        # dispatcher-side, so it survives failover); pipeline spans parent
+        # to it and sample at the minting client's rate
+        self._trace = TraceContext.from_wire(spec.get("trace"))
         self._buffer: deque = deque()
         self._buffer_size = buffer_size
         self._cond = threading.Condition()
@@ -139,12 +166,14 @@ class _BufferedRunner(_TaskRunner):
         if policy == ShardingPolicy.STATIC:
             for shard in self._spec.get("static_shards") or []:
                 g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"])
-                yield from build_iterator(g, ExecContext())
+                yield from build_iterator(g, self._new_ctx())
         else:  # OFF: whole dataset, worker-specific order
             g = graph.bind_seed(self._spec["worker_seed"])
-            yield from build_iterator(g, ExecContext())
+            yield from build_iterator(g, self._new_ctx())
 
     def _produce(self) -> None:
+        tracer = self._worker.tracer
+        last = time.perf_counter()
         try:
             for elem in self._iterate():
                 t0 = time.perf_counter()
@@ -158,6 +187,19 @@ class _BufferedRunner(_TaskRunner):
                 self._worker.metrics.add(
                     batches_produced=1, busy_time=time.perf_counter() - t0
                 )
+                if self._trace is not None and tracer.should_sample(self._trace.sample):
+                    # pipeline-execution span: production time of this
+                    # element (iterator pull), excluding the buffer wait
+                    dur = t0 - last
+                    tracer.record(
+                        "worker.pipeline",
+                        self._trace.child(),
+                        time.time() - dur,
+                        dur,
+                        parent_id=self._trace.span_id,
+                        task_id=self._spec.get("task_id"),
+                    )
+                last = time.perf_counter()
                 if self._stopped.is_set():
                     return
         finally:
@@ -262,7 +304,7 @@ class _DynamicRunner(_BufferedRunner):
             self._active_shard = sid
             g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"] + sid)
             produced = 0
-            for i, elem in enumerate(build_iterator(g, ExecContext())):
+            for i, elem in enumerate(build_iterator(g, self._new_ctx())):
                 if i < offset:  # resume after checkpointed prefix
                     continue
                 produced += 1
@@ -353,6 +395,11 @@ class _SharedRunner(_TaskRunner):
         self._worker = worker
         self._cache = worker._get_or_create_cache(spec)
         self._cache.attach(spec["job_id"])
+        # profile the shared producer pipeline (one ctx per cache, owned by
+        # the worker; all attached jobs see the same rollup)
+        ctx = worker._cache_ctxs.get(spec["cache_key"] or spec["dataset_id"])
+        if ctx is not None:
+            self._ctxs.append(ctx)
 
     def get(self, job_id: str, round_index: int, consumer_index: int):
         t0 = time.perf_counter()
@@ -388,7 +435,7 @@ class _CoordinatedRunner(_TaskRunner):
         self._worker = worker
         self._m = max(1, int(spec["num_consumers"]))
         graph = Graph.from_bytes(spec["graph_bytes"]).bind_seed(spec["worker_seed"])
-        self._it = build_iterator(graph, ExecContext())
+        self._it = build_iterator(graph, self._new_ctx())
         self._lock = threading.Lock()
         self._rounds: Dict[int, List[Element]] = {}  # round -> window
         self._consumed: Dict[int, set] = {}
@@ -486,6 +533,7 @@ class _SnapshotStreamRunner:
         self.status = "running"  # running | done | stopped | failed
         self.error: Optional[str] = None
         self._stopped = threading.Event()
+        self._ctxs: List[ExecContext] = []
         self.writer = StreamWriter(
             spec["path"],
             spec["stream_id"],
@@ -499,6 +547,9 @@ class _SnapshotStreamRunner:
 
     def stop(self) -> None:
         self._stopped.set()
+
+    def op_profile(self) -> List[Dict[str, Any]]:
+        return merge_profiles(profile_ops(c.stats) for c in list(self._ctxs))
 
     def _should_stop(self) -> bool:
         return self._worker._stopping.is_set() or self._stopped.is_set()
@@ -543,7 +594,9 @@ class _SnapshotStreamRunner:
         try:
             for shard in sp["shards"]:
                 g = graph.bind_shard(shard).bind_seed(sp["seed"])
-                for elem in build_iterator(g, ExecContext()):
+                ctx = ExecContext()
+                self._ctxs.append(ctx)  # retained for op profiling
+                for elem in build_iterator(g, ctx):
                     if self._should_stop():
                         self.writer.abort()
                         self.status = "stopped"
@@ -597,7 +650,14 @@ class Worker:
         tags: Optional[Dict[str, Any]] = None,
     ):
         self.worker_id = worker_id or new_id("worker")
-        self.metrics = WorkerMetrics()
+        self.registry = MetricsRegistry()
+        self.metrics = WorkerMetrics(self.registry)
+        self.tracer = Tracer(process=f"worker:{self.worker_id}")
+        self._cache_ctxs: Dict[str, ExecContext] = {}
+        # rolling per-op rollup of pruned (finished) tasks, so the stall
+        # report still names the bottleneck after a job completes; merged
+        # by (op index, name) so it stays a handful of rows, not a history
+        self._retired_profiles: List[Dict[str, Any]] = []
         self._dispatcher = Stub(dispatcher_address)
         self._transport = transport
         self._buffer_size = buffer_size
@@ -703,7 +763,9 @@ class Worker:
                 graph = Graph.from_bytes(spec["graph_bytes"]).bind_seed(
                     spec["worker_seed"]
                 )
-                producer = build_iterator(graph, ExecContext())
+                ctx = ExecContext()
+                self._cache_ctxs[key] = ctx  # retained for op profiling
+                producer = build_iterator(graph, ctx)
                 self._caches[key] = SlidingWindowCache(
                     producer, capacity=self._cache_capacity
                 )
@@ -826,7 +888,13 @@ class Worker:
     def _note_error(self, context: str, exc: BaseException) -> None:
         """Log the FIRST instance of each (context, exception type) from a
         background thread; repeats are suppressed (the retry loops would
-        otherwise flood the log at their poll interval)."""
+        otherwise flood the log at their poll interval).  Every instance is
+        counted in the registry so metrics_dump shows chronic failures the
+        log-once policy hides."""
+        self.registry.counter(
+            "worker_errors_total",
+            "swallowed background errors in the worker, by context",
+        ).labels(context=context, kind=type(exc).__name__).inc()
         key = (context, type(exc))
         with self._lock:
             if key in self._logged_errors:
@@ -838,13 +906,20 @@ class Worker:
         )
 
     def _prune_tasks(self, valid: set) -> None:
-        """Drop orphaned tasks (finished/garbage-collected jobs)."""
+        """Drop orphaned tasks (finished/garbage-collected jobs), folding
+        their op profiles into the retired rollup first."""
         with self._lock:
+            pruned = []
             for tid in list(self._tasks):
                 if tid not in valid:
+                    pruned.append(self._tasks[tid].op_profile())
                     self._tasks[tid].stop()
                     del self._tasks[tid]
                     self._task_specs.pop(tid, None)
+            if pruned:
+                self._retired_profiles = merge_profiles(
+                    [self._retired_profiles, *pruned]
+                )
 
     # ------------------------------------------------------------------
     # RPC entry point (data plane)
@@ -872,6 +947,7 @@ class Worker:
         job_id: str = "",
         max_batch: int = DEFAULT_MAX_BATCH,
         timeout: float = 0.0,
+        trace: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         """Batched fetch (data plane v2): drain up to ``max_batch`` elements.
 
@@ -879,8 +955,15 @@ class Worker:
         for the FIRST element before answering PENDING, sparing the client a
         retry/backoff round trip.  With a negotiated codec the whole batch
         is one compressed frame (compressed once, worker-side).
+
+        ``trace`` is present only on SAMPLED fetches (client-minted span
+        context): the unsampled hot path pays exactly one None check.
         """
         self.metrics.add(rpc_count=1)
+        ctx = TraceContext.from_wire(trace) if trace else None
+        sctx = ctx.child() if ctx is not None else None  # our serve span
+        wall = time.time() if sctx is not None else 0.0
+        t0 = time.perf_counter()
         with self._lock:
             runner = self._tasks.get(task_id)
             spec = self._task_specs.get(task_id)
@@ -890,11 +973,13 @@ class Worker:
             job_id, max(1, int(max_batch)), timeout=min(1.0, float(timeout))
         )
         out: Dict[str, Any] = {"status": status.value, "count": len(elems)}
+        nbytes = 0
         if elems:
             nbytes = sum(element_nbytes(e) for e in elems)
             self.metrics.add(batches_served=len(elems), bytes_served=nbytes)
             out["nbytes"] = nbytes
             if spec and spec.get("compression"):
+                e0 = time.perf_counter()
                 encoded = encode_elements(elems)
                 try:
                     frame = compress(encoded, spec["compression"])
@@ -904,9 +989,32 @@ class Worker:
                     # fail every fetch — frames are tag-prefixed, so the
                     # client decodes either way.
                     frame = compress(encoded, None)
+                if sctx is not None:
+                    dur = time.perf_counter() - e0
+                    self.tracer.record(
+                        "worker.encode",
+                        sctx.child(),
+                        time.time() - dur,
+                        dur,
+                        parent_id=sctx.span_id,
+                        nbytes=nbytes,
+                        codec=spec["compression"],
+                    )
                 out["batch_compressed"] = frame
             else:
                 out["elements"] = elems
+        if sctx is not None:
+            self.tracer.record(
+                "worker.serve",
+                sctx,
+                wall,
+                time.perf_counter() - t0,
+                parent_id=ctx.span_id,
+                task_id=task_id,
+                count=len(elems),
+                nbytes=nbytes,
+                status=status.value,
+            )
         return out
 
     def rpc_get_element(
@@ -915,8 +1023,13 @@ class Worker:
         job_id: str = "",
         round_index: int = -1,
         consumer_index: int = -1,
+        trace: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         self.metrics.add(rpc_count=1)
+        ctx = TraceContext.from_wire(trace) if trace else None
+        sctx = ctx.child() if ctx is not None else None
+        wall = time.time() if sctx is not None else 0.0
+        t0 = time.perf_counter()
         with self._lock:
             runner = self._tasks.get(task_id)
             spec = self._task_specs.get(task_id)
@@ -934,6 +1047,17 @@ class Worker:
             else:
                 out["element"] = elem
             out["nbytes"] = nbytes
+        if sctx is not None:
+            self.tracer.record(
+                "worker.serve",
+                sctx,
+                wall,
+                time.perf_counter() - t0,
+                parent_id=ctx.span_id,
+                task_id=task_id,
+                round_index=round_index,
+                status=status.value,
+            )
         return out
 
     def rpc_stats(self) -> Dict[str, Any]:
@@ -964,3 +1088,43 @@ class Worker:
                     for (sid, stream_id), r in self._snapshot_writers.items()
                 },
             }
+
+    def rpc_metrics_dump(self) -> Dict[str, Any]:
+        """Observability scrape: registry snapshot + per-op pipeline
+        profiles + the worker-level stall-attribution report (the op whose
+        standalone capacity bounds throughput).  Read-mostly and lock-light:
+        safe to poll at dashboard rates while the data plane is hot."""
+        with self._lock:
+            runners = dict(self._tasks)
+            specs = dict(self._task_specs)
+            stream_runners = list(self._snapshot_writers.values())
+            retired = list(self._retired_profiles)
+        tasks: Dict[str, Any] = {}
+        profiles: List[List[Dict[str, Any]]] = []
+        for tid, r in runners.items():
+            prof = r.op_profile()
+            profiles.append(prof)
+            tasks[tid] = {
+                "job_id": (specs.get(tid) or {}).get("job_id"),
+                "status": r.status,
+                "occupancy": r.buffer_occupancy(),
+                "profile": prof,
+            }
+        for sr in stream_runners:
+            profiles.append(sr.op_profile())
+        profiles.append(retired)
+        return {
+            "worker_id": self.worker_id,
+            "registry": self.registry.snapshot(),
+            "stall_report": attribute_stalls(merge_profiles(profiles)),
+            "tasks": tasks,
+            "trace": {"buffered": len(self.tracer), "dropped": self.tracer.dropped},
+        }
+
+    def rpc_trace_dump(self, max_spans: int = 0) -> Dict[str, Any]:
+        """Drain this worker's span ring buffer (consumed by
+        ``repro.obs.export``; draining keeps repeat exports disjoint)."""
+        return {
+            "process": self.tracer.process,
+            "spans": self.tracer.drain(max_spans),
+        }

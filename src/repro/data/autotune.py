@@ -18,6 +18,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Set
 
+from ..obs.profiling import attribute_stalls
+from ..obs.registry import get_registry
 from .iterators import ExecContext, Knob, OpStats
 
 logger = logging.getLogger(__name__)
@@ -71,7 +73,11 @@ class Autotuner:
             except Exception as e:
                 # the tuner must never kill the pipeline, but a silent
                 # bare-except disabled tuning forever without a trace —
-                # log the first occurrence of each exception type
+                # count every occurrence, log the first of each type
+                get_registry().counter(
+                    "autotuner_errors_total",
+                    "swallowed autotuner step failures, by exception type",
+                ).labels(kind=type(e).__name__).inc()
                 if type(e) not in self._logged_errors:
                     self._logged_errors.add(type(e))
                     logger.warning(
@@ -90,9 +96,20 @@ class Autotuner:
             # and GIL-atomic, so an unlocked read is at worst one window
             # stale — it delays a tuning decision, never corrupts one.
             # list() snapshots the dict against concurrent op insertion.
-            for idx, stats in list(self._ctx.stats.items()):
+            snapshot = list(self._ctx.stats.items())
+            # Stall attribution replaces the old coarse rate probe: only
+            # the op with the lowest modeled capacity gets its parallelism
+            # climbed.  Widening a non-bottleneck op can't raise pipeline
+            # throughput, so the old tune-everything loop spent its rate
+            # windows oscillating knobs that didn't matter.  Before any op
+            # has measured cost the report names no bottleneck and we fall
+            # back to tuning every AUTOTUNE knob.
+            report = attribute_stalls(self._ctx.stats)
+            bottleneck_idx = report.get("bottleneck_index")
+            for idx, stats in snapshot:
                 if stats.parallelism is not None and stats.parallelism.autotune:
-                    self._tune_parallelism(idx, stats, now)
+                    if bottleneck_idx is None or idx == bottleneck_idx:
+                        self._tune_parallelism(idx, stats, now)
                 if stats.buffer_size is not None and stats.buffer_size.autotune:
                     self._tune_buffer(stats)
 

@@ -173,6 +173,7 @@ class Dataset:
         fetch_window: Optional[int] = None,
         max_batch: Optional[int] = None,
         prefer_batched: bool = True,
+        trace_sample: float = 0.0,
     ) -> "Dataset":
         """Process this dataset in a tf.data-service-style deployment.
 
@@ -191,6 +192,9 @@ class Dataset:
         sets the job's fleet-scheduler share weight and ``max_workers``
         caps its worker allocation — together the per-job right-sizing
         knobs from the paper's shared-fleet production setup (§3).
+        ``trace_sample`` > 0 enables cross-process tracing: the session
+        mints a root trace context and samples that fraction of element
+        fetches into spans (see ``repro.obs``).
         """
         from ..core.client import DistributedDataset  # lazy: avoid cycle
         from ..core.protocol import DEFAULT_FETCH_WINDOW, DEFAULT_MAX_BATCH
@@ -218,6 +222,7 @@ class Dataset:
             fetch_window=fetch_window,
             max_batch=max_batch,
             prefer_batched=prefer_batched,
+            trace_sample=trace_sample,
         )
 
     # -- execution --------------------------------------------------------------

@@ -47,14 +47,16 @@ class Knob:
 class OpStats:
     name: str = ""
     elements: int = 0
-    busy_time: float = 0.0  # cumulative seconds spent inside the op's fn
+    busy_time: float = 0.0  # cumulative WALL seconds inside the op's fn
+    cpu_time: float = 0.0  # cumulative CPU (thread_time) seconds in the fn
     parallelism: Optional[Knob] = None
     buffer_size: Optional[Knob] = None
     buffer_occupancy: float = 0.0  # EMA of queue fill fraction
 
-    def record(self, dt: float, n: int = 1) -> None:
+    def record(self, dt: float, n: int = 1, cpu: float = 0.0) -> None:
         self.elements += n
         self.busy_time += dt
+        self.cpu_time += cpu
 
     @property
     def mean_cost(self) -> float:
@@ -103,9 +105,14 @@ class _ParallelMap:
         self._exhausted = False
 
     def _timed(self, elem: Element) -> Element:
+        # wall vs CPU split: a map dominated by wall-but-not-CPU time is
+        # blocked on I/O, not compute — stall attribution reads both
         t0 = time.perf_counter()
+        c0 = time.thread_time()
         out = self._fn(elem)
-        self._stats.record(time.perf_counter() - t0)
+        self._stats.record(
+            time.perf_counter() - t0, cpu=time.thread_time() - c0
+        )
         return out
 
     def _fill(self) -> None:
@@ -416,8 +423,9 @@ def _sequential_map(
 ) -> Iterator[Element]:
     for elem in up:
         t0 = time.perf_counter()
+        c0 = time.thread_time()
         out = fn(elem)
-        stats.record(time.perf_counter() - t0)
+        stats.record(time.perf_counter() - t0, cpu=time.thread_time() - c0)
         yield out
 
 

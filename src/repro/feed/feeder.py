@@ -166,6 +166,11 @@ class DeviceFeeder:
     # Transfer thread
     # ------------------------------------------------------------------
     def _run(self) -> None:
+        # The service client owns the job's trace context; the feeder's
+        # spans (fetch / device_put) parent onto the same root so one
+        # Perfetto track shows client->dispatcher->worker->feeder.
+        tracer = getattr(self._client, "tracer", None)
+        root = getattr(self._client, "trace_root", None)
         try:
             it = iter(self._client)
             while not self._closed.is_set():
@@ -174,12 +179,28 @@ class DeviceFeeder:
                     batch = next(it)
                 except StopIteration:
                     break
-                self.metrics.add_fetch(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.metrics.add_fetch(dt)
+                sampled = (
+                    tracer is not None
+                    and root is not None
+                    and tracer.should_sample()
+                )
+                if sampled:
+                    tracer.record(
+                        "feed.fetch", root.child(), time.time() - dt, dt,
+                        parent_id=root.span_id,
+                    )
                 t0 = time.perf_counter()
                 placed = self._to_device(batch)
-                self.metrics.add_transfer(
-                    time.perf_counter() - t0, leaf_nbytes(batch)
-                )
+                dt = time.perf_counter() - t0
+                nbytes = leaf_nbytes(batch)
+                self.metrics.add_transfer(dt, nbytes)
+                if sampled:
+                    tracer.record(
+                        "feed.device_put", root.child(), time.time() - dt, dt,
+                        parent_id=root.span_id, nbytes=nbytes,
+                    )
                 if not self._put(placed):
                     return  # closed while the queue was full
                 self._maybe_report()

@@ -26,6 +26,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from ..obs.registry import MetricsRegistry
+
 
 @dataclass
 class FeedMetrics:
@@ -34,6 +36,11 @@ class FeedMetrics:
     Updated from two threads (transfer thread: ``fetch_s``/``transfer_s``/
     ``batches_fetched``/``bytes_to_device``; consumer thread: the rest), so
     mutation goes through the ``add_*`` helpers which hold ``_lock``.
+
+    The dataclass fields stay the source of truth — ``StallWindow`` and the
+    feeder tests read them directly under ``_lock`` — but every write is
+    mirrored into ``registry`` (``feed_*`` families) so the feeder shows up
+    in metrics dumps alongside the client/worker registries.
     """
 
     steps: int = 0  # batches handed to the consumer
@@ -44,18 +51,51 @@ class FeedMetrics:
     compute_s: float = 0.0  # consumer time between next() calls
     bytes_to_device: int = 0
     queue_depth_ema: float = 0.0  # device-queue fill observed at next()
+    registry: Optional[MetricsRegistry] = field(default=None, repr=False, compare=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.registry is None:
+            self.registry = MetricsRegistry()
+        self._series = {
+            "steps": self.registry.counter("feed_steps", "batches handed to the consumer"),
+            "batches_fetched": self.registry.counter(
+                "feed_batches_fetched", "batches pulled from the data service"
+            ),
+            "idle_s": self.registry.counter(
+                "feed_idle_time", "consumer wall time blocked in next()"
+            ),
+            "fetch_s": self.registry.counter(
+                "feed_fetch_time", "transfer thread blocked on the host iterator"
+            ),
+            "transfer_s": self.registry.counter(
+                "feed_transfer_time", "host->device placement time"
+            ),
+            "compute_s": self.registry.counter(
+                "feed_compute_time", "consumer time between next() calls"
+            ),
+            "bytes_to_device": self.registry.counter(
+                "feed_bytes_to_device", "bytes placed on device"
+            ),
+            "queue_depth_ema": self.registry.gauge(
+                "feed_queue_depth", "device-queue fill EMA observed at next()"
+            ),
+        }
 
     # -- writers (thread-safe) -------------------------------------------
     def add_fetch(self, seconds: float) -> None:
         with self._lock:
             self.fetch_s += seconds
             self.batches_fetched += 1
+        self._series["fetch_s"].add(seconds)
+        self._series["batches_fetched"].inc()
 
     def add_transfer(self, seconds: float, nbytes: int) -> None:
         with self._lock:
             self.transfer_s += seconds
             self.bytes_to_device += nbytes
+        self._series["transfer_s"].add(seconds)
+        self._series["bytes_to_device"].add(nbytes)
 
     def add_step(self, idle: float, compute: Optional[float], depth_frac: float) -> None:
         with self._lock:
@@ -64,6 +104,12 @@ class FeedMetrics:
             if compute is not None:
                 self.compute_s += compute
             self.queue_depth_ema = 0.8 * self.queue_depth_ema + 0.2 * depth_frac
+            depth_ema = self.queue_depth_ema
+        self._series["steps"].inc()
+        self._series["idle_s"].add(idle)
+        if compute is not None:
+            self._series["compute_s"].add(compute)
+        self._series["queue_depth_ema"].set(depth_ema)
 
     # -- derived ----------------------------------------------------------
     @property

@@ -1,0 +1,41 @@
+"""Unified observability layer: metrics registry, cross-process tracing,
+per-op pipeline profiling, Chrome-trace export, and the fleet dashboard.
+
+* :mod:`repro.obs.registry` — typed Counter/Gauge/Histogram families with
+  exact concurrent writes and lock-free-read snapshots; every metrics
+  island in the service (worker, client, feeder, autoscaler, autotuner)
+  sits on one of these.
+* :mod:`repro.obs.tracing` — ``TraceContext`` propagation through RPC
+  payloads plus per-process ``Tracer`` ring buffers.
+* :mod:`repro.obs.profiling` — per-op wall/CPU rollups and the
+  stall-attribution report naming the bottleneck op.
+* :mod:`repro.obs.export` — ``trace_dump`` scraper + Perfetto-loadable
+  Chrome trace-event JSON writer (``python -m repro.obs.export``).
+* :mod:`repro.obs.top` — fleet dashboard over ``metrics_dump``
+  (``python -m repro.obs.top``).
+"""
+from .registry import Counter, Gauge, Histogram, MetricsRegistry, get_registry
+from .tracing import Span, TraceContext, Tracer
+from .profiling import attribute_stalls, merge_profiles, profile_ops
+
+# export imports repro.core.transport, which (via repro.core.__init__) pulls
+# in modules that import repro.obs submodules — keep it LAST so the registry/
+# tracing names above are already bound when that cycle re-enters this package.
+from .export import collect, export_chrome_trace, to_chrome
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "Span",
+    "TraceContext",
+    "Tracer",
+    "attribute_stalls",
+    "merge_profiles",
+    "profile_ops",
+    "collect",
+    "export_chrome_trace",
+    "to_chrome",
+]

@@ -1,0 +1,129 @@
+"""Chrome trace-event export (``python -m repro.obs.export``).
+
+Collects span buffers from every process of a deployment — dispatcher and
+workers over the ``trace_dump`` RPC, plus any locally-held spans (client /
+feeder tracers live in the consuming process) — and writes them as Chrome
+trace-event JSON: open the file in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing`` to see fetch / pipeline / encode / transfer /
+device-put spans aligned per process on one wall-clock timeline.
+
+Library use::
+
+    from repro.obs import export
+    spans = export.collect(dispatcher_address) + client.tracer.drain()
+    export.export_chrome_trace("trace.json", spans)
+
+CLI use (tcp/grpc deployments)::
+
+    python -m repro.obs.export --dispatcher tcp://HOST:PORT --out trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+from ..core.transport import Stub, TransportError
+
+__all__ = ["collect", "to_chrome", "export_chrome_trace", "main"]
+
+
+def collect(
+    dispatcher_address: str, include_workers: bool = True, max_spans: int = 0
+) -> List[Dict[str, Any]]:
+    """Drain span buffers from the dispatcher and (optionally) every
+    registered worker.  Unreachable processes are skipped, not fatal — a
+    trace export must work on a half-degraded deployment."""
+    spans: List[Dict[str, Any]] = []
+    try:
+        resp = Stub(dispatcher_address).call("trace_dump", max_spans=max_spans)
+        spans.extend(resp.get("spans", []))
+    except (TransportError, ValueError):
+        resp = {}
+    addresses: List[str] = []
+    if include_workers:
+        try:
+            listing = Stub(dispatcher_address).call("list_workers")
+            addresses = [w["address"] for w in listing.get("workers", [])]
+        except (TransportError, ValueError):
+            addresses = []
+    for addr in addresses:
+        try:
+            wresp = Stub(addr).call("trace_dump", max_spans=max_spans)
+            spans.extend(wresp.get("spans", []))
+        except (TransportError, ValueError):
+            continue
+    return spans
+
+
+def to_chrome(spans: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Convert span dicts (``Tracer.drain`` output) to trace-event JSON.
+
+    Each distinct span ``process`` becomes a pid with a metadata naming
+    event; spans are complete ("X") events in wall-clock microseconds so
+    multiple processes align on one timeline.
+    """
+    pids: Dict[str, int] = {}
+    events: List[Dict[str, Any]] = []
+    for s in spans:
+        proc = str(s.get("process", "?"))
+        pid = pids.get(proc)
+        if pid is None:
+            pid = pids[proc] = len(pids) + 1
+            events.append(
+                {
+                    "ph": "M",
+                    "name": "process_name",
+                    "pid": pid,
+                    "tid": 0,
+                    "args": {"name": proc},
+                }
+            )
+        args = dict(s.get("attrs") or {})
+        args["trace_id"] = s.get("trace_id")
+        args["span_id"] = s.get("span_id")
+        if s.get("parent_id"):
+            args["parent_id"] = s["parent_id"]
+        events.append(
+            {
+                "ph": "X",
+                "name": str(s.get("name", "span")),
+                "cat": str(s.get("trace_id", "trace")),
+                "pid": pid,
+                "tid": 1,
+                "ts": float(s.get("start_unix", 0.0)) * 1e6,
+                "dur": max(1.0, float(s.get("duration_s", 0.0)) * 1e6),
+                "args": args,
+            }
+        )
+    return events
+
+
+def export_chrome_trace(
+    path: str, spans: List[Dict[str, Any]], metadata: Optional[Dict[str, Any]] = None
+) -> int:
+    """Write Perfetto-loadable JSON; returns the number of span events."""
+    events = to_chrome(spans)
+    doc = {"traceEvents": events, "otherData": metadata or {}}
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return sum(1 for e in events if e.get("ph") == "X")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.export",
+        description="Export a deployment's trace spans as Chrome trace JSON",
+    )
+    ap.add_argument("--dispatcher", required=True, help="dispatcher address")
+    ap.add_argument("--out", default="trace.json", help="output path")
+    ap.add_argument("--max-spans", type=int, default=0, help="per-process cap (0 = all)")
+    args = ap.parse_args(argv)
+    spans = collect(args.dispatcher, max_spans=args.max_spans)
+    n = export_chrome_trace(args.out, spans)
+    print(f"wrote {n} spans from {args.dispatcher} to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

@@ -1,0 +1,119 @@
+"""Per-op pipeline profiling: rollup + stall attribution.
+
+``data/iterators.py`` already times every op into ``OpStats`` (wall busy
+time and, since this module landed, CPU thread time and element counts).
+This module turns those raw counters into the two artifacts the rest of
+the system consumes:
+
+* :func:`profile_ops` — a JSON-able per-op table (wall/CPU seconds,
+  elements, mean cost, parallelism, buffer occupancy) exposed through the
+  worker's ``metrics_dump`` RPC per task;
+* :func:`attribute_stalls` — the per-job "why is this slow" report.  The
+  bottleneck is the op with the LOWEST steady-state capacity
+  (``parallelism / mean_cost`` elements/s): in a linear pipeline the
+  slowest stage bounds throughput regardless of how fast the others are,
+  which is the same model tf.data's autotuner optimizes against.  The
+  ``Autotuner`` consumes this directly (tune the bottleneck, not every
+  knob), replacing its coarse whole-pipeline rate probe for op selection.
+
+Sources (``range``/``files``/...) and zero-cost pass-through ops report no
+busy time and are excluded from attribution rather than read as
+infinitely fast bottlenecks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Mapping, Optional
+
+__all__ = ["profile_ops", "attribute_stalls", "merge_profiles"]
+
+
+def profile_ops(stats: Mapping[int, Any]) -> List[Dict[str, Any]]:
+    """Flatten an ``ExecContext.stats`` mapping into a per-op table.
+
+    Accepts any mapping of node index -> OpStats-shaped object (duck-typed
+    so dispatcher-side aggregation can feed dicts back through).
+    """
+    out: List[Dict[str, Any]] = []
+    for idx in sorted(stats):
+        s = stats[idx]
+        elements = int(getattr(s, "elements", 0))
+        wall = float(getattr(s, "busy_time", 0.0))
+        cpu = float(getattr(s, "cpu_time", 0.0))
+        par = getattr(s, "parallelism", None)
+        out.append(
+            {
+                "index": idx,
+                "name": str(getattr(s, "name", f"op{idx}")),
+                "elements": elements,
+                "wall_s": wall,
+                "cpu_s": cpu,
+                "mean_cost_s": wall / elements if elements else 0.0,
+                "parallelism": int(par.get()) if par is not None else 1,
+                "buffer_occupancy": float(getattr(s, "buffer_occupancy", 0.0)),
+            }
+        )
+    return out
+
+
+def merge_profiles(profiles: Iterable[List[Dict[str, Any]]]) -> List[Dict[str, Any]]:
+    """Sum per-op rows across contexts/tasks/workers, keyed by (index, name).
+
+    A runner that restarts its pipeline per shard owns several contexts
+    with identical node indices; a job owns one runner per worker — either
+    way the per-op totals add.
+    """
+    acc: Dict[Any, Dict[str, Any]] = {}
+    for rows in profiles:
+        for row in rows:
+            key = (row.get("index", -1), row.get("name", ""))
+            cur = acc.get(key)
+            if cur is None:
+                acc[key] = dict(row)
+                continue
+            cur["elements"] += row.get("elements", 0)
+            cur["wall_s"] += row.get("wall_s", 0.0)
+            cur["cpu_s"] += row.get("cpu_s", 0.0)
+            # widest observed width / fullest buffer win (capacity model)
+            cur["parallelism"] = max(cur["parallelism"], row.get("parallelism", 1))
+            cur["buffer_occupancy"] = max(
+                cur["buffer_occupancy"], row.get("buffer_occupancy", 0.0)
+            )
+    for row in acc.values():
+        row["mean_cost_s"] = (
+            row["wall_s"] / row["elements"] if row["elements"] else 0.0
+        )
+    return sorted(acc.values(), key=lambda r: r.get("index", -1))
+
+
+def attribute_stalls(
+    stats_or_profile: Any, min_elements: int = 1
+) -> Dict[str, Any]:
+    """Name the pipeline's bottleneck op and each op's share of busy time.
+
+    Returns ``{"bottleneck": name|None, "bottleneck_index": idx|None,
+    "capacity_eps": float, "ops": [...]}`` where each op row carries
+    ``busy_share`` (fraction of total timed wall) and ``capacity_eps``
+    (``parallelism / mean_cost`` — the op's standalone throughput ceiling
+    in elements/s).  The bottleneck is the MINIMUM-capacity op among those
+    with measured cost and at least ``min_elements`` processed.
+    """
+    if isinstance(stats_or_profile, Mapping):
+        rows = profile_ops(stats_or_profile)
+    else:
+        rows = [dict(r) for r in stats_or_profile]
+    total_wall = sum(r["wall_s"] for r in rows) or 0.0
+    bottleneck: Optional[Dict[str, Any]] = None
+    for r in rows:
+        r["busy_share"] = r["wall_s"] / total_wall if total_wall > 0 else 0.0
+        if r["mean_cost_s"] > 0 and r["elements"] >= min_elements:
+            r["capacity_eps"] = max(1, r["parallelism"]) / r["mean_cost_s"]
+            if bottleneck is None or r["capacity_eps"] < bottleneck["capacity_eps"]:
+                bottleneck = r
+        else:
+            r["capacity_eps"] = float("inf")
+    return {
+        "bottleneck": bottleneck["name"] if bottleneck else None,
+        "bottleneck_index": bottleneck["index"] if bottleneck else None,
+        "capacity_eps": bottleneck["capacity_eps"] if bottleneck else float("inf"),
+        "ops": rows,
+    }

@@ -1,0 +1,173 @@
+"""Fleet dashboard (``python -m repro.obs.top``).
+
+Scrapes the ``metrics_dump`` RPC on the dispatcher and on every registered
+worker and renders the fleet the way the paper diagnoses it: per-job
+consumer stall % (the input-bound fraction), per-worker throughput and
+busy time, fleet-scheduler shares, and feed idle-per-step.  Between two
+scrapes the worker counters are differenced into rates.
+
+One-shot (CI / scripts)::
+
+    python -m repro.obs.top --dispatcher tcp://HOST:PORT --once
+
+Live (refreshes in place every ``--interval`` seconds) omit ``--once``.
+``--json`` dumps the raw merged scrape for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+from ..core.transport import Stub, TransportError
+
+__all__ = ["scrape", "render", "main"]
+
+
+def scrape(dispatcher_address: str) -> Dict[str, Any]:
+    """One fleet observation: dispatcher dump + per-worker dumps.
+
+    Dead workers are reported, not fatal — the dashboard's job includes
+    showing a degraded fleet.  ``t`` is a perf_counter timestamp used only
+    for rate differencing between two scrapes in THIS process.
+    """
+    out: Dict[str, Any] = {"t": time.perf_counter(), "workers": {}, "errors": []}
+    try:
+        out["dispatcher"] = Stub(dispatcher_address).call("metrics_dump")
+    except (TransportError, ValueError) as e:
+        out["dispatcher"] = None
+        out["errors"].append(f"dispatcher: {e!r}")
+        return out
+    for wid, addr in (out["dispatcher"].get("workers") or {}).items():
+        try:
+            out["workers"][wid] = Stub(addr).call("metrics_dump")
+        except (TransportError, ValueError) as e:
+            out["workers"][wid] = None
+            out["errors"].append(f"{wid}: {e!r}")
+    return out
+
+
+def _fmt(v: Optional[float], unit: str = "", digits: int = 1) -> str:
+    if v is None:
+        return "-"
+    return f"{v:.{digits}f}{unit}"
+
+
+def _counter(registry: Optional[Dict[str, Any]], name: str) -> float:
+    fam = (registry or {}).get(name) or {}
+    v = fam.get("value", 0.0)
+    return float(v) if isinstance(v, (int, float)) else 0.0
+
+
+def render(snap: Dict[str, Any], prev: Optional[Dict[str, Any]] = None) -> str:
+    """Render one scrape (optionally differenced against the previous one
+    for rates) as a fixed-width text dashboard."""
+    lines: List[str] = []
+    d = snap.get("dispatcher")
+    if not d:
+        return "dispatcher unreachable:\n  " + "\n  ".join(snap.get("errors", []))
+    stats = d.get("stats") or {}
+    dt = None
+    if prev is not None and prev.get("dispatcher"):
+        dt = max(1e-6, snap["t"] - prev["t"])
+
+    jobs = stats.get("jobs") or {}
+    lines.append(
+        f"jobs: {len(jobs)}   workers: {stats.get('num_workers', 0)}   "
+        f"errors: {len(snap.get('errors') or [])}"
+    )
+    lines.append("")
+    lines.append(
+        f"{'JOB':<22}{'POLICY':<9}{'TASKS':>6}{'SHARE':>7}{'WEIGHT':>8}"
+        f"{'STALL%':>8}{'IDLE/STEP':>11}{'CLIENTS':>9}"
+    )
+    for jid, j in sorted(jobs.items()):
+        cs = j.get("client_stall") or {}
+        stall = cs.get("stall_frac")
+        idle = cs.get("idle_s_per_step")
+        name = j.get("name") or jid
+        share = j.get("target_share")
+        lines.append(
+            f"{name[:21]:<22}{j.get('policy', '?'):<9}{j.get('tasks', 0):>6}"
+            f"{share if share is not None else '-':>7}{j.get('weight', 1.0):>8.2f}"
+            f"{_fmt(stall * 100 if stall is not None else None, '%'):>8}"
+            f"{_fmt(idle * 1000 if idle is not None else None, 'ms'):>11}"
+            f"{j.get('clients', 0):>9}"
+        )
+    lines.append("")
+    lines.append(
+        f"{'WORKER':<22}{'BATCH/S':>9}{'MB/S':>8}{'RPC/S':>8}{'BUSY%':>8}"
+        f"{'OCC%':>7}{'BOTTLENECK':>20}"
+    )
+    prev_workers = (prev or {}).get("workers") or {}
+    dworkers = stats.get("workers") or {}
+    for wid, w in sorted(snap.get("workers", {}).items()):
+        if w is None:
+            lines.append(f"{wid[:21]:<22}{'DOWN':>9}")
+            continue
+        reg = w.get("registry") or {}
+        served = _counter(reg, "worker_batches_served")
+        nbytes = _counter(reg, "worker_bytes_served")
+        rpcs = _counter(reg, "worker_rpc_count")
+        busy = _counter(reg, "worker_busy_time")
+        rate = mbs = rps = busy_pct = None
+        pw = prev_workers.get(wid)
+        if dt is not None and pw:
+            preg = pw.get("registry") or {}
+            rate = (served - _counter(preg, "worker_batches_served")) / dt
+            mbs = (nbytes - _counter(preg, "worker_bytes_served")) / dt / 1e6
+            rps = (rpcs - _counter(preg, "worker_rpc_count")) / dt
+            busy_pct = (busy - _counter(preg, "worker_busy_time")) / dt * 100
+        occ = (dworkers.get(wid) or {}).get("buffer_occupancy")
+        stall_report = w.get("stall_report") or {}
+        lines.append(
+            f"{wid[:21]:<22}{_fmt(rate):>9}{_fmt(mbs, '', 2):>8}{_fmt(rps):>8}"
+            f"{_fmt(busy_pct, '%'):>8}"
+            f"{_fmt(occ * 100 if occ is not None else None, '%'):>7}"
+            f"{str(stall_report.get('bottleneck') or '-')[:19]:>20}"
+        )
+    bg = d.get("registry") or {}
+    bg_errors = {
+        name: fam
+        for name, fam in bg.items()
+        if name.endswith("errors_total") and (fam.get("value") or fam.get("series"))
+    }
+    if bg_errors:
+        lines.append("")
+        lines.append("background errors:")
+        for name, fam in sorted(bg_errors.items()):
+            total = fam.get("value", 0)
+            series = fam.get("series") or {}
+            detail = " ".join(f"{k}={int(v)}" for k, v in sorted(series.items()))
+            lines.append(f"  {name}: {int(total)} {detail}".rstrip())
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.top",
+        description="Live fleet dashboard over the metrics_dump RPC",
+    )
+    ap.add_argument("--dispatcher", required=True, help="dispatcher address")
+    ap.add_argument("--interval", type=float, default=2.0)
+    ap.add_argument("--once", action="store_true", help="print one scrape and exit")
+    ap.add_argument("--json", action="store_true", help="dump the raw scrape as JSON")
+    args = ap.parse_args(argv)
+    prev: Optional[Dict[str, Any]] = None
+    while True:
+        snap = scrape(args.dispatcher)
+        if args.json:
+            print(json.dumps(snap, default=str))
+        else:
+            if not args.once:
+                print("\x1b[2J\x1b[H", end="")  # clear screen, home cursor
+            print(render(snap, prev))
+        if args.once:
+            return 0 if snap.get("dispatcher") else 1
+        prev = snap
+        time.sleep(max(0.1, args.interval))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

@@ -169,6 +169,9 @@ def write_metadata(
             "chunk_bytes": chunk_bytes,
             "num_streams": num_streams,
             "seed_base": seed_base,
+            # wall clock on purpose: this timestamp is persisted and read
+            # by other processes (staleness checks compare it to THEIR
+            # clocks), so perf_counter would be meaningless here
             "created_unix": time.time(),
         },
     )

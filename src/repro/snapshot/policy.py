@@ -122,6 +122,8 @@ class AutocachePolicy:
         if snapshot_finished(path):
             return AutocacheDecision(Decision.READ, path, "finished snapshot on disk")
         if snapshot_exists(path):
+            # wall clock on purpose: last_progress_unix is a mtime written
+            # by ANOTHER process, so only epoch time is comparable to it
             idle = time.time() - last_progress_unix(path)
             if idle > cfg.stale_write_timeout_s:
                 # abandoned write (owning deployment died): restart it —

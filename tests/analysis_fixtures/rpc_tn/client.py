@@ -12,3 +12,9 @@ class Client:
         return self._stub.call(
             "put_item", key=key, value=value
         )
+
+    def metrics(self):
+        return self._stub.call("metrics_dump")
+
+    def spans(self, n=0):
+        return self._stub.call("trace_dump", max_spans=n)

@@ -2,6 +2,8 @@
 
 Documented methods:
 
-* ``get_item``  — fetch one item by key.
-* ``put_item``  — store one item.
+* ``get_item``     — fetch one item by key.
+* ``put_item``     — store one item.
+* ``metrics_dump`` — full metrics snapshot (registry families).
+* ``trace_dump``   — drain up to ``max_spans`` buffered trace spans.
 """

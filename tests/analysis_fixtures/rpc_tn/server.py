@@ -8,3 +8,9 @@ class Server:
     def rpc_put_item(self, key, value):
         self._store = {key: value}
         return {"ok": True}
+
+    def rpc_metrics_dump(self):
+        return {"process": "server", "registry": {}}
+
+    def rpc_trace_dump(self, max_spans=0):
+        return {"process": "server", "spans": []}

@@ -9,3 +9,8 @@ class Server:
         # R001: not in protocol.py; R002: no stub call site;
         # R003: returns a set, which no wire codec serializes
         return {key}
+
+    def rpc_metrics_dump(self):
+        # observability handler added without updating the spec or any
+        # scraper: R001 (undocumented) + R002 (no stub call site)
+        return {"process": "server", "registry": {}}

@@ -40,6 +40,7 @@ from repro.snapshot.format import chunk_path
 SNAPSHOT_POINTS = ("commit_chunk.pre", "commit_chunk.journaled")
 REBALANCE_POINTS = ("retire_task.pre", "retire_task.journaled")
 ROUND_POINTS = ("client_heartbeat", "worker_heartbeat")
+TRACE_POINTS = ("client_heartbeat", "worker_heartbeat")
 
 # generous harness-level ceiling; the journal-replay bound itself is
 # asserted in test_chaos.py from the measured lease timeout + promote time
@@ -324,5 +325,72 @@ def run_round_chaos(seed: int) -> ChaosRun:
             seed, cp, orch, times, point, countdown,
             {"rounds": widths, "consumers": len(out)},
         )
+    finally:
+        orch.stop()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 4: trace continuity across standby promotion
+# ---------------------------------------------------------------------------
+def run_trace_chaos(seed: int) -> ChaosRun:
+    """Fully-sampled tracing while the primary dispatcher dies mid-heartbeat.
+
+    The job's trace context is journaled with ``job_created`` and replicated
+    to the standby, so spans the PROMOTED dispatcher records must carry the
+    same trace_id as spans the dead primary recorded — and since parent
+    spans are recorded in ``finally`` blocks on the client, no span in any
+    process may reference a parent that was never recorded.  The details
+    carry every process's drained spans, tagged pre/post promotion, for
+    ``test_chaos.py`` to assert on.
+    """
+    rng = random.Random(seed)
+    point = rng.choice(TRACE_POINTS)
+    countdown = rng.randint(2, 6)
+    cp = CrashPoints()
+    cp.arm(point, countdown)
+    orch = chaos_orchestrator(cp)
+    svc = orch.start()
+    try:
+        orch.arm_standby()
+        times: Dict[str, float] = {}
+        _arm_failover_probe(orch, cp, times)
+        primary = orch.dispatcher  # keep the pre-crash tracer reachable
+        dds = (
+            Dataset.range(400)
+            .map(chaos_slow, delay=0.01)
+            .batch(2)
+            .distribute(
+                service=svc,
+                processing_mode="dynamic",
+                job_name="chaos-trace",
+                trace_sample=1.0,
+            )
+        )
+        # fast client heartbeats so the armed client_heartbeat countdown
+        # fires (and post-promotion heartbeats flow) well within the run
+        sess = dds.session(heartbeat_interval=0.05)
+        n = 0
+        try:
+            for b in sess:
+                n += len(np.ravel(b))
+        finally:
+            sess.close()
+        pre_promote = primary.tracer.drain()
+        post_promote: List[Dict[str, Any]] = []
+        if orch.dispatcher is not None and orch.dispatcher is not primary:
+            post_promote = orch.dispatcher.tracer.drain()
+        spans = list(sess.tracer.drain()) + list(pre_promote) + list(post_promote)
+        for w in orch.workers:
+            spans += w.tracer.drain()
+        details = {
+            "elements": n,
+            "spans": spans,
+            "pre_promote": pre_promote,
+            "post_promote": post_promote,
+            "dropped": sess.tracer.dropped
+            + primary.tracer.dropped
+            + sum(w.tracer.dropped for w in orch.workers),
+        }
+        return _finish_run(seed, cp, orch, times, point, countdown, details)
     finally:
         orch.stop()

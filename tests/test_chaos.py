@@ -24,6 +24,7 @@ from chaos import (
     run_rebalance_chaos,
     run_round_chaos,
     run_snapshot_chaos,
+    run_trace_chaos,
 )
 
 DEFAULT_SEEDS = [3, 11, 27]
@@ -113,3 +114,38 @@ class TestCoordinatedRoundChaos:
                 f"seed {seed} point {run.point} round {i}: "
                 f"consumers saw different bucket widths {widths}"
             )
+
+
+class TestTraceContinuityChaos:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_trace_survives_promotion_with_no_orphans(self, seed):
+        run = run_trace_chaos(seed)
+        _check_failover(run)
+        spans = run.details["spans"]
+        assert spans, "fully-sampled run recorded no spans"
+        assert run.details["dropped"] == 0, "span ring overflowed; widen capacity"
+        # the job trace is journaled with job_created and replicated, so
+        # every process — including the promoted standby — stamps the SAME
+        # trace id before and after the crash
+        trace_ids = {s["trace_id"] for s in spans}
+        assert len(trace_ids) == 1, (
+            f"seed {seed} point {run.point}: expected one trace id, "
+            f"got {trace_ids}"
+        )
+        assert run.details["pre_promote"], "primary recorded no spans pre-crash"
+        assert run.details["post_promote"], (
+            f"seed {seed} point {run.point}: promoted standby recorded no "
+            f"spans — heartbeat trace contexts stopped propagating"
+        )
+        # no orphans: every parent_id resolves to a recorded span (parents
+        # are recorded in `finally` blocks client-side precisely so a crash
+        # between child and parent recording cannot strand the child)
+        ids = {s["span_id"] for s in spans}
+        orphans = [
+            s for s in spans
+            if s.get("parent_id") is not None and s["parent_id"] not in ids
+        ]
+        assert not orphans, (
+            f"seed {seed} point {run.point}: {len(orphans)} orphaned spans, "
+            f"e.g. {orphans[0]}"
+        )

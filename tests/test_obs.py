@@ -1,0 +1,282 @@
+"""Observability layer (`repro.obs`): registry, tracing, profiling,
+dump RPCs, dashboard, Chrome export.
+
+The acceptance-critical test is
+``TestStallAttribution::test_names_artificially_slowed_op`` — the per-op
+profiler must finger the op that was deliberately slowed, both offline
+(ExecContext stats) and through a live worker's ``metrics_dump``.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import start_service
+from repro.core.transport import Stub
+from repro.data import Dataset
+from repro.data.iterators import ExecContext
+from repro.obs import (
+    MetricsRegistry,
+    TraceContext,
+    Tracer,
+    attribute_stalls,
+    export_chrome_trace,
+    merge_profiles,
+    profile_ops,
+    to_chrome,
+)
+from repro.obs import export as obs_export
+from repro.obs import top as obs_top
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_counter_exact_under_contention(self):
+        reg = MetricsRegistry()
+        c = reg.counter("hits", "test counter")
+        threads = [
+            threading.Thread(target=lambda: [c.add(1) for _ in range(1000)])
+            for _ in range(8)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value == 8000
+
+    def test_labeled_series_are_distinct(self):
+        reg = MetricsRegistry()
+        fam = reg.counter("rpcs", "by method")
+        fam.labels(method="a").inc()
+        fam.labels(method="a").inc()
+        fam.labels(method="b").inc()
+        snap = reg.snapshot()["rpcs"]
+        assert snap["series"]["method=a"] == 2
+        assert snap["series"]["method=b"] == 1
+        # the default (unlabeled) series is independent of labeled ones
+        assert snap["value"] == 0
+
+    def test_kind_collision_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x", "first registration wins the kind")
+        with pytest.raises(TypeError):
+            reg.gauge("x", "same name, different kind")
+
+    def test_gauge_set_and_histogram_stats(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("depth", "gauge")
+        g.set(0.5)
+        assert g.value == 0.5
+        h = reg.histogram("lat", "histogram")
+        for v in (0.001, 0.002, 0.004):
+            h.observe(v)
+        snap = reg.snapshot()["lat"]
+        assert snap["value"]["count"] == 3
+        assert abs(snap["value"]["sum"] - 0.007) < 1e-9
+        assert abs(snap["value"]["mean"] - 0.007 / 3) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+class TestTracer:
+    def test_rate_zero_mints_no_trace(self):
+        assert Tracer(sample_rate=0.0).start_trace() is None
+
+    def test_context_wire_roundtrip_and_child(self):
+        ctx = Tracer(sample_rate=1.0).start_trace()
+        assert ctx is not None
+        back = TraceContext.from_wire(ctx.to_wire())
+        assert back.trace_id == ctx.trace_id and back.span_id == ctx.span_id
+        child = ctx.child()
+        assert child.trace_id == ctx.trace_id
+        assert child.span_id != ctx.span_id
+        assert TraceContext.from_wire(None) is None
+
+    def test_ring_drops_oldest_and_counts(self):
+        tr = Tracer(process="t", sample_rate=1.0, capacity=16)  # 16 = floor
+        ctx = tr.start_trace()
+        for i in range(20):
+            tr.record(f"s{i}", ctx.child(), 0.0, 0.001)
+        assert len(tr) == 16
+        assert tr.dropped == 4
+        names = [s["name"] for s in tr.drain()]
+        assert names == [f"s{i}" for i in range(4, 20)]  # oldest dropped
+        assert len(tr) == 0
+
+    def test_span_contextmanager_noop_without_ctx(self):
+        tr = Tracer(sample_rate=1.0)
+        with tr.span("nothing", None):
+            pass
+        assert len(tr) == 0
+        ctx = tr.start_trace()
+        with tr.span("something", ctx, k="v"):
+            pass
+        (span,) = tr.drain()
+        assert span["name"] == "something"
+        assert span["parent_id"] == ctx.span_id
+        assert span["attrs"]["k"] == "v"
+
+
+# ---------------------------------------------------------------------------
+# profiling + stall attribution
+# ---------------------------------------------------------------------------
+def _slow(x):
+    time.sleep(0.003)
+    return x
+
+
+def _fast(x):
+    return x + 1
+
+
+class TestStallAttribution:
+    def test_names_artificially_slowed_op(self):
+        # acceptance criterion: one op is deliberately slowed; the report
+        # must name IT, not the cheap map around it or the batch stage
+        ctx = ExecContext()
+        it = (
+            Dataset.range(48).map(_fast).map(_slow).batch(4)
+        ).iterator(ctx=ctx, optimize=False)
+        for _ in it:
+            pass
+        report = attribute_stalls(ctx.stats)
+        assert "_slow" in report["bottleneck"], report["bottleneck"]
+        rows = {r["name"]: r for r in report["ops"]}
+        slow_row = rows[report["bottleneck"]]
+        assert slow_row["busy_share"] > 0.5
+        assert slow_row["cpu_s"] < slow_row["wall_s"] * 0.5  # sleep, not CPU
+
+    def test_merge_profiles_sums_shards(self):
+        ctxs = []
+        for _ in range(2):
+            ctx = ExecContext()
+            for _ in (Dataset.range(10).map(_fast)).iterator(ctx=ctx, optimize=False):
+                pass
+            ctxs.append(ctx)
+        merged = merge_profiles(profile_ops(c.stats) for c in ctxs)
+        by_name = {r["name"]: r for r in merged}
+        assert by_name["map(test_obs:_fast)"]["elements"] == 20
+
+    def test_unmeasured_ops_are_not_bottlenecks(self):
+        assert attribute_stalls({})["bottleneck"] is None
+        report = attribute_stalls(
+            [{"index": 0, "name": "range", "elements": 0, "wall_s": 0.0,
+              "cpu_s": 0.0, "mean_cost_s": 0.0, "parallelism": 1,
+              "buffer_occupancy": 0.0}]
+        )
+        assert report["bottleneck"] is None
+
+
+# ---------------------------------------------------------------------------
+# dump RPCs + dashboard + export over a live deployment
+# ---------------------------------------------------------------------------
+class TestLiveObservability:
+    def _consume_traced(self, svc, n=96):
+        dds = (
+            Dataset.range(n)
+            .map(_slow)
+            .batch(4)
+            .distribute(
+                service=svc, processing_mode="dynamic", trace_sample=1.0
+            )
+        )
+        sess = dds.session()
+        consumed = sum(1 for _ in sess)
+        assert consumed > 0
+        return sess
+
+    def test_metrics_dump_shapes_and_bottleneck(self, service_factory):
+        svc = service_factory(num_workers=2)
+        self._consume_traced(svc)
+        dump = svc.orchestrator.metrics_dump()
+        assert dump["process"] == "dispatcher"
+        assert "dispatcher_rpcs_total" in dump["registry"]
+        assert len(dump["workers"]) == 2
+        named = 0
+        for addr in dump["workers"].values():
+            wd = Stub(addr).call("metrics_dump")
+            assert wd["registry"]["worker_batches_served"]["value"] >= 0
+            b = wd["stall_report"]["bottleneck"]
+            if b is not None:
+                assert "_slow" in b, b
+                named += 1
+        # dynamic sharding may starve one worker, but not both
+        assert named >= 1
+
+    def test_error_counters_reach_dispatcher_dump(self, service_factory):
+        svc = service_factory(num_workers=1)
+        svc.orchestrator._note_error("unit-test probe", RuntimeError("boom"))
+        dump = svc.orchestrator.metrics_dump()
+        fam = dump["registry"]["orchestrator_errors_total"]
+        assert any("unit-test probe" in k for k in fam["series"])
+
+    def test_top_scrape_and_render(self, service_factory):
+        svc = service_factory(num_workers=2)
+        self._consume_traced(svc)
+        snap = obs_top.scrape(svc.dispatcher_address)
+        assert not snap["errors"]
+        assert len(snap["workers"]) == 2
+        first = obs_top.render(snap)
+        assert "JOB" in first and "WORKER" in first
+        again = obs_top.render(obs_top.scrape(svc.dispatcher_address), prev=snap)
+        assert "BATCH/S" in again
+        assert obs_top.main(["--dispatcher", svc.dispatcher_address, "--once"]) == 0
+
+    def test_trace_export_single_trace_no_orphans(self, service_factory, tmp_path):
+        svc = service_factory(num_workers=2)
+        sess = self._consume_traced(svc)
+        spans = obs_export.collect(svc.dispatcher_address)
+        spans += sess.tracer.drain()
+        assert spans
+        assert {s["trace_id"] for s in spans} == {sess.trace_root.trace_id}
+        ids = {s["span_id"] for s in spans}
+        orphans = [
+            s for s in spans
+            if s.get("parent_id") is not None and s["parent_id"] not in ids
+        ]
+        assert not orphans, orphans[:3]
+        # processes on both sides of the wire emitted spans
+        procs = {s["process"] for s in spans}
+        assert any(p.startswith("worker") for p in procs)
+        assert any(p.startswith("client") for p in procs)
+        out = tmp_path / "trace.json"
+        n = export_chrome_trace(str(out), spans)
+        doc = json.loads(out.read_text())
+        events = doc["traceEvents"]
+        assert n == len(spans)
+        assert sum(1 for e in events if e.get("ph") == "X") == n
+        meta = [e for e in events if e.get("ph") == "M"]
+        assert {m["args"]["name"] for m in meta} >= procs
+
+    def test_chrome_event_fields_are_microseconds(self):
+        spans = [
+            {"name": "s", "trace_id": "t", "span_id": "a", "parent_id": None,
+             "process": "client:x", "start_unix": 2.0, "duration_s": 0.5,
+             "attrs": {}},
+        ]
+        (meta, ev) = to_chrome(spans)[0:2]
+        assert meta["ph"] == "M"
+        assert ev["ph"] == "X"
+        assert ev["ts"] == 2.0 * 1e6 and ev["dur"] == 0.5 * 1e6
+
+    def test_unsampled_session_sends_no_trace_and_costs_nothing(
+        self, service_factory
+    ):
+        svc = service_factory(num_workers=1)
+        dds = (
+            Dataset.range(16)
+            .batch(4)
+            .distribute(service=svc, processing_mode="dynamic")
+        )
+        sess = dds.session()
+        for _ in sess:
+            pass
+        assert sess.trace_root is None
+        assert len(sess.tracer) == 0
+        # no process buffered spans for the untraced job
+        assert obs_export.collect(svc.dispatcher_address) == []
