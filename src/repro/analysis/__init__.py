@@ -1,6 +1,6 @@
 """repro.analysis — repo-specific static analysis for the control plane.
 
-Three AST passes over ``src/repro/`` (see the sibling modules for the rule
+Six AST passes over ``src/repro/`` (see the sibling modules for the rule
 details):
 
 1. ``locks``        — lock discipline: unlocked writes to guarded
@@ -13,24 +13,44 @@ details):
 3. ``rpc_pass``     — RPC surface conformance: ``rpc_*`` handlers need a
                       ``protocol.py`` doc entry, a client stub call site,
                       and dict payloads (R001/R002/R003).
+4. ``dist_pass``    — distributed blocking over the inter-process call
+                      graph: RPC under a local lock, synchronous RPC
+                      cycles across process roles, retry-critical RPCs
+                      with no timeout/backoff (D001/D002/D003).
+5. ``replay_pass``  — replay determinism: no clock reads, unseeded
+                      randomness, set-iteration order, or unstable types
+                      on the journal replay/append paths
+                      (P001/P002/P003/P004).
+6. ``thread_pass``  — thread lifecycle: threads neither daemon nor
+                      joined, spawns inside rpc handlers without an owner
+                      (T001/T002).
+
+Passes 4-6 share the inter-process call-graph layer in ``model.py``
+(:class:`~.model.RpcGraph`): stub ``.call("m")`` sites resolved to
+``rpc_m`` handlers across ``core/client.py``, ``core/worker.py``,
+``core/dispatcher/*``, ``core/service.py`` and ``core/replica.py``, each
+end tagged with its process role.
 
 Run it as ``python -m repro.analysis --strict`` (the CI gate): exit 1 on
 any finding that is neither in ``analysis/baseline.txt`` nor suppressed
-inline with ``# analysis: allow(CODE)``.  The dynamic chaos harness
+inline with ``# analysis: allow(CODE)`` — and on any *stale* baseline
+entry (a line no current finding matches).  The dynamic chaos harness
 (``tests/chaos.py``) samples the same invariants at runtime; this package
 pins them at review time.
 """
 from __future__ import annotations
 
+import time as _time
 from pathlib import Path
-from typing import List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from . import journal_pass, locks, rpc_pass
+from . import dist_pass, journal_pass, locks, replay_pass, rpc_pass, thread_pass
 from .findings import (
     Finding,
     SuppressionIndex,
     load_baseline,
     split_new,
+    stale_entries,
     write_baseline,
 )
 from .model import Project, build_project
@@ -44,7 +64,14 @@ __all__ = [
     "run_analysis",
 ]
 
-PASSES = (locks.run, journal_pass.run, rpc_pass.run)
+PASSES = (
+    ("locks", locks.run),
+    ("journal", journal_pass.run),
+    ("rpc", rpc_pass.run),
+    ("dist", dist_pass.run),
+    ("replay", replay_pass.run),
+    ("thread", thread_pass.run),
+)
 
 
 def default_root() -> Path:
@@ -56,12 +83,26 @@ def default_baseline() -> Path:
     return Path(__file__).resolve().parent / "baseline.txt"
 
 
-def run_analysis(root: Path) -> List[Finding]:
-    """All passes over ``root``; findings sorted by (file, line, code)."""
+def run_analysis(
+    root: Path, timings: Optional[Dict[str, float]] = None
+) -> List[Finding]:
+    """All passes over ``root``; findings sorted by (file, line, code).
+
+    With ``timings``, per-pass wall seconds are recorded into it under the
+    pass name (plus ``"parse"`` for the shared model build) — the lint
+    driver prints them so a slow pass is visible before it erodes the
+    <10s CI budget.
+    """
+    t0 = _time.perf_counter()
     project = build_project(root)
+    if timings is not None:
+        timings["parse"] = _time.perf_counter() - t0
     findings: List[Finding] = []
-    for p in PASSES:
+    for name, p in PASSES:
+        t0 = _time.perf_counter()
         findings.extend(p(project))
+        if timings is not None:
+            timings[name] = _time.perf_counter() - t0
     return sorted(set(findings), key=lambda f: (f.file, f.line, f.code, f.message))
 
 
@@ -75,3 +116,13 @@ def analyze(
     suppressions = SuppressionIndex.scan(root, files)
     baseline: Set[str] = load_baseline(baseline_path or default_baseline())
     return split_new(findings, baseline, suppressions)
+
+
+def stale_baseline(
+    root: Optional[Path] = None, baseline_path: Optional[Path] = None
+) -> List[str]:
+    """Baseline entries matching no current finding (see ``stale_entries``)."""
+    root = (root or default_root()).resolve()
+    findings = run_analysis(root)
+    baseline = load_baseline(baseline_path or default_baseline())
+    return stale_entries(baseline, findings)

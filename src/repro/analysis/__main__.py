@@ -2,7 +2,9 @@
 
     python -m repro.analysis                 # report all findings
     python -m repro.analysis --strict        # CI gate: exit 1 on NEW findings
-    python -m repro.analysis --write-baseline
+                                             # or STALE baseline entries
+    python -m repro.analysis --update-baseline
+    python -m repro.analysis --timings       # per-pass wall seconds (stderr)
     python -m repro.analysis --root PATH     # analyze a different tree
                                              # (used by the seeded-divergence test)
 """
@@ -11,9 +13,16 @@ from __future__ import annotations
 import argparse
 import sys
 from pathlib import Path
+from typing import Dict
 
-from . import analyze, default_baseline, default_root, run_analysis
-from .findings import SuppressionIndex, write_baseline
+from . import default_baseline, default_root, run_analysis
+from .findings import (
+    SuppressionIndex,
+    load_baseline,
+    split_new,
+    stale_entries,
+    write_baseline,
+)
 
 
 def main(argv=None) -> int:
@@ -23,33 +32,52 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", type=Path, default=None,
                     help="baseline file (default: analysis/baseline.txt)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 if any finding is not baselined/suppressed")
-    ap.add_argument("--write-baseline", action="store_true",
-                    help="accept all current findings into the baseline")
+                    help="exit 1 on findings not baselined/suppressed, and "
+                         "on stale baseline entries")
+    ap.add_argument("--write-baseline", "--update-baseline",
+                    dest="write_baseline", action="store_true",
+                    help="accept all current findings into the baseline "
+                         "(also drops stale entries)")
     ap.add_argument("--show-accepted", action="store_true",
                     help="also print baselined/suppressed findings")
+    ap.add_argument("--timings", action="store_true",
+                    help="print per-pass wall time to stderr")
     args = ap.parse_args(argv)
 
     root = (args.root or default_root()).resolve()
     baseline_path = args.baseline or default_baseline()
 
+    timings: Dict[str, float] = {}
+    findings = run_analysis(root, timings if args.timings else None)
+    suppressions = SuppressionIndex.scan(root, sorted(root.rglob("*.py")))
+
     if args.write_baseline:
-        findings = run_analysis(root)
-        suppressions = SuppressionIndex.scan(root, sorted(root.rglob("*.py")))
         kept = [f for f in findings if not suppressions.allows(f)]
         write_baseline(baseline_path, kept)
         print(f"wrote {len(kept)} finding(s) to {baseline_path}")
         return 0
 
-    new, accepted = analyze(root, baseline_path)
+    baseline = load_baseline(baseline_path)
+    new, accepted = split_new(findings, baseline, suppressions)
+    stale = stale_entries(baseline, findings)
     for f in new:
         print(f.render())
+    for key in stale:
+        print(f"stale baseline entry (no finding matches): {key}")
     if args.show_accepted:
         for f in accepted:
             print(f"[accepted] {f.render()}")
-    summary = f"{len(new)} new finding(s), {len(accepted)} accepted (baseline/inline)"
+    if args.timings:
+        total = sum(timings.values())
+        per = "  ".join(f"{name}={dt * 1000:.0f}ms" for name, dt in timings.items())
+        print(f"pass timings: {per}  total={total * 1000:.0f}ms", file=sys.stderr)
+    summary = (
+        f"{len(new)} new finding(s), {len(accepted)} accepted "
+        f"(baseline/inline), {len(stale)} stale baseline entr"
+        f"{'y' if len(stale) == 1 else 'ies'}"
+    )
     print(summary, file=sys.stderr)
-    if args.strict and new:
+    if args.strict and (new or stale):
         return 1
     return 0
 

@@ -1,0 +1,197 @@
+"""Pass 4 — distributed blocking (D001, D002, D003).
+
+The single-process lock rules (``locks.py``) stop at the process edge; this
+pass follows the RPC through it using the inter-process call graph
+(:class:`~.model.RpcGraph`): every stub ``.call("m", ...)`` site is
+resolved to the ``rpc_m`` handler(s) and both ends carry a process role.
+
+* **D001** — a blocking RPC issued *while holding a local lock*: the
+  distributed generalization of L003.  A dispatcher handler that RPCs a
+  worker under ``self._lock`` serializes the whole control plane behind
+  one remote process's latency — and if the callee (transitively) calls
+  back, it deadlocks the fleet rather than one thread.
+* **D002** — a synchronous RPC cycle across process roles reachable from a
+  single handler (dispatcher→worker→dispatcher): each hop holds a server
+  thread, so the cycle deadlocks once the pools are exhausted — and under
+  any lock it deadlocks immediately.
+* **D003** — an RPC on a *retry-critical path* — the replication tail
+  (``journal_fetch``), heartbeats, dynamic shard fetch (``get_shard``) —
+  issued in a loop with neither an explicit stub ``timeout=`` nor a
+  ``transport.Backoff`` policy.  These loops are exactly the paths that
+  must stay live through a hung peer: failover latency is bounded by the
+  RPC deadline, not the transport's (30s) default.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .locks import GroupAnalysis
+from .model import (
+    CallSite,
+    FunctionInfo,
+    Project,
+    RpcGraph,
+    is_stub_call,
+    process_role,
+)
+
+# Method-name predicate for D003's retry-critical RPC surface.
+_RETRY_CRITICAL_EXACT = {"journal_fetch", "get_shard"}
+_RETRY_CRITICAL_FRAGMENT = "heartbeat"
+
+
+def _retry_critical(method: str) -> bool:
+    return method in _RETRY_CRITICAL_EXACT or _RETRY_CRITICAL_FRAGMENT in method
+
+
+def _check_rpc_under_lock(
+    project: Project, graph: RpcGraph, findings: List[Finding]
+) -> None:
+    for group in project.class_groups():
+        if not any(c.lock_attrs for c in group):
+            continue
+        ga = GroupAnalysis(project, group)
+        for f in ga.functions:
+            if f.name == "__init__":
+                continue
+            for site in f.calls:
+                method = is_stub_call(site)
+                if method is None or not graph.handlers_for(method):
+                    continue
+                held = ga.effective(f, site.with_items)
+                if not held:
+                    continue
+                lock = sorted(held)[0]
+                owner = ga.lock_owner.get(lock, f.class_name or "?")
+                roles = ", ".join(
+                    sorted({process_role(h.module) or "?"
+                            for h in graph.handlers_for(method)})
+                )
+                findings.append(
+                    Finding(
+                        file=f.module, line=site.line, code="D001",
+                        message=(
+                            f"RPC '{method}' to {roles} process while "
+                            f"holding '{owner}.{lock}' (wedges the fleet "
+                            "on a slow/hung peer)"
+                        ),
+                    )
+                )
+
+
+def _check_rpc_cycles(graph: RpcGraph, findings: List[Finding]) -> None:
+    """Cycles in the combined call graph containing >=1 cross-process edge.
+
+    The search starts from rpc_* handlers only: a cycle that no handler
+    can reach cannot be entered by a remote caller.
+    """
+    adj = graph.call_graph()
+    by_id: Dict[int, FunctionInfo] = {}
+    for fs in graph.handlers.values():
+        for f in fs:
+            by_id[id(f)] = f
+
+    reported: Set[frozenset] = set()
+    GRAY, BLACK = 1, 2
+    color: Dict[int, int] = {}
+
+    def describe(f: FunctionInfo) -> str:
+        role = process_role(f.module) or "?"
+        name = f.qualname if f.class_name else f.name
+        return f"{role}:{name}"
+
+    def dfs(f: FunctionInfo, path: List[Tuple[FunctionInfo, Optional[object]]]):
+        color[id(f)] = GRAY
+        for callee, edge in adj.get(id(f), ()):  # edge: RpcEdge or None
+            state = color.get(id(callee))
+            if state == GRAY:
+                # back edge: extract the cycle from the path
+                idx = next(
+                    (i for i, (g, _) in enumerate(path) if g is callee), None
+                )
+                if idx is None:
+                    continue
+                # edges are stored with the node they point INTO; the
+                # closing (callee, edge) tuple carries the back edge
+                cycle = path[idx:] + [(callee, edge)]
+                cross = [e for _, e in cycle[1:] if e is not None]
+                if not cross:
+                    continue  # plain recursion, not a distributed cycle
+                canon = frozenset(id(g) for g, _ in cycle)
+                if canon in reported:
+                    continue
+                reported.add(canon)
+                first = cross[0]
+                chain = " -> ".join(describe(g) for g, _ in cycle)
+                findings.append(
+                    Finding(
+                        file=first.caller.module, line=first.site.line,
+                        code="D002",
+                        message=(
+                            f"synchronous RPC cycle across processes: {chain}"
+                        ),
+                    )
+                )
+            elif state != BLACK:
+                dfs(callee, path + [(callee, edge)])
+        color[id(f)] = BLACK
+
+    for hid in sorted(by_id, key=lambda i: (by_id[i].module, by_id[i].line)):
+        if color.get(hid) is None:
+            dfs(by_id[hid], [(by_id[hid], None)])
+
+
+def _has_backoff_policy(f: FunctionInfo) -> bool:
+    """The function drives a transport.Backoff (ctor or .next_delay())."""
+    for c in f.calls:
+        last = c.name.rsplit(".", 1)[-1]
+        if last in ("Backoff", "next_delay"):
+            return True
+    return False
+
+
+def _stub_has_timeout(project: Project, f: FunctionInfo, site: CallSite) -> bool:
+    """The receiver of ``<recv>.call(...)`` was built as Stub(..., timeout=)."""
+    recv = site.name.rsplit(".", 1)[0]
+    parts = recv.split(".")
+    if parts and parts[0] in f.local_aliases:
+        parts = f.local_aliases[parts[0]].split(".") + parts[1:]
+    if len(parts) >= 2 and parts[0] == "self":
+        return parts[-1] in project.stub_timeout_attrs
+    if len(parts) == 1:
+        return parts[0] in f.stub_timeout_locals
+    return False
+
+
+def _check_retry_critical(
+    project: Project, graph: RpcGraph, findings: List[Finding]
+) -> None:
+    for f in project.all_functions():
+        for site in f.calls:
+            method = is_stub_call(site)
+            if method is None or not _retry_critical(method):
+                continue
+            if site.loop_depth == 0:
+                continue  # one-shot call; caller's own deadline governs
+            if _has_backoff_policy(f) or _stub_has_timeout(project, f, site):
+                continue
+            findings.append(
+                Finding(
+                    file=f.module, line=site.line, code="D003",
+                    message=(
+                        f"retry-critical RPC '{method}' in a loop with no "
+                        "stub timeout and no transport.Backoff (a hung "
+                        "peer stalls this path for the transport default)"
+                    ),
+                )
+            )
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    graph = RpcGraph(project)
+    _check_rpc_under_lock(project, graph, findings)
+    _check_rpc_cycles(graph, findings)
+    _check_retry_critical(project, graph, findings)
+    return findings

@@ -9,7 +9,10 @@ while still failing on new ones:
   exceptions and put the justification in the same comment.
 * **Baseline** — ``analysis/baseline.txt`` holds accepted findings as
   ``<relpath> <CODE> <message>`` (line numbers omitted so the baseline
-  survives unrelated edits).  ``--write-baseline`` regenerates it.
+  survives unrelated edits).  ``--write-baseline`` / ``--update-baseline``
+  regenerates it.  A baseline line no NEW finding matches anymore is
+  *stale* — ``--strict`` fails on it too, so accepted-finding drift can't
+  accumulate silently (:func:`stale_entries`).
 
 Codes:
 
@@ -23,6 +26,16 @@ J003   mutation of journaled dispatcher state outside the replay/append path
 R001   rpc_* handler not documented in protocol.py
 R002   rpc_* handler with no client stub call site
 R003   rpc_* handler returning a non-dict / non-serializable payload
+D001   blocking RPC to another process while holding a local lock
+D002   synchronous RPC cycle across process roles
+D003   retry-critical RPC (replication tail / heartbeat / shard fetch)
+       with no timeout and no transport.Backoff policy
+P001   wall-clock / perf_counter read on the journal replay path
+P002   unseeded randomness (uuid4, os.urandom, random.*) on the replay path
+P003   set-iteration order or thread identity feeding a journaled payload
+P004   non-JSON-stable type (set) inside a journal append payload
+T001   thread neither daemon=True nor joined on a shutdown path
+T002   thread spawned inside an rpc_* handler without a registered owner
 =====  ====================================================================
 """
 from __future__ import annotations
@@ -36,6 +49,9 @@ ALL_CODES = (
     "L001", "L002", "L003",
     "J001", "J002", "J003",
     "R001", "R002", "R003",
+    "D001", "D002", "D003",
+    "P001", "P002", "P003", "P004",
+    "T001", "T002",
 )
 
 _ALLOW_RE = re.compile(r"analysis:\s*allow\(([A-Z0-9,\s]+)\)")
@@ -108,10 +124,22 @@ def write_baseline(path: Path, findings: List[Finding]) -> None:
     header = (
         "# repro.analysis baseline — accepted findings, one per line as\n"
         "# '<relpath> <CODE> <message>' (no line numbers; see findings.py).\n"
-        "# Regenerate with: python -m repro.analysis --write-baseline\n"
-        "# Shrink it when you fix an entry; --strict fails on NEW findings only.\n"
+        "# Regenerate with: python -m repro.analysis --update-baseline\n"
+        "# Shrink it when you fix an entry; --strict fails on NEW findings\n"
+        "# and on STALE entries (lines matching no current finding).\n"
     )
     path.write_text(header + "\n".join(keys) + ("\n" if keys else ""))
+
+
+def stale_entries(baseline: Set[str], findings: List[Finding]) -> List[str]:
+    """Baseline lines that no current finding matches (sorted).
+
+    A stale entry means the accepted finding was fixed (or its message
+    drifted) without shrinking the baseline; ``--strict`` fails on it so
+    the accepted set always mirrors reality.
+    """
+    live = {f.baseline_key() for f in findings}
+    return sorted(baseline - live)
 
 
 def split_new(

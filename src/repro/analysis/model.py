@@ -14,6 +14,15 @@ The model is intentionally syntactic — no type inference beyond a small
 ``attr name -> class`` registry built from ``x.<attr> = ClassName(...)``
 assignments.  The passes consume it in a resolve phase where the merged
 class groups are known.
+
+On top of the per-module extraction sits the **inter-process call graph**
+(:class:`RpcGraph`): every stub call site — a call whose callee ends in
+``call`` with a string first argument, e.g. ``stub.call("get_shard", ...)``
+— is resolved to the ``rpc_get_shard`` handler(s) defined anywhere in the
+project, and both ends are tagged with a *process role* inferred from the
+module path (client / worker / dispatcher / standby / orchestrator /
+tooling).  The D/T pass families (distributed blocking, rpc cycles,
+thread lifecycle in handlers) are consumers.
 """
 from __future__ import annotations
 
@@ -75,6 +84,20 @@ class CallSite:
     str_arg0: Optional[str] = None  # first positional arg if a str constant
     const_kwargs: Dict[str, object] = field(default_factory=dict)
     func: "FunctionInfo" = field(repr=False, default=None)
+    loop_depth: int = 0  # number of enclosing for/while loops
+    # lines of enclosing ``for`` loops whose iterable is provably a set
+    # (set literal/comprehension, ``set(...)``, or a local bound to one)
+    set_loops: Tuple[int, ...] = ()
+
+
+@dataclass
+class ThreadCtor:
+    """A ``threading.Thread(...)`` construction and where it was stored."""
+
+    target: Optional[str]  # dotted store target (``self._thread``, ``t``), or None
+    line: int
+    daemon: Optional[object]  # const value of ``daemon=`` kwarg, None if absent
+    func: "FunctionInfo" = field(repr=False, default=None)
 
 
 @dataclass
@@ -100,6 +123,11 @@ class FunctionInfo:
     # ``mgr = job.shard_mgr`` — lets the lock-order pass resolve
     # ``with mgr._lock:`` one alias hop deep.
     local_aliases: Dict[str, str] = field(default_factory=dict)
+    # exception type names (last dotted segment) this function catches
+    handled_exceptions: Set[str] = field(default_factory=set)
+    thread_ctors: List[ThreadCtor] = field(default_factory=list)
+    # local names bound to ``Stub(..., timeout=...)`` in this function
+    stub_timeout_locals: Set[str] = field(default_factory=set)
 
 
 @dataclass
@@ -126,6 +154,9 @@ class Project:
     modules: Dict[str, ModuleInfo] = field(default_factory=dict)
     # attr name -> class names assigned via ``<x>.<attr> = ClassName(...)``
     attr_classes: Dict[str, Set[str]] = field(default_factory=dict)
+    # attrs assigned a ``Stub(..., timeout=...)`` — stubs with an explicit
+    # RPC deadline (the D003 discipline check consults this)
+    stub_timeout_attrs: Set[str] = field(default_factory=set)
 
     def all_classes(self) -> List[ClassInfo]:
         return [c for m in self.modules.values() for c in m.classes.values()]
@@ -184,6 +215,9 @@ class _FunctionWalker(ast.NodeVisitor):
         self.info = info
         self.collector = collector
         self.with_stack: List[str] = []
+        # (line, iterable_is_a_set) per enclosing loop
+        self.loop_stack: List[Tuple[int, bool]] = []
+        self.set_locals: Set[str] = set()  # locals bound to a set expression
 
     # -- scope boundaries --------------------------------------------------
     def _nested_function(self, node) -> None:
@@ -224,6 +258,47 @@ class _FunctionWalker(ast.NodeVisitor):
         for stmt in node.body:
             self.visit(stmt)
         del self.with_stack[len(self.with_stack) - len(items):]
+
+    # -- loops / exception handlers ---------------------------------------
+    def _is_set_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Name) and node.id in self.set_locals:
+            return True
+        if isinstance(node, ast.Call):
+            fn = dotted_name(node.func)
+            if fn in ("set", "frozenset"):
+                return True
+        return False
+
+    def _loop(self, node, is_set: bool) -> None:
+        self.loop_stack.append((node.lineno, is_set))
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_stack.pop()
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_For(self, node: ast.For) -> None:
+        self.visit(node.iter)
+        self._loop(node, self._is_set_expr(node.iter))
+
+    def visit_While(self, node: ast.While) -> None:
+        self.visit(node.test)
+        self._loop(node, False)
+
+    def visit_Try(self, node: ast.Try) -> None:
+        for h in node.handlers:
+            types: List[ast.AST] = []
+            if isinstance(h.type, ast.Tuple):
+                types = list(h.type.elts)
+            elif h.type is not None:
+                types = [h.type]
+            for t in types:
+                name = dotted_name(t)
+                if name:
+                    self.info.handled_exceptions.add(name.rsplit(".", 1)[-1])
+        self.generic_visit(node)
 
     def _record_write(self, target: ast.AST, augmented: bool) -> None:
         # Render the full store path, seeing through subscripts:
@@ -277,7 +352,41 @@ class _FunctionWalker(ast.NodeVisitor):
             chain = dotted_name(node.value)
             if chain:
                 self.info.local_aliases[node.targets[0].id] = chain
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if self._is_set_expr(node.value):
+                self.set_locals.add(name)
+            else:
+                self.set_locals.discard(name)
+        self._register_ctor_facts(node)
         self.visit(node.value)
+
+    def _register_ctor_facts(self, node: ast.Assign) -> None:
+        """Thread constructions and timeout'd stubs, with their store target."""
+        if not isinstance(node.value, ast.Call):
+            return
+        ctor = dotted_name(node.value.func) or ""
+        last = ctor.rsplit(".", 1)[-1]
+        target = node.targets[0] if len(node.targets) == 1 else None
+        target_chain = dotted_name(target) if target is not None else None
+        if last == "Thread":
+            daemon = None
+            for kw in node.value.keywords:
+                if kw.arg == "daemon" and isinstance(kw.value, ast.Constant):
+                    daemon = kw.value.value
+            self.info.thread_ctors.append(
+                ThreadCtor(
+                    target=target_chain, line=node.value.lineno,
+                    daemon=daemon, func=self.info,
+                )
+            )
+        elif last.endswith("Stub") and any(
+            kw.arg == "timeout" for kw in node.value.keywords
+        ):
+            if isinstance(target, ast.Attribute):
+                self.collector.project.stub_timeout_attrs.add(target.attr)
+            elif isinstance(target, ast.Name):
+                self.info.stub_timeout_locals.add(target.id)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
         self._record_write(node.target, augmented=True)
@@ -311,6 +420,8 @@ class _FunctionWalker(ast.NodeVisitor):
                     with_items=tuple(self.with_stack),
                     str_arg0=str_arg0, const_kwargs=const_kwargs,
                     func=self.info,
+                    loop_depth=len(self.loop_stack),
+                    set_loops=tuple(l for l, is_set in self.loop_stack if is_set),
                 )
             )
         self.generic_visit(node)
@@ -403,6 +514,143 @@ class _ModuleCollector:
         for t in node.targets:
             if isinstance(t, ast.Attribute):
                 self.project.attr_classes.setdefault(t.attr, set()).add(cls_name)
+
+
+# ---------------------------------------------------------------------------
+# Inter-process call graph
+# ---------------------------------------------------------------------------
+# Module-path fragments -> process role.  First match wins; checked against
+# the file name first, then every path component.  Generic enough to
+# classify both the live tree (core/client.py, core/dispatcher/*, ...) and
+# the analysis fixtures (client.py / worker.py / dispatcher.py).
+_ROLE_PATTERNS: Tuple[Tuple[str, str], ...] = (
+    ("replica", "standby"),
+    ("standby", "standby"),
+    ("worker", "worker"),
+    ("client", "client"),
+    ("feed", "client"),
+    ("service", "orchestrator"),
+    ("orchestrator", "orchestrator"),
+    ("dispatcher", "dispatcher"),
+    ("obs", "tooling"),
+)
+
+
+def process_role(relpath: str) -> Optional[str]:
+    """Process role of a module, inferred from its path; None if unknown."""
+    parts = relpath.split("/")
+    stem = parts[-1].rsplit(".", 1)[0]
+    for fragment, role in _ROLE_PATTERNS:
+        if fragment in stem:
+            return role
+    for fragment, role in _ROLE_PATTERNS:
+        if any(fragment in p for p in parts[:-1]):
+            return role
+    return None
+
+
+def is_stub_call(site: CallSite) -> Optional[str]:
+    """The RPC method name if ``site`` is a client-stub call, else None.
+
+    A stub call is any call whose callee's last segment ends in ``call``
+    (``stub.call(...)``, ``self._try_call(...)``) with a string-constant
+    first argument naming the method — the same predicate the R-pass uses.
+    """
+    if site.str_arg0 is None:
+        return None
+    if site.name.rsplit(".", 1)[-1].endswith("call"):
+        return site.str_arg0
+    return None
+
+
+@dataclass
+class RpcEdge:
+    """One resolved cross-process call: stub site -> rpc_<method> handlers."""
+
+    site: CallSite
+    method: str
+    caller: FunctionInfo
+    caller_role: Optional[str]
+    handlers: List[FunctionInfo]  # rpc_<method> definitions, any module
+
+    def handler_roles(self) -> List[str]:
+        return sorted({process_role(h.module) or "?" for h in self.handlers})
+
+
+class RpcGraph:
+    """Stub call sites resolved to ``rpc_*`` handlers across process roles.
+
+    Also exposes the combined function-level call graph (intra-process
+    ``self.<meth>()`` / module-level edges plus the cross-process stub
+    edges) that the D002 cycle search walks.
+    """
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.handlers: Dict[str, List[FunctionInfo]] = {}
+        for mod in project.modules.values():
+            for cls in mod.classes.values():
+                for f in cls.functions.values():
+                    if f.name.startswith("rpc_") and not f.is_nested:
+                        self.handlers.setdefault(f.name[len("rpc_"):], []).append(f)
+        for methods in self.handlers.values():
+            methods.sort(key=lambda f: (f.module, f.line))
+        self.edges: List[RpcEdge] = []
+        for f in project.all_functions():
+            for site in f.calls:
+                method = is_stub_call(site)
+                if method is None:
+                    continue
+                targets = self.handlers.get(method)
+                if not targets:
+                    continue
+                self.edges.append(
+                    RpcEdge(
+                        site=site, method=method, caller=f,
+                        caller_role=process_role(f.module), handlers=targets,
+                    )
+                )
+
+    def handlers_for(self, method: str) -> List[FunctionInfo]:
+        return self.handlers.get(method, [])
+
+    def call_graph(self) -> Dict[int, List[Tuple[FunctionInfo, Optional[RpcEdge]]]]:
+        """``id(func) -> [(callee, cross_edge_or_None)]``.
+
+        Intra-process edges: ``self.<meth>()`` within the caller's class
+        group and bare-name calls to module-level functions of the same
+        module.  Cross-process edges: the resolved stub calls.
+        """
+        group_methods: Dict[int, Dict[str, List[FunctionInfo]]] = {}
+        func_group: Dict[int, Dict[str, List[FunctionInfo]]] = {}
+        for gi, group in enumerate(self.project.class_groups()):
+            methods: Dict[str, List[FunctionInfo]] = {}
+            for c in group:
+                for f in c.functions.values():
+                    if not f.is_nested:
+                        methods.setdefault(f.name, []).append(f)
+            group_methods[gi] = methods
+            for fs in methods.values():
+                for f in fs:
+                    func_group[id(f)] = methods
+        adj: Dict[int, List[Tuple[FunctionInfo, Optional[RpcEdge]]]] = {}
+        for mod in self.project.modules.values():
+            all_funcs = list(mod.functions.values()) + [
+                f for c in mod.classes.values() for f in c.functions.values()
+            ]
+            for f in all_funcs:
+                out = adj.setdefault(id(f), [])
+                methods = func_group.get(id(f), {})
+                for site in f.calls:
+                    parts = site.name.split(".")
+                    if len(parts) == 2 and parts[0] == "self" and parts[1] in methods:
+                        out.extend((callee, None) for callee in methods[parts[1]])
+                    elif len(parts) == 1 and parts[0] in mod.functions:
+                        out.append((mod.functions[parts[0]], None))
+        for edge in self.edges:
+            out = adj.setdefault(id(edge.caller), [])
+            out.extend((h, edge) for h in edge.handlers)
+        return adj
 
 
 def build_project(root: Path, skip_dirs: Tuple[str, ...] = ()) -> Project:

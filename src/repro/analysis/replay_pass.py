@@ -1,0 +1,220 @@
+"""Pass 5 — replay determinism (P001, P002, P003, P004).
+
+The HA guarantee (PR 6) is that replaying the journal — on restart, or
+incrementally on a tailing hot standby — reproduces the primary's state
+*byte-identically*.  The chaos harness samples that dynamically; this pass
+pins the static precondition: everything reachable from the
+``apply*_event`` entry points, and everything that constructs journal
+payloads, must be deterministic.
+
+* **P001** — a wall-clock / ``perf_counter`` / ``monotonic`` read on the
+  replay path: replay happens at a different time than the original
+  apply, so any time-derived state diverges between primary and standby.
+* **P002** — unseeded randomness (``uuid4``, ``os.urandom``,
+  ``random.*``) on the replay path, including one hop through a
+  module-level helper (``new_id``): replayed ids would not match the
+  journaled ones.
+* **P003** — set-iteration order or thread identity feeding a journaled
+  payload: the journal *records* would differ between two runs of the
+  same primary (set order is hash-seed dependent), so a standby's mirror
+  and the primary's log could not be compared byte-for-byte.
+* **P004** — a provably non-JSON-stable value (a set) inside a
+  ``_journal.append`` payload: even when the content is right, its
+  serialization order is not.
+
+Scope: the dispatcher class group (the one defining ``apply*_event``), the
+same group the J-pass checks.  P001/P002 apply to the replay closure;
+P003/P004 to every function that appends journal records.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .findings import Finding
+from .journal_pass import (
+    _dispatcher_group,
+    _is_apply_func,
+    _journal_append_sites,
+    _replay_closure,
+)
+from .model import FunctionInfo, Project, dotted_name
+
+# Direct nondeterminism sources, by dotted-name suffix.
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+_WALL_CLOCK_SUFFIX = (".now", ".utcnow", ".today")
+_RANDOM_EXACT = {"os.urandom"}
+_RANDOM_SUFFIX = (".uuid1", ".uuid4", ".token_hex", ".token_bytes")
+_RANDOM_MODULE_FNS = {
+    "random", "uniform", "randint", "randrange", "choice", "choices",
+    "shuffle", "sample", "getrandbits", "random.random",
+}
+_THREAD_IDENTITY = {"threading.get_ident", "threading.current_thread"}
+
+
+def _is_wall_clock(name: str) -> bool:
+    return name in _WALL_CLOCK or name.endswith(_WALL_CLOCK_SUFFIX)
+
+
+def _is_random(name: str) -> bool:
+    if name in _RANDOM_EXACT or name.endswith(_RANDOM_SUFFIX):
+        return True
+    parts = name.split(".")
+    return len(parts) == 2 and parts[0] == "random" and parts[1] in _RANDOM_MODULE_FNS
+
+
+def _nondet_helpers(project: Project) -> Set[str]:
+    """Module-level functions that directly mint nondeterminism (one hop).
+
+    ``protocol.new_id`` wraps ``uuid.uuid4``; calls to it are as
+    nondeterministic as the uuid itself, so its bare name joins the
+    predicate.
+    """
+    out: Set[str] = set()
+    for mod in project.modules.values():
+        for f in mod.functions.values():
+            if any(_is_random(c.name) or _is_wall_clock(c.name) for c in f.calls):
+                out.add(f.name)
+    return out
+
+
+def _check_replay_closure(
+    project: Project, funcs: List[FunctionInfo], closure: Set[str],
+    findings: List[Finding],
+) -> None:
+    helpers = _nondet_helpers(project)
+    for f in funcs:
+        if f.is_nested or f.name not in closure:
+            continue
+        for c in f.calls:
+            if _is_wall_clock(c.name):
+                findings.append(
+                    Finding(
+                        file=f.module, line=c.line, code="P001",
+                        message=(
+                            f"clock read '{c.name}' in '{f.name}' on the "
+                            "replay path (diverges on standby/restart replay)"
+                        ),
+                    )
+                )
+            elif _is_random(c.name) or c.name in helpers:
+                findings.append(
+                    Finding(
+                        file=f.module, line=c.line, code="P002",
+                        message=(
+                            f"nondeterministic call '{c.name}' in '{f.name}' "
+                            "on the replay path (replayed value differs from "
+                            "the journaled one)"
+                        ),
+                    )
+                )
+
+
+def _check_payload_order(funcs: List[FunctionInfo], findings: List[Finding]) -> None:
+    """P003: journal appends whose order or content depends on set
+    iteration or thread identity."""
+    for f in funcs:
+        appends = _journal_append_sites(f)
+        if not appends:
+            continue
+        flagged_loops: Set[int] = set()
+        for site in appends:
+            for loop_line in site.set_loops:
+                if loop_line in flagged_loops:
+                    continue
+                flagged_loops.add(loop_line)
+                findings.append(
+                    Finding(
+                        file=f.module, line=loop_line, code="P003",
+                        message=(
+                            f"journal append of '{site.str_arg0 or '?'}' in "
+                            f"'{f.name}' inside a set-iteration loop (record "
+                            "order is hash-seed dependent; sort the set)"
+                        ),
+                    )
+                )
+        for c in f.calls:
+            if c.name in _THREAD_IDENTITY:
+                findings.append(
+                    Finding(
+                        file=f.module, line=c.line, code="P003",
+                        message=(
+                            f"thread identity '{c.name}' in journaling "
+                            f"function '{f.name}' (not stable across "
+                            "processes or replays)"
+                        ),
+                    )
+                )
+
+
+_PAYLOAD_CONSUMERS = {"sorted", "list", "tuple", "len", "sum", "min", "max"}
+
+
+def _check_payload_types(
+    project: Project, funcs: List[FunctionInfo], findings: List[Finding]
+) -> None:
+    """P004: set values inside append payload expressions (re-parses the
+    module to see the actual argument AST, like the J/R passes do)."""
+    by_module: Dict[str, List[FunctionInfo]] = {}
+    for f in funcs:
+        if _journal_append_sites(f):
+            by_module.setdefault(f.module, []).append(f)
+    for module, mod_funcs in sorted(by_module.items()):
+        path = project.root / module
+        try:
+            tree = ast.parse(path.read_text())
+        except (OSError, SyntaxError):
+            continue
+        append_lines = {
+            s.line: s.str_arg0
+            for f in mod_funcs
+            for s in _journal_append_sites(f)
+        }
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or node.lineno not in append_lines:
+                continue
+            name = dotted_name(node.func)
+            if not (name and name.rsplit(".", 1)[-1] == "append"):
+                continue
+            payload_exprs = list(node.args[1:]) + [
+                kw.value for kw in node.keywords if kw.arg != "sync"
+            ]
+            for expr in payload_exprs:
+                consumed: Set[int] = set()
+                for sub in ast.walk(expr):
+                    if isinstance(sub, ast.Call):
+                        fn = sub.func
+                        if isinstance(fn, ast.Name) and fn.id in _PAYLOAD_CONSUMERS:
+                            consumed.update(
+                                id(a) for a in sub.args
+                                if isinstance(a, (ast.Set, ast.SetComp))
+                            )
+                for sub in ast.walk(expr):
+                    if isinstance(sub, (ast.Set, ast.SetComp)) and id(sub) not in consumed:
+                        findings.append(
+                            Finding(
+                                file=module, line=node.lineno, code="P004",
+                                message=(
+                                    f"set inside the journal payload of "
+                                    f"'{append_lines[node.lineno] or '?'}' "
+                                    "(serialization order is not stable)"
+                                ),
+                            )
+                        )
+                        break
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    group = _dispatcher_group(project)
+    if not group:
+        return findings
+    funcs: List[FunctionInfo] = [f for c in group for f in c.functions.values()]
+    closure = _replay_closure(group)
+    _check_replay_closure(project, funcs, closure, findings)
+    _check_payload_order(funcs, findings)
+    _check_payload_types(project, funcs, findings)
+    return findings

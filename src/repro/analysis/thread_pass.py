@@ -1,0 +1,131 @@
+"""Pass 6 — thread lifecycle (T001, T002).
+
+The static counterpart of the test suite's ``threads_leaked`` conftest
+fixture: background threads must either be ``daemon=True`` (the process
+may exit under them) or be joined on some shutdown path — anything else
+outlives its owner and leaks.
+
+* **T001** — a ``threading.Thread(...)`` that is neither constructed with
+  a literal ``daemon=True`` nor ``.join()``-ed anywhere reachable: stored
+  on ``self``, the join may live in any method of the class group (the
+  ``close``/``stop`` convention); a local thread must be joined in the
+  same function.
+* **T002** — a thread spawned inside an ``rpc_*`` handler (directly, or
+  one ``self.*`` hop below one) without a registered owner: the thread is
+  stored nowhere on ``self``, so no shutdown path can ever find it.
+  Handlers run on transport server threads; a spawn per request with no
+  registry is an unbounded leak under request load.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set
+
+from .findings import Finding
+from .model import ClassInfo, FunctionInfo, Project, ThreadCtor
+
+
+def _group_call_names(group: List[ClassInfo]) -> Set[str]:
+    names: Set[str] = set()
+    for c in group:
+        for f in c.functions.values():
+            for site in f.calls:
+                names.add(site.name)
+    return names
+
+
+def _rpc_reachable_methods(group: List[ClassInfo]) -> Set[str]:
+    """Method names that are rpc_* handlers or called directly by one."""
+    out: Set[str] = set()
+    for c in group:
+        for f in c.functions.values():
+            if f.is_nested or not f.name.startswith("rpc_"):
+                continue
+            out.add(f.name)
+            for site in f.calls:
+                parts = site.name.split(".")
+                if len(parts) == 2 and parts[0] == "self":
+                    out.add(parts[1])
+    return out
+
+
+def _joined(ctor: ThreadCtor, func: FunctionInfo, group_calls: Set[str]) -> bool:
+    if ctor.target is None:
+        return False
+    if ctor.target.startswith("self."):
+        return f"{ctor.target}.join" in group_calls
+    # local thread: joined in the same function
+    return any(c.name == f"{ctor.target}.join" for c in func.calls)
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for group in project.class_groups():
+        group_calls = _group_call_names(group)
+        rpc_methods = _rpc_reachable_methods(group)
+        for c in group:
+            for f in c.functions.values():
+                for ctor in f.thread_ctors:
+                    _check_ctor(f, ctor, group_calls, rpc_methods, findings)
+                # unassigned inline spawns: Thread(...).start() — the
+                # ctor never hit an Assign, so synthesize an anonymous one
+                ctor_lines = {t.line for t in f.thread_ctors}
+                for site in f.calls:
+                    if (
+                        site.name.rsplit(".", 1)[-1] == "Thread"
+                        and site.line not in ctor_lines
+                    ):
+                        anon = ThreadCtor(
+                            target=None, line=site.line,
+                            daemon=site.const_kwargs.get("daemon"), func=f,
+                        )
+                        _check_ctor(f, anon, group_calls, rpc_methods, findings)
+    # module-level functions (no class group) get the same local checks
+    for mod in project.modules.values():
+        for f in mod.functions.values():
+            for ctor in f.thread_ctors:
+                _check_ctor(f, ctor, set(), set(), findings)
+            ctor_lines = {t.line for t in f.thread_ctors}
+            for site in f.calls:
+                if (
+                    site.name.rsplit(".", 1)[-1] == "Thread"
+                    and site.line not in ctor_lines
+                ):
+                    anon = ThreadCtor(
+                        target=None, line=site.line,
+                        daemon=site.const_kwargs.get("daemon"), func=f,
+                    )
+                    _check_ctor(f, anon, set(), set(), findings)
+    return findings
+
+
+def _check_ctor(
+    f: FunctionInfo,
+    ctor: ThreadCtor,
+    group_calls: Set[str],
+    rpc_methods: Set[str],
+    findings: List[Finding],
+) -> None:
+    label = ctor.target or "<anonymous>"
+    if ctor.daemon is not True and not _joined(ctor, f, group_calls):
+        findings.append(
+            Finding(
+                file=f.module, line=ctor.line, code="T001",
+                message=(
+                    f"thread '{label}' in '{f.name}' is neither daemon=True "
+                    "nor joined on any shutdown path (leaks past its owner)"
+                ),
+            )
+        )
+    if f.name in rpc_methods and not (
+        ctor.target and ctor.target.startswith("self.")
+    ):
+        findings.append(
+            Finding(
+                file=f.module, line=ctor.line, code="T002",
+                message=(
+                    f"thread '{label}' spawned in rpc handler path "
+                    f"'{f.name}' with no registered owner (unbounded leak "
+                    "under request load)"
+                ),
+            )
+        )

@@ -116,6 +116,10 @@ class CommitterMixin:
                 "chunk_bytes": int(chunk_bytes) or DEFAULT_CHUNK_BYTES,
                 "seed_base": int(seed_base),
                 "streams": streams,
+                # minted HERE, before journaling: replay re-writes the
+                # on-disk metadata and must stamp the SAME creation time,
+                # not its own clock
+                "created_unix": time.time(),
             }
             self._journal.append("snapshot_started", payload, sync=True)
             snap = self._apply_snapshot_started(payload)
@@ -154,6 +158,8 @@ class CommitterMixin:
             snap.chunk_bytes,
             len(snap.streams),
             snap.seed_base,
+            # journaled by rpc_start_snapshot; 0.0 only for pre-upgrade logs
+            created_unix=p.get("created_unix", 0.0),
         )
         return snap
 

@@ -107,6 +107,7 @@ class ControlPlaneMixin:
             )
             self._journal.append("job_created", payload)
             job = self._apply_job(payload)
+            self._grant_initial_tasks(job)
             if client_id:
                 job.clients.add(client_id)
             return self._job_view(job)
@@ -221,6 +222,17 @@ class ControlPlaneMixin:
         self._jobs[job.job_id] = job
         if job.job_name:
             self._jobs_by_name[job.job_name] = job.job_id
+        return job
+
+    def _grant_initial_tasks(self, job: _Job) -> None:
+        """Initial task grants for a freshly created job.
+
+        Called from the RPC path only, NEVER from replay: task grants mint
+        fresh ids and journal ``task_created`` records, and on replay the
+        tasks are reconstructed verbatim from those records (the worker
+        pool is empty during replay anyway, so granting there is at best a
+        no-op and at worst a source of divergence).
+        """
         # a new schedulable job starts at its weighted fair share of the
         # fleet, placed on the least-loaded workers (rebalance() adjusts it
         # from demand); unscheduled jobs (and non-scheduling deployments)
@@ -233,7 +245,6 @@ class ControlPlaneMixin:
         else:
             for w in self._workers.values():
                 self._ensure_task(job, w.info)
-        return job
 
     def _ensure_task(self, job: _Job, w: WorkerInfo) -> Optional[TaskSpec]:
         if job.finished or w.worker_id in job.tasks_by_worker:
@@ -551,7 +562,9 @@ class ControlPlaneMixin:
                 if s.assigned_to and not s.done
                 and s.assigned_to not in self._workers
             }
-            for wid in orphan_owners:
+            # sorted: release order feeds journaled stream reassignment, and
+            # set order is hash-seed dependent (differs across processes)
+            for wid in sorted(orphan_owners):
                 self._release_worker_streams(wid)
         for job in self._jobs.values():
             mgr = job.shard_mgr
@@ -563,7 +576,9 @@ class ControlPlaneMixin:
                 if st.assigned_to and not st.completed
                 and st.assigned_to not in self._workers
             }
-            for wid in orphans:
+            # sorted: shard_lost records land in the journal in this order,
+            # and two runs of the same primary must journal identically
+            for wid in sorted(orphans):
                 for sid in mgr.worker_failed(wid):
                     self._journal.append(
                         "shard_lost",

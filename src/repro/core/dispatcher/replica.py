@@ -49,7 +49,13 @@ class StandbyDispatcher:
         )
         self.journal_path = journal_path
         self.primary_journal_path = primary_journal_path
-        self._stub = Stub(primary_address)
+        # RPC deadline tied to the lease: failover detection is only as
+        # fast as the slowest journal_fetch, so a primary that ACCEPTS
+        # connections but never answers (half-dead host) must fail the
+        # tail within the lease budget, not the 30s transport default
+        self._stub = Stub(
+            primary_address, timeout=max(0.05, min(lease_timeout, 30.0))
+        )
         self._lease_timeout = lease_timeout
         self._poll_interval = poll_interval
         self._max_records = max_records

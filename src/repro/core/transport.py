@@ -31,6 +31,12 @@ from typing import Any, Callable, Dict, Optional, Protocol
 # here; it is now a pluggable registry (see codecs.py for negotiation rules).
 from .codecs import compress, decompress  # noqa: F401
 
+# Default per-call deadline when a Stub is built without an explicit
+# timeout.  Paths whose liveness budget is tighter than this (standby
+# journal tail, heartbeats) MUST pass their own — the D003 static pass
+# flags retry-critical call sites that rely on this default.
+DEFAULT_RPC_TIMEOUT_S = 30.0
+
 
 class TransportError(Exception):
     """Raised for any transport-level failure (connect, send, remote error).
@@ -178,8 +184,11 @@ class TCPServer:
 
 
 class _TCPConnection:
-    def __init__(self, host: str, port: int):
-        self._sock = socket.create_connection((host, port), timeout=30)
+    def __init__(self, host: str, port: int, timeout: float = DEFAULT_RPC_TIMEOUT_S):
+        # the socket timeout bounds connect AND every recv: a peer that
+        # accepts but never answers surfaces as TransportError after
+        # `timeout`, not a silent hang
+        self._sock = socket.create_connection((host, port), timeout=timeout)
         self._lock = threading.Lock()
 
     def call(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
@@ -256,8 +265,10 @@ class GrpcServer:
 
 
 class _GrpcConnection:
-    def __init__(self, target: str):
+    def __init__(self, target: str, timeout: float = DEFAULT_RPC_TIMEOUT_S):
         import grpc
+
+        self._timeout = timeout
 
         self._grpc = grpc
         self._channel = grpc.insecure_channel(
@@ -275,7 +286,7 @@ class _GrpcConnection:
         try:
             resp = self._call(
                 pickle.dumps((method, payload), protocol=pickle.HIGHEST_PROTOCOL),
-                timeout=30,
+                timeout=self._timeout,
             )
         except self._grpc.RpcError as e:
             raise TransportError(f"grpc call {method} failed: {e.code()}")
@@ -302,8 +313,12 @@ class Stub:
     stubs are free.
     """
 
-    def __init__(self, address: str):
+    def __init__(self, address: str, timeout: Optional[float] = None):
         self.address = address
+        # per-stub RPC deadline; retry-critical loops (standby journal tail,
+        # heartbeats) pass one derived from their own lease so a hung peer
+        # can't stall them for the transport default
+        self.timeout = DEFAULT_RPC_TIMEOUT_S if timeout is None else timeout
         self._conn: Optional[Any] = None
         self._lock = threading.Lock()
 
@@ -322,7 +337,9 @@ class Stub:
         if self.address.startswith("grpc://"):
             with self._lock:
                 if self._conn is None:
-                    self._conn = _GrpcConnection(self.address[len("grpc://") :])
+                    self._conn = _GrpcConnection(
+                        self.address[len("grpc://") :], timeout=self.timeout
+                    )
                 conn = self._conn
             try:
                 return conn.call(method, payload)
@@ -338,7 +355,9 @@ class Stub:
             with self._lock:
                 if self._conn is None:
                     try:
-                        self._conn = _TCPConnection(host, int(port))
+                        self._conn = _TCPConnection(
+                            host, int(port), timeout=self.timeout
+                        )
                     except OSError as e:
                         raise TransportError(f"cannot connect to {self.address}: {e}")
                 conn = self._conn

@@ -35,14 +35,20 @@ def scrape(dispatcher_address: str) -> Dict[str, Any]:
     out: Dict[str, Any] = {"t": time.perf_counter(), "workers": {}, "errors": []}
     try:
         out["dispatcher"] = Stub(dispatcher_address).call("metrics_dump")
-    except (TransportError, ValueError) as e:
+    except Exception as e:  # noqa: BLE001 — see below
         out["dispatcher"] = None
         out["errors"].append(f"dispatcher: {e!r}")
         return out
     for wid, addr in (out["dispatcher"].get("workers") or {}).items():
         try:
             out["workers"][wid] = Stub(addr).call("metrics_dump")
-        except (TransportError, ValueError) as e:
+        except Exception as e:  # noqa: BLE001
+            # broad on purpose: over tcp:// a dead worker is a clean
+            # TransportError, but over inproc:// handler exceptions
+            # propagate natively — a worker torn down between the fleet
+            # listing above and this scrape raises whatever its handler
+            # died with (KeyError, RuntimeError, ...).  The dashboard
+            # must mark the row DOWN, never crash mid-refresh.
             out["workers"][wid] = None
             out["errors"].append(f"{wid}: {e!r}")
     return out

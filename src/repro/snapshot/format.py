@@ -39,7 +39,6 @@ from __future__ import annotations
 import json
 import os
 import struct
-import time
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -158,7 +157,12 @@ def write_metadata(
     chunk_bytes: int,
     num_streams: int,
     seed_base: int,
+    created_unix: float,
 ) -> None:
+    # created_unix is the caller's clock, not ours: the dispatcher mints it
+    # once when the snapshot is journaled and passes the SAME value on
+    # replay, so a standby re-writing this file reproduces it byte-for-byte
+    # instead of clobbering the primary's timestamp
     _write_json_atomic(
         metadata_path(root),
         {
@@ -169,10 +173,7 @@ def write_metadata(
             "chunk_bytes": chunk_bytes,
             "num_streams": num_streams,
             "seed_base": seed_base,
-            # wall clock on purpose: this timestamp is persisted and read
-            # by other processes (staleness checks compare it to THEIR
-            # clocks), so perf_counter would be meaningless here
-            "created_unix": time.time(),
+            "created_unix": created_unix,
         },
     )
 

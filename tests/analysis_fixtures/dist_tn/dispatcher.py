@@ -1,0 +1,54 @@
+"""Distributed-blocking true negatives, dispatcher side.
+
+Each method is the near-miss twin of a dist_tp positive: same shape, with
+the defect removed (lock released before the RPC, no return call edge, a
+stub timeout, a Backoff policy).
+"""
+import threading
+
+
+class Stub:
+    def __init__(self, address, timeout=None):
+        self.address = address
+        self.timeout = timeout
+
+    def call(self, method, **payload):
+        return {}
+
+
+class Backoff:
+    def next_delay(self):
+        return 0.0
+
+
+class Dispatcher:
+    def __init__(self, stub):
+        self._lock = threading.Lock()
+        self._stub = stub
+        self._state = {}
+
+    def assign(self, jid):
+        with self._lock:
+            payload = {"jid": jid}
+        # lock released before the RPC: no D001
+        return self._stub.call("run_task", **payload)
+
+    def rpc_sync_state(self):
+        # answers from local state, no call back out: no D002 cycle
+        return {"state": dict(self._state)}
+
+    def rpc_journal_fetch(self, after_seq):
+        return {"events": []}
+
+    def tail(self):
+        stub = Stub("tcp://primary:4000", timeout=0.5)
+        while True:
+            # explicit stub timeout bounds each fetch: no D003
+            stub.call("journal_fetch", after_seq=0)
+
+    def heartbeat_loop(self):
+        backoff = Backoff()
+        while True:
+            # Backoff-paced retry loop: no D003
+            self._stub.call("worker_heartbeat")
+            backoff.next_delay()

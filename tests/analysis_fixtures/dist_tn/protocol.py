@@ -1,0 +1,9 @@
+"""Fixture protocol spec for the distributed-blocking true negatives.
+
+Documented methods:
+
+* ``run_task``         — start one task on the worker.
+* ``sync_state``       — dispatcher-side state sync.
+* ``worker_heartbeat`` — liveness ping.
+* ``journal_fetch``    — replication tail fetch.
+"""

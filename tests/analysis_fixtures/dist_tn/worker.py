@@ -1,0 +1,19 @@
+"""Worker side of the distributed-blocking true negatives."""
+
+
+class Worker:
+    def __init__(self, stub):
+        self._stub = stub
+        self._tasks = {}
+
+    def rpc_run_task(self, jid):
+        self._tasks[jid] = "running"
+        return {"ok": True}
+
+    def rpc_worker_heartbeat(self):
+        return {"ok": True}
+
+    def resync(self):
+        # one-shot call from a non-handler: no loop (D003) and no cycle
+        # reachable from a handler (D002)
+        return self._stub.call("sync_state")

@@ -1,0 +1,27 @@
+"""Distributed-blocking true positives, dispatcher side: D001, D002, D003."""
+import threading
+
+
+class Dispatcher:
+    def __init__(self, stub):
+        self._lock = threading.Lock()
+        self._stub = stub
+        self._state = {}
+
+    def assign(self, jid):
+        with self._lock:
+            # D001: blocking RPC into the worker while holding _lock
+            return self._stub.call("run_task", jid=jid)
+
+    def rpc_sync_state(self):
+        # D002: this handler RPCs the worker, whose handler RPCs back here
+        return {"state": self._stub.call("mirror_state")}
+
+    def rpc_journal_fetch(self, after_seq):
+        return {"events": []}
+
+    def tail(self):
+        while True:
+            # D003: retry-critical fetch loop with no stub timeout and no
+            # Backoff policy
+            self._stub.call("journal_fetch", after_seq=0)

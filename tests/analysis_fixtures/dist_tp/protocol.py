@@ -1,0 +1,9 @@
+"""Fixture protocol spec for the distributed-blocking true positives.
+
+Documented methods:
+
+* ``run_task``      — start one task on the worker.
+* ``sync_state``    — dispatcher-side state sync.
+* ``mirror_state``  — worker-side state mirror.
+* ``journal_fetch`` — replication tail fetch.
+"""

@@ -1,0 +1,16 @@
+"""Worker side of the distributed-blocking true positives."""
+
+
+class Worker:
+    def __init__(self, stub):
+        self._stub = stub
+        self._tasks = {}
+
+    def rpc_run_task(self, jid):
+        self._tasks[jid] = "running"
+        return {"ok": True}
+
+    def rpc_mirror_state(self):
+        # the back edge of the D002 cycle: the worker handler calls the
+        # dispatcher handler that called it
+        return {"state": self._stub.call("sync_state")}

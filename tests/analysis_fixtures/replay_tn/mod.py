@@ -1,0 +1,49 @@
+"""Replay-determinism true negatives: nondeterminism minted BEFORE the
+journal append (so replay reads it back), sorted sets everywhere."""
+import time
+import uuid
+
+
+def new_id(prefix):
+    return f"{prefix}-{uuid.uuid4().hex}"
+
+
+class Journal:
+    def append(self, etype, payload):
+        return 0
+
+
+class MiniDispatcher:
+    def __init__(self):
+        self._journal = Journal()
+        self._jobs = {}
+
+    def create_job(self):
+        # clock and id are minted on the RPC path and JOURNALED: replay
+        # reads the recorded values instead of re-deriving them
+        payload = {"jid": new_id("job"), "created": time.time()}
+        self._journal.append("job_created", payload)
+        self.apply_event("job_created", payload)
+
+    def finish_job(self, jid, shards):
+        # sorted() consumes the set in-payload: stable serialization
+        self._journal.append(
+            "job_finished", {"jid": jid, "shards": sorted({s for s in shards})}
+        )
+        self.apply_event("job_finished", {"jid": jid})
+
+    def sweep(self, workers):
+        dead = {w for w in workers if w not in self._jobs}
+        for wid in sorted(dead):
+            # sorted(): journal record order is deterministic
+            payload = {"wid": wid}
+            self._journal.append("worker_lost", payload)
+            self.apply_event("worker_lost", payload)
+
+    def apply_event(self, etype, payload):
+        if etype == "job_created":
+            self._jobs[payload["jid"]] = {"created": payload["created"]}
+        elif etype == "job_finished":
+            self._jobs.pop(payload["jid"], None)
+        elif etype == "worker_lost":
+            self._jobs["last_lost"] = payload["wid"]

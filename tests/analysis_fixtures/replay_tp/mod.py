@@ -1,0 +1,55 @@
+"""Replay-determinism true positives: P001, P002, P003, P004."""
+import time
+import uuid
+
+
+def new_id(prefix):
+    # nondeterministic helper: calling it on the replay path is P002
+    return f"{prefix}-{uuid.uuid4().hex}"
+
+
+class Journal:
+    def append(self, etype, payload):
+        return 0
+
+
+class MiniDispatcher:
+    def __init__(self):
+        self._journal = Journal()
+        self._jobs = {}
+
+    def create_job(self, jid):
+        payload = {"jid": jid}
+        self._journal.append("job_created", payload)
+        self.apply_event("job_created", payload)
+
+    def finish_job(self, jid, shards):
+        # P004: a set inside the journaled payload (unstable serialization)
+        self._journal.append(
+            "job_finished", {"jid": jid, "shards": {s for s in shards}}
+        )
+        self.apply_event("job_finished", {"jid": jid})
+
+    def sweep(self, workers):
+        dead = {w for w in workers if w not in self._jobs}
+        for wid in dead:
+            # P003: journal record order driven by set iteration
+            payload = {"wid": wid}
+            self._journal.append("worker_lost", payload)
+            self.apply_event("worker_lost", payload)
+
+    def apply_event(self, etype, payload):
+        if etype == "job_created":
+            self._jobs[payload["jid"]] = self._make_job()
+        elif etype == "job_finished":
+            self._jobs.pop(payload["jid"], None)
+        elif etype == "worker_lost":
+            self._jobs["last_lost"] = payload["wid"]
+
+    def _make_job(self):
+        return {
+            # P001: clock read on the replay path
+            "created": time.time(),
+            # P002: nondeterministic id on the replay path
+            "id": new_id("job"),
+        }

@@ -1,0 +1,55 @@
+"""Thread-lifecycle true negatives: daemon, joined, and owned threads."""
+import threading
+
+
+class DaemonPoller:
+    def __init__(self):
+        # daemon=True: the process may exit under it, no join required
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self._thread.start()
+
+    def _run(self):
+        pass
+
+
+class JoinedPoller:
+    def __init__(self):
+        self._thread = threading.Thread(target=self._run)
+
+    def start(self):
+        self._thread.start()
+
+    def close(self):
+        # the shutdown path joins the thread: no T001
+        self._thread.join()
+
+    def _run(self):
+        pass
+
+
+class Server:
+    def __init__(self):
+        self._worker_thread = None
+
+    def rpc_start_job(self, jid):
+        # owner registered on self: close() can find and join it — no T002
+        self._worker_thread = threading.Thread(target=self._work, daemon=True)
+        self._worker_thread.start()
+        return {"ok": True}
+
+    def _work(self):
+        pass
+
+    def close(self):
+        if self._worker_thread is not None:
+            self._worker_thread.join()
+
+
+class Client:
+    def __init__(self, stub):
+        self._stub = stub
+
+    def start(self, jid):
+        return self._stub.call("start_job", jid=jid)

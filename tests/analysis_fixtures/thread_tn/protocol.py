@@ -1,0 +1,6 @@
+"""Fixture protocol spec for the thread-lifecycle true negatives.
+
+Documented methods:
+
+* ``start_job`` — kick off one background job on the server.
+"""

@@ -1,0 +1,34 @@
+"""Thread-lifecycle true positives: T001 and T002."""
+import threading
+
+
+class Poller:
+    def __init__(self):
+        # T001: neither daemon=True nor joined anywhere in the class
+        self._thread = threading.Thread(target=self._run)
+
+    def start(self):
+        self._thread.start()
+
+    def _run(self):
+        pass
+
+
+class Server:
+    def rpc_start_job(self, jid):
+        # T002: a per-request thread with no owner registered on self —
+        # daemon=True dodges T001 but nothing can ever find or stop it
+        t = threading.Thread(target=self._work, args=(jid,), daemon=True)
+        t.start()
+        return {"ok": True}
+
+    def _work(self, jid):
+        pass
+
+
+class Client:
+    def __init__(self, stub):
+        self._stub = stub
+
+    def start(self, jid):
+        return self._stub.call("start_job", jid=jid)

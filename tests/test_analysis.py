@@ -9,8 +9,11 @@ Three layers:
 3. Seeded divergence: deleting an ``apply_event`` branch from a scratch
    copy of the tree must produce a J001 and a non-zero strict exit.
 
-Plus behavioral regression tests for the two real concurrency findings the
-analyzer surfaced (Journal.set_seq, WorkerMetrics counters).
+Plus behavioral regression tests for the real findings the analyzer
+surfaced: Journal.set_seq, WorkerMetrics counters (single-process passes),
+and the cross-process batch — the standby tail's unbounded journal_fetch
+(D003), task grants on the replay path (P001/P002), and the snapshot
+metadata timestamp re-minted during replay (P002).
 """
 import re
 import shutil
@@ -86,6 +89,58 @@ def test_rpc_rules_true_negative():
     assert not {"R001", "R002", "R003"} & codes(run_on("rpc_tn"))
 
 
+# -- distributed blocking ----------------------------------------------------
+def test_dist_rules_true_positive():
+    found = run_on("dist_tp")
+    assert {"D001", "D002", "D003"} <= codes(found)
+    assert any(
+        f.code == "D001" and "run_task" in f.message and "_lock" in f.message
+        for f in found
+    )
+    # the cycle chain names both process roles
+    assert any(
+        f.code == "D002" and "dispatcher:" in f.message and "worker:" in f.message
+        for f in found
+    )
+    assert any(f.code == "D003" and "journal_fetch" in f.message for f in found)
+
+
+def test_dist_rules_true_negative():
+    # lock released before the RPC, no return call edge, a stub timeout,
+    # and a Backoff-paced heartbeat loop: all near-misses, none flagged
+    assert not {"D001", "D002", "D003"} & codes(run_on("dist_tn"))
+
+
+# -- replay determinism ------------------------------------------------------
+def test_replay_rules_true_positive():
+    found = run_on("replay_tp")
+    assert {"P001", "P002", "P003", "P004"} <= codes(found)
+    assert any(f.code == "P001" and "time.time" in f.message for f in found)
+    # one hop through the module-level new_id helper is still P002
+    assert any(f.code == "P002" and "new_id" in f.message for f in found)
+    assert any(f.code == "P003" and "worker_lost" in f.message for f in found)
+    assert any(f.code == "P004" and "job_finished" in f.message for f in found)
+
+
+def test_replay_rules_true_negative():
+    # nondeterminism minted BEFORE the append (journaled, so replay reads
+    # it back) and sorted() sets: the compliant versions of every positive
+    assert not {"P001", "P002", "P003", "P004"} & codes(run_on("replay_tn"))
+
+
+# -- thread lifecycle --------------------------------------------------------
+def test_thread_rules_true_positive():
+    found = run_on("thread_tp")
+    assert {"T001", "T002"} <= codes(found)
+    assert any(f.code == "T001" and "self._thread" in f.message for f in found)
+    assert any(f.code == "T002" and "rpc_start_job" in f.message for f in found)
+
+
+def test_thread_rules_true_negative():
+    # daemon=True, joined-on-close, and self-registered threads are clean
+    assert not {"T001", "T002"} & codes(run_on("thread_tn"))
+
+
 # -- suppressions + baseline -------------------------------------------------
 def test_inline_suppression_accepts_findings(tmp_path):
     new, accepted = analyze(
@@ -115,6 +170,77 @@ def test_cli_strict_fails_on_fixture_true_positive(tmp_path):
     assert "L001" in proc.stdout
 
 
+def test_stale_baseline_entry_fails_strict(tmp_path):
+    """A baseline line no finding matches is rot: --strict must fail so the
+    entry is removed when the underlying finding is fixed."""
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("gone.py L003 blocking call 'x' while holding 'Y._lock'\n")
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "--strict",
+            "--root", str(FIXTURES / "locks_tn"),
+            "--baseline", str(bl),
+        ],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "stale baseline entry" in proc.stdout and "gone.py" in proc.stdout
+
+
+def test_update_baseline_accepts_findings_and_drops_stale(tmp_path):
+    """--update-baseline rewrites the file from the CURRENT findings: new
+    ones are accepted, stale lines vanish, and --strict then passes."""
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("gone.py L003 blocking call 'x' while holding 'Y._lock'\n")
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    base_cmd = [
+        sys.executable, "-m", "repro.analysis",
+        "--root", str(FIXTURES / "locks_tp"), "--baseline", str(bl),
+    ]
+    proc = subprocess.run(
+        base_cmd + ["--update-baseline"], capture_output=True, text=True, env=env
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    text = bl.read_text()
+    assert "L001" in text and "L002" in text and "L003" in text
+    assert "gone.py" not in text
+    proc = subprocess.run(
+        base_cmd + ["--strict"], capture_output=True, text=True, env=env
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_timings_are_printed(tmp_path):
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "--timings",
+            "--root", str(FIXTURES / "locks_tn"),
+            "--baseline", str(tmp_path / "empty.txt"),
+        ],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "pass timings:" in proc.stderr
+    for name in ("parse", "locks", "journal", "rpc", "dist", "replay", "thread"):
+        assert f"{name}=" in proc.stderr
+
+
+def test_live_tree_strict_passes_within_ci_budget():
+    """The analyzer self-run CI gate: the live tree must be clean under the
+    full six-pass --strict run, and the run must fit the <10s budget."""
+    t0 = time.monotonic()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    elapsed = time.monotonic() - t0
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert elapsed < 10.0, f"strict run took {elapsed:.1f}s (budget 10s)"
+
+
 def test_seeded_divergence_is_caught(tmp_path):
     """Acceptance check: delete one apply_event branch in a scratch copy of
     the real tree -> the journal pass must emit J001 and fail --strict."""
@@ -142,6 +268,35 @@ def test_seeded_divergence_is_caught(tmp_path):
     )
     assert proc.returncode == 1, proc.stdout + proc.stderr
     assert "J001" in proc.stdout and "job_finished" in proc.stdout
+
+
+def test_seeded_wall_clock_divergence_is_caught(tmp_path):
+    """Acceptance check for the replay pass: inject a time.time() read into
+    a scratch copy's apply path -> P001 and a non-zero strict exit."""
+    scratch = tmp_path / "repro"
+    shutil.copytree(
+        SRC / "repro", scratch, ignore=shutil.ignore_patterns("__pycache__")
+    )
+    control = scratch / "core" / "dispatcher" / "control.py"
+    text = control.read_text()
+    mangled, n = re.subn(
+        r"(def _apply_job\(self, p: Dict\[str, Any\]\) -> _Job:\n)",
+        '\\1        p["stamp"] = time.time()\n',
+        text,
+    )
+    assert n == 1
+    control.write_text(mangled)
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "--strict",
+            "--root", str(scratch),
+            "--baseline", str(scratch / "analysis" / "baseline.txt"),
+        ],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "P001" in proc.stdout and "_apply_job" in proc.stdout
 
 
 # -- behavioral regressions for analyzer-surfaced fixes ----------------------
@@ -197,3 +352,107 @@ def test_worker_metrics_concurrent_add_is_exact():
     assert snap["batches_produced"] == per_thread * n_threads
     assert abs(snap["busy_time"] - 0.5 * per_thread * n_threads) < 1e-6
     assert "_lock" not in snap
+
+
+def test_standby_tail_survives_hung_primary(tmp_path):
+    """D003 regression: the standby's journal_fetch stub carries a
+    lease-derived timeout.  A primary that ACCEPTS connections but never
+    answers (half-dead host) must still let the standby promote within the
+    lease budget — pre-fix the stub used the 30s transport default and a
+    hung primary stalled failover for that long."""
+    import socket
+
+    from repro.core.dispatcher import StandbyDispatcher
+
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(8)
+    port = srv.getsockname()[1]
+    conns, stop = [], threading.Event()
+
+    def accept_and_hold():
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except OSError:
+                return
+            conns.append(conn)  # accepted, then silence: never replies
+
+    acceptor = threading.Thread(target=accept_and_hold, daemon=True)
+    acceptor.start()
+    standby = StandbyDispatcher(
+        journal_path=str(tmp_path / "standby.bin"),
+        primary_address=f"tcp://127.0.0.1:{port}",
+        lease_timeout=0.5,
+        poll_interval=0.05,
+    ).start()
+    try:
+        assert standby.promoted.wait(8.0), (
+            "standby never promoted: journal_fetch is blocking past the "
+            "lease budget against an accepting-but-silent primary"
+        )
+    finally:
+        standby.stop()
+        stop.set()
+        srv.close()
+        for conn in conns:
+            conn.close()
+        standby.join(2.0)
+
+
+def test_replay_of_job_created_grants_no_tasks(tmp_path):
+    """P001/P002 regression: _apply_job must not grant tasks.  Grants mint
+    fresh ids (new_id) and read the clock (_slot_count), so running them on
+    the replay path diverged from the journaled task_created records — and
+    appended NEW records during replay.  Tasks are granted on the RPC path
+    only; replay reconstructs them verbatim from the journal."""
+    from repro.core.dispatcher import Dispatcher
+    from repro.data import Dataset
+
+    d = Dispatcher(journal_path=str(tmp_path / "j.bin"))
+    d.rpc_register_worker("w1", "inproc://w1")
+    g = Dataset.range(16).batch(4).graph
+    ds = d.rpc_get_or_register_dataset(graph_bytes=g.to_bytes())
+    payload = dict(
+        job_id="job-replayed",
+        job_name="",
+        dataset_id=ds["dataset_id"],
+        policy="off",
+        num_consumers=0,
+        sharing=False,
+    )
+    seq_before = d._journal.seq
+    with d._lock:
+        d.apply_event(seq_before + 1, "job_created", payload)
+    job = d._jobs["job-replayed"]
+    assert job.tasks == {}, "replay minted tasks (ids diverge from the journal)"
+    # replay must never append: an applied event that journals new records
+    # would fork the standby's log from the primary's
+    assert d._journal.seq == seq_before + 1
+    # the RPC path still grants immediately (the worker is registered)
+    created = d.rpc_get_or_create_job(dataset_id=ds["dataset_id"])
+    assert d._jobs[created["job_id"]].tasks, "RPC path stopped granting tasks"
+
+
+def test_snapshot_metadata_timestamp_stable_across_replay(tmp_path):
+    """P002 regression: _apply_snapshot_started re-writes the on-disk
+    snapshot metadata on every replay.  The created_unix stamp is journaled
+    with the snapshot_started event, so a restart (or standby) reproduces
+    the file byte-for-byte instead of re-minting the timestamp."""
+    from repro.core.dispatcher import Dispatcher
+    from repro.data import Dataset
+    from repro.snapshot import read_metadata
+
+    journal_path = str(tmp_path / "j.bin")
+    d = Dispatcher(journal_path=journal_path)
+    g = Dataset.range(8).batch(2).graph
+    ds = d.rpc_get_or_register_dataset(graph_bytes=g.to_bytes())
+    snap_path = str(tmp_path / "snap")
+    d.rpc_start_snapshot(path=snap_path, dataset_id=ds["dataset_id"])
+    first = read_metadata(snap_path)
+    assert first and first["created_unix"] > 0
+    time.sleep(0.05)  # make a re-minted wall-clock stamp distinguishable
+    Dispatcher(journal_path=journal_path)  # replays snapshot_started
+    replayed = read_metadata(snap_path)
+    assert replayed["created_unix"] == first["created_unix"]

@@ -41,7 +41,7 @@ class TestAutocachePolicy:
     def test_read_when_snapshot_finished(self, tmp_path):
         pol = AutocachePolicy(str(tmp_path))
         path = pol.path_for("fp1")
-        write_metadata(path, "s", "fp1", None, 100, 1, 0)
+        write_metadata(path, "s", "fp1", None, 100, 1, 0, time.time())
         w = StreamWriter(path, 0)
         w.append(np.arange(3))
         w.finish()
@@ -53,7 +53,7 @@ class TestAutocachePolicy:
     def test_compute_while_write_in_progress(self, tmp_path):
         pol = AutocachePolicy(str(tmp_path))
         path = pol.path_for("fp2")
-        write_metadata(path, "s", "fp2", None, 100, 1, 0)  # exists, unfinished
+        write_metadata(path, "s", "fp2", None, 100, 1, 0, time.time())  # exists, unfinished
         assert pol.decide("fp2").decision == Decision.COMPUTE
 
     def test_write_through_when_reuse_pays(self, tmp_path):
@@ -87,7 +87,7 @@ class TestAutocachePolicy:
             AutocacheConfig(expected_future_jobs=3.0, stale_write_timeout_s=0.2),
         )
         path = pol.path_for("fp-stale")
-        write_metadata(path, "s", "fp-stale", None, 100, 1, 0)
+        write_metadata(path, "s", "fp-stale", None, 100, 1, 0, time.time())
         assert pol.decide("fp-stale").decision == Decision.COMPUTE  # fresh write
         old = time.time() - 60
         os.utime(os.path.join(path, "SNAPSHOT.json"), (old, old))
@@ -191,7 +191,7 @@ class TestMaterializedHelper:
         pipe = _pipeline(10)
         path = str(tmp_path / "snap")
         assert materialized(pipe, path) is pipe  # nothing on disk
-        write_metadata(path, "s", "fp", None, 100, 1, 0)
+        write_metadata(path, "s", "fp", None, 100, 1, 0, time.time())
         w = StreamWriter(path, 0)
         w.append(np.arange(2))
         w.finish()

@@ -227,6 +227,49 @@ class TestLiveObservability:
         assert "BATCH/S" in again
         assert obs_top.main(["--dispatcher", svc.dispatcher_address, "--once"]) == 0
 
+    def test_top_scrape_survives_vanished_worker(self):
+        """A worker can disappear between the dispatcher's fleet listing
+        and the per-worker metrics_dump scrape.  Over inproc:// its handler
+        exceptions propagate natively (not as TransportError), so the
+        scrape must catch broadly: mark the row DOWN, record the error,
+        never crash mid-refresh."""
+        from repro.core.transport import INPROC
+
+        class _DeadWorker:
+            def handle(self, method, payload):
+                raise RuntimeError("worker torn down mid-scrape")
+
+        class _LiveWorker:
+            def handle(self, method, payload):
+                return {"registry": {}}
+
+        class _Disp:
+            def __init__(self, workers):
+                self._workers = workers
+
+            def handle(self, method, payload):
+                return {
+                    "workers": self._workers,
+                    "stats": {"jobs": {}, "num_workers": len(self._workers)},
+                    "registry": {},
+                }
+
+        live = INPROC.bind("obs-live-worker", _LiveWorker())
+        dead = INPROC.bind("obs-dead-worker", _DeadWorker())
+        disp = INPROC.bind(
+            "obs-disp", _Disp({"w-live": live, "w-gone": dead})
+        )
+        try:
+            snap = obs_top.scrape(disp)
+            assert snap["workers"]["w-live"] is not None
+            assert snap["workers"]["w-gone"] is None
+            assert any("w-gone" in e for e in snap["errors"])
+            out = obs_top.render(snap)
+            assert "DOWN" in out and "w-gone" in out
+        finally:
+            for name in ("obs-live-worker", "obs-dead-worker", "obs-disp"):
+                INPROC.unbind(name)
+
     def test_trace_export_single_trace_no_orphans(self, service_factory, tmp_path):
         svc = service_factory(num_workers=2)
         sess = self._consume_traced(svc)

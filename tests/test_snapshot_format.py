@@ -134,7 +134,7 @@ class TestStreamWriter:
 
 class TestReader:
     def _make_snapshot(self, root, num_streams=2, per_stream=8, done=True):
-        write_metadata(root, "snap-test", "fp", None, 100, num_streams, 0)
+        write_metadata(root, "snap-test", "fp", None, 100, num_streams, 0, time.time())
         total = []
         for sid in range(num_streams):
             w = StreamWriter(root, sid, chunk_bytes=80)
@@ -167,7 +167,7 @@ class TestReader:
         """A reader attached mid-write sees committed chunks immediately and
         the rest as they commit, returning once DONE appears."""
         root = str(tmp_path)
-        write_metadata(root, "snap-live", "fp", None, 100, 1, 0)
+        write_metadata(root, "snap-live", "fp", None, 100, 1, 0, time.time())
         elems = _elems(12)
 
         def writer():

@@ -13,4 +13,4 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 from repro.analysis.__main__ import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1:] or ["--strict"]))
+    sys.exit(main(sys.argv[1:] or ["--strict", "--timings"]))
