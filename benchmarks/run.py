@@ -24,7 +24,7 @@ SUITES = (
     ("S33_visitation", "benchmarks.visitation"),
     ("S42_cross_region", "benchmarks.cross_region"),
     ("TPU_bucket_compile", "benchmarks.bucket_compile"),
-    ("DataPlane_throughput", "benchmarks.data_plane"),
+    ("data_plane", "benchmarks.data_plane"),
     ("Pallas_kernels", "benchmarks.kernels"),
     ("Snapshot_materialization", "benchmarks.snapshot"),
     ("feed", "benchmarks.feed"),

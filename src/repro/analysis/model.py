@@ -92,12 +92,14 @@ class CallSite:
 
 @dataclass
 class ThreadCtor:
-    """A ``threading.Thread(...)`` construction and where it was stored."""
+    """A ``threading.Thread(...)`` / ``multiprocessing.Process(...)`` /
+    ``SharedMemory(create=True)`` construction and where it was stored."""
 
     target: Optional[str]  # dotted store target (``self._thread``, ``t``), or None
     line: int
     daemon: Optional[object]  # const value of ``daemon=`` kwarg, None if absent
     func: "FunctionInfo" = field(repr=False, default=None)
+    kind: str = "thread"  # "thread" | "process" | "shm"
 
 
 @dataclass
@@ -125,7 +127,8 @@ class FunctionInfo:
     local_aliases: Dict[str, str] = field(default_factory=dict)
     # exception type names (last dotted segment) this function catches
     handled_exceptions: Set[str] = field(default_factory=set)
-    thread_ctors: List[ThreadCtor] = field(default_factory=list)
+    thread_ctors: List[ThreadCtor] = field(default_factory=list)  # threads + processes
+    shm_ctors: List[ThreadCtor] = field(default_factory=list)  # SharedMemory(create=True)
     # local names bound to ``Stub(..., timeout=...)`` in this function
     stub_timeout_locals: Set[str] = field(default_factory=set)
 
@@ -362,14 +365,15 @@ class _FunctionWalker(ast.NodeVisitor):
         self.visit(node.value)
 
     def _register_ctor_facts(self, node: ast.Assign) -> None:
-        """Thread constructions and timeout'd stubs, with their store target."""
+        """Thread/process/shm constructions and timeout'd stubs, with their
+        store target."""
         if not isinstance(node.value, ast.Call):
             return
         ctor = dotted_name(node.value.func) or ""
         last = ctor.rsplit(".", 1)[-1]
         target = node.targets[0] if len(node.targets) == 1 else None
         target_chain = dotted_name(target) if target is not None else None
-        if last == "Thread":
+        if last in ("Thread", "Process"):
             daemon = None
             for kw in node.value.keywords:
                 if kw.arg == "daemon" and isinstance(kw.value, ast.Constant):
@@ -378,6 +382,19 @@ class _FunctionWalker(ast.NodeVisitor):
                 ThreadCtor(
                     target=target_chain, line=node.value.lineno,
                     daemon=daemon, func=self.info,
+                    kind="thread" if last == "Thread" else "process",
+                )
+            )
+        elif last == "SharedMemory" and any(
+            kw.arg == "create"
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in node.value.keywords
+        ):
+            self.info.shm_ctors.append(
+                ThreadCtor(
+                    target=target_chain, line=node.value.lineno,
+                    daemon=None, func=self.info, kind="shm",
                 )
             )
         elif last.endswith("Stub") and any(

@@ -1,9 +1,13 @@
-"""Pass 6 — thread lifecycle (T001, T002).
+"""Pass 6 — thread & process lifecycle (T001–T004).
 
 The static counterpart of the test suite's ``threads_leaked`` conftest
 fixture: background threads must either be ``daemon=True`` (the process
 may exit under them) or be joined on some shutdown path — anything else
-outlives its owner and leaks.
+outlives its owner and leaks.  The same discipline extends to the
+process-pool data plane: ``multiprocessing.Process`` children and
+``SharedMemory`` segments survive their creator, so the leak is a whole
+process (or a ``/dev/shm`` file that persists past interpreter exit)
+rather than a thread.
 
 * **T001** — a ``threading.Thread(...)`` that is neither constructed with
   a literal ``daemon=True`` nor ``.join()``-ed anywhere reachable: stored
@@ -15,13 +19,28 @@ outlives its owner and leaks.
   stored nowhere on ``self``, so no shutdown path can ever find it.
   Handlers run on transport server threads; a spawn per request with no
   registry is an unbounded leak under request load.
+* **T003** — the T001 analogue for ``multiprocessing.Process``: a child
+  that is neither ``daemon=True`` nor joined on any reachable shutdown
+  path.  A leaked non-daemon child blocks ``multiprocessing``'s atexit
+  join forever — the parent process simply never exits.
+* **T004** — a ``SharedMemory(..., create=True)`` with no ``unlink`` on
+  any reachable path.  Unlike mappings, the *name* persists in
+  ``/dev/shm`` past process exit; creating segments without a matching
+  unlink path leaks host memory across runs.  Stored on ``self``, the
+  unlink may live anywhere in the class group; a local handle commonly
+  escapes the creating function (returned, wrapped in an owner object),
+  so any ``*.unlink`` call in the group counts.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import List, Set
 
 from .findings import Finding
 from .model import ClassInfo, FunctionInfo, Project, ThreadCtor
+
+# Call-site last segments that synthesize an anonymous ctor when the
+# construction never hit an Assign (``Thread(...).start()``).
+_INLINE_KINDS = {"Thread": "thread", "Process": "process"}
 
 
 def _group_call_names(group: List[ClassInfo]) -> Set[str]:
@@ -53,8 +72,53 @@ def _joined(ctor: ThreadCtor, func: FunctionInfo, group_calls: Set[str]) -> bool
         return False
     if ctor.target.startswith("self."):
         return f"{ctor.target}.join" in group_calls
-    # local thread: joined in the same function
+    # local thread/process: joined in the same function
     return any(c.name == f"{ctor.target}.join" for c in func.calls)
+
+
+def _unlinked(ctor: ThreadCtor, func: FunctionInfo, group_calls: Set[str]) -> bool:
+    if ctor.target and ctor.target.startswith("self."):
+        return f"{ctor.target}.unlink" in group_calls
+    if ctor.target and any(
+        c.name == f"{ctor.target}.unlink" for c in func.calls
+    ):
+        return True
+    # a local handle usually escapes its creating function (returned or
+    # wrapped in the owning object): any unlink in the class group counts
+    return any(n.rsplit(".", 1)[-1] == "unlink" for n in group_calls)
+
+
+def _inline_spawns(f: FunctionInfo) -> List[ThreadCtor]:
+    """Unassigned inline spawns: ``Thread(...).start()`` / ``Process(...)``
+    — the ctor never hit an Assign, so synthesize an anonymous one."""
+    ctor_lines = {t.line for t in f.thread_ctors}
+    out: List[ThreadCtor] = []
+    for site in f.calls:
+        kind = _INLINE_KINDS.get(site.name.rsplit(".", 1)[-1])
+        if kind is not None and site.line not in ctor_lines:
+            out.append(
+                ThreadCtor(
+                    target=None, line=site.line,
+                    daemon=site.const_kwargs.get("daemon"), func=f, kind=kind,
+                )
+            )
+    return out
+
+
+def _inline_shm(f: FunctionInfo) -> List[ThreadCtor]:
+    ctor_lines = {t.line for t in f.shm_ctors}
+    out: List[ThreadCtor] = []
+    for site in f.calls:
+        if (
+            site.name.rsplit(".", 1)[-1] == "SharedMemory"
+            and site.const_kwargs.get("create") is True
+            and site.line not in ctor_lines
+        ):
+            out.append(
+                ThreadCtor(target=None, line=site.line, daemon=None, func=f,
+                           kind="shm")
+            )
+    return out
 
 
 def run(project: Project) -> List[Finding]:
@@ -64,37 +128,17 @@ def run(project: Project) -> List[Finding]:
         rpc_methods = _rpc_reachable_methods(group)
         for c in group:
             for f in c.functions.values():
-                for ctor in f.thread_ctors:
+                for ctor in f.thread_ctors + _inline_spawns(f):
                     _check_ctor(f, ctor, group_calls, rpc_methods, findings)
-                # unassigned inline spawns: Thread(...).start() — the
-                # ctor never hit an Assign, so synthesize an anonymous one
-                ctor_lines = {t.line for t in f.thread_ctors}
-                for site in f.calls:
-                    if (
-                        site.name.rsplit(".", 1)[-1] == "Thread"
-                        and site.line not in ctor_lines
-                    ):
-                        anon = ThreadCtor(
-                            target=None, line=site.line,
-                            daemon=site.const_kwargs.get("daemon"), func=f,
-                        )
-                        _check_ctor(f, anon, group_calls, rpc_methods, findings)
+                for ctor in f.shm_ctors + _inline_shm(f):
+                    _check_shm(f, ctor, group_calls, findings)
     # module-level functions (no class group) get the same local checks
     for mod in project.modules.values():
         for f in mod.functions.values():
-            for ctor in f.thread_ctors:
+            for ctor in f.thread_ctors + _inline_spawns(f):
                 _check_ctor(f, ctor, set(), set(), findings)
-            ctor_lines = {t.line for t in f.thread_ctors}
-            for site in f.calls:
-                if (
-                    site.name.rsplit(".", 1)[-1] == "Thread"
-                    and site.line not in ctor_lines
-                ):
-                    anon = ThreadCtor(
-                        target=None, line=site.line,
-                        daemon=site.const_kwargs.get("daemon"), func=f,
-                    )
-                    _check_ctor(f, anon, set(), set(), findings)
+            for ctor in f.shm_ctors + _inline_shm(f):
+                _check_shm(f, ctor, set(), findings)
     return findings
 
 
@@ -107,25 +151,59 @@ def _check_ctor(
 ) -> None:
     label = ctor.target or "<anonymous>"
     if ctor.daemon is not True and not _joined(ctor, f, group_calls):
-        findings.append(
-            Finding(
-                file=f.module, line=ctor.line, code="T001",
-                message=(
-                    f"thread '{label}' in '{f.name}' is neither daemon=True "
-                    "nor joined on any shutdown path (leaks past its owner)"
-                ),
+        if ctor.kind == "process":
+            findings.append(
+                Finding(
+                    file=f.module, line=ctor.line, code="T003",
+                    message=(
+                        f"child process '{label}' in '{f.name}' is neither "
+                        "daemon=True nor joined on any shutdown path (a "
+                        "non-daemon child blocks parent exit forever)"
+                    ),
+                )
             )
-        )
+        else:
+            findings.append(
+                Finding(
+                    file=f.module, line=ctor.line, code="T001",
+                    message=(
+                        f"thread '{label}' in '{f.name}' is neither daemon=True "
+                        "nor joined on any shutdown path (leaks past its owner)"
+                    ),
+                )
+            )
     if f.name in rpc_methods and not (
         ctor.target and ctor.target.startswith("self.")
     ):
+        noun = "process" if ctor.kind == "process" else "thread"
         findings.append(
             Finding(
                 file=f.module, line=ctor.line, code="T002",
                 message=(
-                    f"thread '{label}' spawned in rpc handler path "
+                    f"{noun} '{label}' spawned in rpc handler path "
                     f"'{f.name}' with no registered owner (unbounded leak "
                     "under request load)"
                 ),
             )
         )
+
+
+def _check_shm(
+    f: FunctionInfo,
+    ctor: ThreadCtor,
+    group_calls: Set[str],
+    findings: List[Finding],
+) -> None:
+    if _unlinked(ctor, f, group_calls):
+        return
+    label = ctor.target or "<anonymous>"
+    findings.append(
+        Finding(
+            file=f.module, line=ctor.line, code="T004",
+            message=(
+                f"shared-memory segment '{label}' created (create=True) in "
+                f"'{f.name}' with no unlink on any shutdown path (the "
+                "/dev/shm name outlives the process)"
+            ),
+        )
+    )

@@ -28,12 +28,18 @@ The client records stall time (time blocked waiting for data): the paper's
 from __future__ import annotations
 
 import queue
+import socket
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
 
-from ..data.elements import Element, decode_element, decode_elements
+from ..data.elements import (
+    Element,
+    copy_element,
+    decode_element,
+    decode_elements,
+)
 from ..data.graph import Graph
 from ..obs.registry import MetricsRegistry
 from ..obs.tracing import TraceContext, Tracer
@@ -45,6 +51,7 @@ from .protocol import (
     new_id,
 )
 from .codecs import available_codecs
+from .shm_ring import ShmRing
 from .transport import Backoff, Stub, TransportError, decompress
 
 
@@ -67,6 +74,8 @@ class ClientMetrics:
         "rpcs",
         "retries",
         "fallback_tasks",  # tasks demoted to the single-element v1 path
+        "shm_tasks",  # tasks that negotiated a shm:// ring data plane
+        "shm_batches",  # OK responses served via a ring descriptor
     )
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
@@ -99,6 +108,15 @@ class _FetchError:
 
 
 @dataclass
+class _ShmRelease:
+    """Queued AFTER a zero-copy batch: the consumer loop releases the ring
+    slot once it has advanced past every element borrowed from it."""
+
+    ring: ShmRing
+    slot: int
+
+
+@dataclass
 class _TaskHandle:
     task_id: str
     job_id: str
@@ -109,6 +127,12 @@ class _TaskHandle:
     failed: bool = False
     batched: bool = True  # flips False when the worker lacks get_elements
     poisoned: bool = False  # undecodable responses: never resurrect
+    # shm:// data-plane negotiation state (per task handle; the fetch
+    # window's threads share the ring — slot leases are per-descriptor)
+    shm_state: str = "unknown"  # unknown | active | off
+    shm_channel: str = ""
+    shm_ring: Optional[ShmRing] = None
+    shm_lock: threading.Lock = field(default_factory=threading.Lock)
 
 
 class DataServiceClient:
@@ -157,6 +181,9 @@ class DataServiceClient:
         heartbeat_interval: float = 0.3,
         optimize: bool = True,
         trace_sample: float = 0.0,
+        shm: bool = True,
+        zero_copy: bool = False,
+        host_key: Optional[str] = None,
     ):
         self.client_id = new_id("client")
         self.metrics = ClientMetrics()
@@ -189,6 +216,15 @@ class DataServiceClient:
         # benchmark baseline and mixed-version deployment drills.
         self._prefer_batched = prefer_batched
         self._hb_interval = heartbeat_interval
+        # shm:// negotiation: enabled by default; rings are only attached to
+        # workers whose ping() host matches ours AND whose control channel is
+        # a real socket (inproc workers are already zero-copy).
+        self._shm_enabled = shm
+        # zero_copy=True hands out decoded views that BORROW the ring slot
+        # ("valid until the next element") instead of copying out — the
+        # DeviceFeeder path, where every element is device_put immediately.
+        self._zero_copy = zero_copy
+        self._host_key = host_key or socket.gethostname()
         self.negotiated_compression: Optional[str] = None
         # the dispatcher's autocache verdict for this job, once registered:
         # "compute" | "write_through" | "read" | None (autocache off)
@@ -379,14 +415,51 @@ class DataServiceClient:
                 self._active_fetchers -= 1
             self._maybe_finish()
 
+    def _negotiate_shm(self, handle: _TaskHandle, stub: Stub) -> None:
+        """Decide the task's data plane ONCE per handle (first fetcher wins).
+
+        shm:// is used only when (a) this session enables it, (b) the
+        worker's control channel is a real socket (inproc is already
+        zero-copy), and (c) the worker's advertised host matches ours.
+        Anything going wrong — old worker without the RPC, attach refusal,
+        segment unreachable — leaves the handle on the inline data plane;
+        negotiation never fails a fetch.
+        """
+        with handle.shm_lock:
+            if handle.shm_state != "unknown":
+                return
+            handle.shm_state = "off"
+            if not self._shm_enabled or self._m > 0:
+                return
+            if handle.worker_address.startswith("inproc://"):
+                return
+            try:
+                pong = stub.call("ping")
+                if not pong.get("shm") or pong.get("host") != self._host_key:
+                    return
+                resp = stub.call("shm_attach")
+                if not resp.get("ok"):
+                    return
+                ring = ShmRing.attach(resp["segment"])
+            except Exception:
+                return  # any failure: stay on the inline plane
+            handle.shm_ring = ring
+            handle.shm_channel = resp["channel"]
+            handle.shm_state = "active"
+            self.metrics.add(shm_tasks=1)
+
     def _fetch_loop(self, handle: _TaskHandle, stub: Stub) -> None:
         """One slot of the task's prefetch window.
 
         Prefers the batched ``get_elements`` RPC; demotes the whole task to
         the single-element v1 path when the worker reports an unknown
         method.  A transport failure marks the task failed — the dispatcher
-        notices the dead worker and re-lists tasks via heartbeat.
+        notices the dead worker and re-lists tasks via heartbeat (worker
+        churn also tears the shm ring down with the handle: the replacement
+        task renegotiates from scratch, so shm:// degrades to tcp://
+        mid-job without consumer-visible effect).
         """
+        self._negotiate_shm(handle, stub)
         backoff = 0.005
         while not self._closed.is_set() and not handle.done and not handle.failed:
             # per-element-batch sampling decision: unsampled fetches carry
@@ -406,6 +479,8 @@ class DataServiceClient:
                     if ctx is not None:
                         kw["trace"] = ctx.to_wire()
                     if handle.batched:
+                        if handle.shm_state == "active":
+                            kw["shm_channel"] = handle.shm_channel
                         resp = stub.call(
                             "get_elements",
                             max_batch=self._max_batch,
@@ -447,7 +522,7 @@ class DataServiceClient:
                     with self.tracer.span(
                         "client.decode", ctx, task_id=handle.task_id
                     ):
-                        elems = self._decode_batch(resp)
+                        elems = self._decode_batch(resp, handle)
                 except Exception as e:
                     # corrupt/undecodable frame (e.g. codec tag this process
                     # cannot handle): poison the task — permanently failed,
@@ -477,8 +552,16 @@ class DataServiceClient:
         self.metrics.add(bytes_received=resp.get("nbytes", 0))
         return elem
 
-    def _decode_batch(self, resp: Dict[str, Any]) -> List[Element]:
+    def _decode_batch(
+        self, resp: Dict[str, Any], handle: Optional[_TaskHandle] = None
+    ) -> List[Any]:
         """Decode a batched (v2) OR single-element (v1) OK response."""
+        if (
+            "shm_slot" in resp
+            and handle is not None
+            and handle.shm_ring is not None
+        ):
+            return self._decode_shm(resp, handle)
         if "batch_compressed" in resp:
             elems = decode_elements(decompress(resp["batch_compressed"]))
         elif "elements" in resp:
@@ -487,6 +570,35 @@ class DataServiceClient:
             return [self._decode(resp)]
         self.metrics.add(bytes_received=resp.get("nbytes", 0))
         return elems
+
+    def _decode_shm(
+        self, resp: Dict[str, Any], handle: _TaskHandle
+    ) -> List[Any]:
+        """Resolve a ring descriptor into elements.
+
+        Default: decode views out of the slot, deep-copy every element, and
+        release the lease immediately — callers can hold elements as long as
+        they like.  ``zero_copy=True``: the decoded arrays BORROW the slot
+        (read-only, no copy) and a ``_ShmRelease`` marker queued after the
+        batch frees the lease once the consumer has moved past it.
+        Compressed frames always copy (decompression materializes anyway).
+        """
+        ring = handle.shm_ring
+        slot = resp["shm_slot"]
+        view = ring.payload(slot, resp["shm_len"], resp.get("shm_seq"))
+        self.metrics.add(bytes_received=resp.get("nbytes", 0), shm_batches=1)
+        if resp.get("shm_codec"):
+            data = bytes(view)
+            ring.release(slot)
+            return decode_elements(decompress(data))
+        if self._zero_copy:
+            elems: List[Any] = list(decode_elements(view))
+            elems.append(_ShmRelease(ring, slot))
+            return elems
+        try:
+            return [copy_element(e) for e in decode_elements(view)]
+        finally:
+            ring.release(slot)
 
     def _enqueue(self, elem: Element) -> None:
         while not self._closed.is_set():
@@ -546,6 +658,11 @@ class DataServiceClient:
             self.metrics.add(stall_time=time.perf_counter() - t0)
             if item is self._END:
                 return
+            if isinstance(item, _ShmRelease):
+                # consumer has advanced past every element of the zero-copy
+                # batch that borrowed this slot: lease goes back to the worker
+                item.ring.release(item.slot)
+                continue
             if isinstance(item, _FetchError):
                 raise RuntimeError(
                     f"task {item.task_id}: undecodable response "
@@ -618,7 +735,27 @@ class DataServiceClient:
                 return
 
     def close(self) -> None:
+        first = not self._closed.is_set()
         self._closed.set()
+        if not first:
+            return
+        with self._tasks_lock:
+            handles = list(self._tasks.values())
+        for h in handles:
+            with h.shm_lock:
+                ring, channel = h.shm_ring, h.shm_channel
+                h.shm_ring, h.shm_channel, h.shm_state = None, "", "off"
+            if ring is None:
+                continue
+            try:
+                # best-effort: the worker unlinks the segment; if it is
+                # already gone it reclaims the ring at stop() instead
+                h.stub.call("shm_detach", channel=channel)
+            except Exception:
+                pass
+            # NOTE: no ring.close() here — fetcher threads may be mid-decode
+            # on a borrowed view; dropping the reference lets GC unmap once
+            # the last view dies (the worker owns the segment NAME).
 
 
 class DistributedDataset:
@@ -644,6 +781,9 @@ class DistributedDataset:
         max_batch: int = DEFAULT_MAX_BATCH,
         prefer_batched: bool = True,
         trace_sample: float = 0.0,
+        shm: bool = True,
+        zero_copy: bool = False,
+        host_key: Optional[str] = None,
     ):
         self._graph = graph
         address = getattr(service, "dispatcher_address", service)
@@ -667,6 +807,9 @@ class DistributedDataset:
             max_batch=max_batch,
             prefer_batched=prefer_batched,
             trace_sample=trace_sample,
+            shm=shm,
+            zero_copy=zero_copy,
+            host_key=host_key,
         )
         self.last_client: Optional[DataServiceClient] = None
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 
 @dataclass(frozen=True)
@@ -129,15 +129,30 @@ def resolve_codec(
     raise ValueError(f"unknown compression codec: {requested!r}")
 
 
-def compress(data: bytes, method: Optional[str]) -> bytes:
-    """Compress ``data`` with the named codec; output is tag-prefixed."""
+def compress(data: Any, method: Optional[str]) -> bytes:
+    """Compress ``data`` with the named codec; output is tag-prefixed.
+
+    ``data`` may be any bytes-like object (``bytes``, ``bytearray``,
+    ``memoryview`` — e.g. a borrowed shm ring-slot view); the output is
+    always ``bytes``.
+    """
     c = get_codec(method)
-    return c.tag + c.compress(data)
+    out = c.compress(data)
+    if not isinstance(out, bytes):  # identity codec echoes the input view
+        out = bytes(out)
+    return c.tag + out
 
 
-def decompress(data: bytes) -> bytes:
-    """Decompress a tag-prefixed frame produced by :func:`compress`."""
-    tag, body = data[:1], data[1:]
+def decompress(data: Any) -> bytes:
+    """Decompress a tag-prefixed frame produced by :func:`compress`.
+
+    Accepts any bytes-like input.  For ``bytes`` input the result is
+    ``bytes`` (unchanged contract); a ``memoryview``/``bytearray`` input
+    through the identity codec returns a view of the input rather than a
+    copy — downstream decode (``data.elements``) accepts either.
+    """
+    tag = bytes(data[:1])
+    body = data[1:]
     c = _BY_TAG.get(tag)
     if c is None:
         raise ValueError(f"unknown compression tag {tag!r}")

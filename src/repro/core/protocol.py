@@ -51,12 +51,48 @@ Data-plane methods exposed by workers:
   once; the response carries ``batch_compressed``.  Otherwise the response
   carries the raw ``elements`` list (zero-copy over ``inproc://``).
 
+  Shared-memory data plane: a co-located client that attached a ring (see
+  ``shm_attach`` below) passes ``shm_channel`` in the request.  When the
+  worker can serve the batch through the ring it encodes the frame directly
+  into a ring slot and the response carries a DESCRIPTOR instead of bytes:
+  ``shm_slot`` / ``shm_len`` / ``shm_seq`` (slot index, frame length,
+  commit sequence — validated by ``ShmRing.payload`` on the client), plus
+  ``shm_codec: True`` when the frame is a compressed blob rather than a raw
+  element frame.  Ring-full, oversized frames, or an unknown/detached
+  channel all degrade to the inline fields above on a per-response basis;
+  the client needs no special handling beyond "no ``shm_slot`` in response
+  means inline".
+
 Clients discover a v1-only worker by the unknown-method error and fall back
 to ``get_element`` for that task (see ``client.DataServiceClient``).
 
 Workers also answer two control-plane probes: ``ping`` (liveness + advertised
-data-plane version, used by the orchestrator at worker bring-up) and
-``stats`` (the worker-local metrics snapshot mirrored into heartbeats).
+data-plane version, used by the orchestrator at worker bring-up; the reply
+also carries ``host`` — the worker's host identity key — and ``shm`` — True
+when the worker can serve a shared-memory ring, i.e. it is not in-proc —
+which clients use to auto-negotiate the ``shm://`` data plane when
+co-located) and ``stats`` (the worker-local metrics snapshot mirrored into
+heartbeats).
+
+Shared-memory channel lifecycle (worker-side, negotiated per client task
+handle after a ``ping`` host match):
+
+* ``shm_attach`` — create a per-consumer ring segment.  Accepts optional
+  ``slots`` / ``slot_bytes`` geometry; returns ``{ok, channel, segment,
+  slots, slot_bytes}`` where ``segment`` is the ``/dev/shm`` name the
+  client attaches (the ``shm://`` descriptor) and ``channel`` is the opaque
+  id to pass in ``get_elements``.  Refused (``ok: False``) over in-proc
+  transport or past the per-worker channel cap; refusal just means the
+  client stays on the inline path.
+* ``shm_detach`` — drop a channel and unlink its segment; idempotent (an
+  unknown channel is a no-op ack), called best-effort at client close.
+  In-flight ``get_elements`` racing a detach degrade to inline.
+
+``register_worker`` note: the worker advertises its host identity as
+``tags["host"]`` (tags are NOT journaled — host identity is ephemeral by
+design, so a journal replayed on another machine never resurrects a stale
+co-location claim); clients compare it against their own host key only via
+``ping``, keeping the dispatcher out of the data-plane negotiation.
 
 Snapshot / materialization RPCs (dispatcher-side, see ``repro.snapshot``):
 

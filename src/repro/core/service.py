@@ -57,8 +57,12 @@ class LocalOrchestrator:
         crash_points: Optional[CrashPoints] = None,
         lease_timeout: float = 1.0,
         replication_interval: float = 0.05,
+        worker_processes: int = 0,
     ):
         self._transport = transport
+        # worker_processes=N runs each worker's pipelines in an N-child
+        # process pool (data.executors); 0 keeps the in-thread engine
+        self._worker_processes = worker_processes
         if journal and journal_path is None:
             journal_path = os.path.join(
                 tempfile.mkdtemp(prefix="repro-dispatcher-"), "journal.bin"
@@ -149,7 +153,15 @@ class LocalOrchestrator:
     # ------------------------------------------------------------------
     # Worker pool management (Autopilot-style horizontal scaling)
     # ------------------------------------------------------------------
-    def add_worker(self, tags: Optional[Dict[str, Any]] = None) -> Worker:
+    def add_worker(
+        self,
+        tags: Optional[Dict[str, Any]] = None,
+        worker_processes: Optional[int] = None,
+        host_key: Optional[str] = None,
+    ) -> Worker:
+        # host_key overrides the advertised co-location identity — lets a
+        # deployment (or test) model a worker on another host, which clients
+        # must reach over tcp:// even when it actually runs in this process.
         w = Worker(
             dispatcher_address=self.dispatcher_address,
             transport=self._transport,
@@ -157,6 +169,12 @@ class LocalOrchestrator:
             heartbeat_interval=self._worker_hb,
             cache_capacity=self._cache_capacity,
             tags=tags,
+            worker_processes=(
+                self._worker_processes
+                if worker_processes is None
+                else worker_processes
+            ),
+            host_key=host_key,
         ).start()
         try:
             # Readiness probe: a worker that answers ping has bound its

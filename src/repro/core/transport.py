@@ -12,10 +12,40 @@ and are reachable through an address:
   multiple calls on a single TCP connection").  A single generic unary RPC
   carries (method, pickled payload); uses grpcio's generic handler API so
   no .proto codegen is required.
+* ``shm://<segment>``   — data-plane-only ring descriptor (``core.shm_ring``):
+  names a shared-memory frame ring negotiated over an existing control
+  channel (the ``shm_attach`` RPC).  It carries no request/response channel,
+  so ``Stub`` refuses it with a ``TransportError`` explaining the contract.
 
-Client code uses ``Stub(address)`` and never sees the difference.  Transport
-errors surface as ``TransportError`` so callers can implement retry /
-failover (clients ride through dispatcher downtime, paper §3.4).
+Client code uses ``Stub(address)`` and never sees the difference.  Schemes
+are pluggable: :func:`register_scheme` maps a scheme name to a connection
+factory, so deployments can add transports without patching ``Stub``.
+
+Per-scheme error contract (what ``Stub.call`` raises)
+-----------------------------------------------------
+Uniform rule: **connection-level failures always surface as**
+``TransportError`` — never a raw ``OSError``/``socket.error``/``RpcError``
+— so every ``Backoff`` retry loop in the codebase triggers on exactly one
+exception type, for every scheme:
+
+==========  ===============================  ==============================
+scheme      connection loss / connect fail   remote handler exception
+==========  ===============================  ==============================
+inproc      ``TransportError`` (not bound)   propagates NATIVELY (same
+                                             process, same traceback)
+tcp         ``TransportError`` (wraps
+            ``OSError``, connect+send+recv,  ``TransportError`` carrying
+            malformed address, truncated     the remote ``repr``
+            stream)
+grpc        ``TransportError`` (wraps        ``TransportError`` carrying
+            ``RpcError``, missing grpcio,    the remote ``repr``
+            undecodable response)
+shm         ``TransportError`` always (data plane only — no call channel)
+==========  ===============================  ==============================
+
+A failed call drops the cached connection; the next call reconnects
+(simple failover).  Callers implement retry on ``TransportError``: clients
+ride through dispatcher downtime and mark worker tasks failed (§3.4).
 """
 from __future__ import annotations
 
@@ -95,6 +125,30 @@ class Backoff:
 
 
 # ---------------------------------------------------------------------------
+# Scheme registry: pluggable connection factories
+# ---------------------------------------------------------------------------
+# Maps scheme name -> factory(address, timeout) -> connection.  A connection
+# exposes ``call(method, payload) -> payload`` and ``close()``.  Factories
+# may raise anything; Stub wraps non-TransportError construction failures.
+# A connection with ``native_errors = True`` (inproc) opts out of Stub's
+# error wrapping: exceptions from the handler propagate to the caller with
+# their original type and traceback.
+_SCHEMES: Dict[str, Callable[[str, float], Any]] = {}
+
+
+def register_scheme(name: str, factory: Callable[[str, float], Any]) -> None:
+    """Register (or replace) a transport scheme's connection factory.
+
+    ``factory(address, timeout)`` receives the FULL address (including the
+    ``scheme://`` prefix) and the stub's per-call deadline, and returns a
+    connection object (``call``/``close``).  Registered names appear in
+    ``Stub``'s dispatch; replacing a built-in is allowed (tests inject
+    fault-y transports this way).
+    """
+    _SCHEMES[name] = factory
+
+
+# ---------------------------------------------------------------------------
 # In-process registry transport
 # ---------------------------------------------------------------------------
 class _InprocRegistry:
@@ -120,6 +174,29 @@ class _InprocRegistry:
 
 
 INPROC = _InprocRegistry()
+
+
+class _InprocConnection:
+    """Stateless 'connection' that dispatches into the inproc registry.
+
+    The handler lookup happens per call (not at construction) so a stub
+    built before its endpoint binds — or after a rebind — still resolves.
+    Handler exceptions propagate natively (``native_errors``): an inproc
+    call IS a function call, and masking e.g. a ``ValueError`` from the
+    dispatcher behind ``TransportError`` would break same-process callers
+    that branch on the real type.
+    """
+
+    native_errors = True
+
+    def __init__(self, address: str, timeout: float):
+        self._name = address[len("inproc://") :]
+
+    def call(self, method: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+        return INPROC.get(self._name).handle(method, payload)
+
+    def close(self) -> None:
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -290,13 +367,51 @@ class _GrpcConnection:
             )
         except self._grpc.RpcError as e:
             raise TransportError(f"grpc call {method} failed: {e.code()}")
-        status, result = pickle.loads(resp)
+        try:
+            status, result = pickle.loads(resp)
+        except Exception as e:  # truncated/garbage body: connection-level
+            raise TransportError(
+                f"grpc call {method}: undecodable response: {e!r}"
+            ) from e
         if status != "ok":
             raise TransportError(f"remote error from {method}: {result}")
         return result
 
     def close(self) -> None:
         self._channel.close()
+
+
+# ---------------------------------------------------------------------------
+# Built-in scheme registrations
+# ---------------------------------------------------------------------------
+def _tcp_factory(address: str, timeout: float) -> _TCPConnection:
+    hostport = address[len("tcp://") :]
+    try:
+        host, port_s = hostport.rsplit(":", 1)
+        port = int(port_s)
+    except ValueError as e:  # no colon / non-numeric port
+        raise TransportError(f"malformed tcp address {address!r}: {e}") from e
+    return _TCPConnection(host, port, timeout=timeout)
+
+
+def _grpc_factory(address: str, timeout: float) -> _GrpcConnection:
+    # _GrpcConnection's deferred ``import grpc`` (optional dep) and channel
+    # construction errors are wrapped by Stub's factory guard.
+    return _GrpcConnection(address[len("grpc://") :], timeout=timeout)
+
+
+def _shm_factory(address: str, timeout: float) -> Any:
+    raise TransportError(
+        f"shm:// is a data-plane descriptor, not a call channel: {address!r} "
+        "names a shared-memory frame ring (core.shm_ring) negotiated via the "
+        "shm_attach RPC on an existing tcp/grpc control connection"
+    )
+
+
+register_scheme("inproc", _InprocConnection)
+register_scheme("tcp", _tcp_factory)
+register_scheme("grpc", _grpc_factory)
+register_scheme("shm", _shm_factory)
 
 
 # ---------------------------------------------------------------------------
@@ -325,51 +440,51 @@ class Stub:
     def call(self, method: str, **payload: Any) -> Dict[str, Any]:
         """Invoke ``method`` on the remote handler and return its response.
 
-        Connections are opened lazily and dropped on error so the next call
-        reconnects (simple failover).  Raises ``TransportError`` on any
-        failure, including exceptions raised by the remote handler —
-        EXCEPT over ``inproc://``, where handler exceptions propagate
-        natively (same-process call).
+        Connections are opened lazily (via the scheme's registered factory)
+        and dropped on error so the next call reconnects (simple failover).
+        Per the module's error contract: every connection-level failure —
+        connect refused, malformed address, mid-call socket death, missing
+        optional transport package, undecodable response — surfaces as
+        ``TransportError``, never a raw ``OSError``; remote handler
+        exceptions also arrive as ``TransportError`` (carrying the remote
+        ``repr``) — EXCEPT over ``inproc://``, where handler exceptions
+        propagate natively (same-process call).
         """
-        if self.address.startswith("inproc://"):
-            handler = INPROC.get(self.address[len("inproc://") :])
-            return handler.handle(method, payload)
-        if self.address.startswith("grpc://"):
-            with self._lock:
-                if self._conn is None:
-                    self._conn = _GrpcConnection(
-                        self.address[len("grpc://") :], timeout=self.timeout
-                    )
-                conn = self._conn
-            try:
-                return conn.call(method, payload)
-            except TransportError:
-                with self._lock:
-                    if self._conn is conn:
-                        conn.close()
-                        self._conn = None
-                raise
-        if self.address.startswith("tcp://"):
-            hostport = self.address[len("tcp://") :]
-            host, port = hostport.rsplit(":", 1)
-            with self._lock:
-                if self._conn is None:
-                    try:
-                        self._conn = _TCPConnection(
-                            host, int(port), timeout=self.timeout
-                        )
-                    except OSError as e:
-                        raise TransportError(f"cannot connect to {self.address}: {e}")
-                conn = self._conn
-            try:
-                return conn.call(method, payload)
-            except (TransportError, OSError) as e:
-                with self._lock:
-                    if self._conn is conn:
-                        conn.close()
-                        self._conn = None
-                raise TransportError(str(e))
-        raise TransportError(f"unsupported address scheme: {self.address}")
+        scheme = self.address.split("://", 1)[0] if "://" in self.address else ""
+        factory = _SCHEMES.get(scheme)
+        if factory is None:
+            raise TransportError(f"unsupported address scheme: {self.address}")
+        with self._lock:
+            if self._conn is None:
+                try:
+                    self._conn = factory(self.address, self.timeout)
+                except TransportError:
+                    raise
+                except Exception as e:  # OSError, ImportError, bad address...
+                    raise TransportError(
+                        f"cannot connect to {self.address}: {e}"
+                    ) from e
+            conn = self._conn
+        if getattr(conn, "native_errors", False):
+            return conn.call(method, payload)
+        try:
+            return conn.call(method, payload)
+        except TransportError:
+            self._drop(conn)
+            raise
+        except (OSError, EOFError, pickle.UnpicklingError) as e:
+            self._drop(conn)
+            raise TransportError(str(e)) from e
+
+    def _drop(self, conn: Any) -> None:
+        """Discard a failed connection so the next call reconnects."""
+        with self._lock:
+            if self._conn is conn:
+                try:
+                    conn.close()
+                except Exception:
+                    pass
+                self._conn = None
 
     def close(self) -> None:
         """Drop the cached connection (if any); the stub stays usable."""

@@ -18,6 +18,7 @@ it never persists local state (paper §3.4).
 from __future__ import annotations
 
 import logging
+import socket
 import threading
 import time
 from collections import deque
@@ -25,10 +26,13 @@ from typing import Any, Dict, Iterator, List, Optional, Set, Tuple, Type
 
 from ..data.elements import (
     Element,
+    FrameTooLarge,
     element_nbytes,
     encode_element,
     encode_elements,
+    encode_elements_into,
 )
+from ..data.executors import make_executor
 from ..data.graph import Graph
 from ..data.iterators import ExecContext, build_iterator
 from ..obs.profiling import attribute_stalls, merge_profiles, profile_ops
@@ -37,6 +41,12 @@ from ..obs.tracing import TraceContext, Tracer
 from ..snapshot.format import ChunkRecord
 from ..snapshot.writer import StreamReassigned, StreamWriter
 from .cache import SlidingWindowCache
+from .shm_ring import (
+    DEFAULT_SLOT_BYTES,
+    DEFAULT_SLOTS,
+    ShmRing,
+    ShmRingError,
+)
 from .protocol import (
     DATA_PLANE_VERSION,
     DEFAULT_MAX_BATCH,
@@ -163,49 +173,67 @@ class _BufferedRunner(_TaskRunner):
     def _iterate(self) -> Iterator[Element]:
         graph = Graph.from_bytes(self._spec["graph_bytes"])
         policy = ShardingPolicy(self._spec["policy"])
+        executor = self._worker._executor
+        tid = self._spec.get("task_id", "")
         if policy == ShardingPolicy.STATIC:
-            for shard in self._spec.get("static_shards") or []:
+            for k, shard in enumerate(self._spec.get("static_shards") or []):
                 g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"])
-                yield from build_iterator(g, self._new_ctx())
+                # per-shard affinity: every element of static shard k comes
+                # from the same executor lane, preserving in-thread ordering
+                for _seq, elem in executor.iterate(
+                    g, self._new_ctx(), affinity=f"{tid}/{k}"
+                ):
+                    yield elem
         else:  # OFF: whole dataset, worker-specific order
             g = graph.bind_seed(self._spec["worker_seed"])
-            yield from build_iterator(g, self._new_ctx())
+            for _seq, elem in executor.iterate(
+                g, self._new_ctx(), affinity=tid or "off"
+            ):
+                yield elem
 
     def _produce(self) -> None:
-        tracer = self._worker.tracer
-        last = time.perf_counter()
         try:
-            for elem in self._iterate():
-                t0 = time.perf_counter()
-                with self._cond:
-                    while len(self._buffer) >= self._buffer_size:
-                        if self._worker._stopping.is_set() or self._stopped.is_set():
-                            return
-                        self._cond.wait(timeout=0.1)
-                    self._buffer.append(elem)
-                    self._cond.notify_all()
-                self._worker.metrics.add(
-                    batches_produced=1, busy_time=time.perf_counter() - t0
-                )
-                if self._trace is not None and tracer.should_sample(self._trace.sample):
-                    # pipeline-execution span: production time of this
-                    # element (iterator pull), excluding the buffer wait
-                    dur = t0 - last
-                    tracer.record(
-                        "worker.pipeline",
-                        self._trace.child(),
-                        time.time() - dur,
-                        dur,
-                        parent_id=self._trace.span_id,
-                        task_id=self._spec.get("task_id"),
-                    )
-                last = time.perf_counter()
-                if self._stopped.is_set():
-                    return
+            self._pump(self._iterate())
+        except Exception as e:  # pipeline failure: surface, then finish
+            self._worker._note_error(
+                f"task {self._spec.get('task_id')} pipeline", e
+            )
         finally:
             with self._cond:
                 self._done = True
                 self._cond.notify_all()
+
+    def _pump(self, elements: Iterator[Element]) -> None:
+        """Drive one element stream into the shared bounded buffer."""
+        tracer = self._worker.tracer
+        last = time.perf_counter()
+        for elem in elements:
+            t0 = time.perf_counter()
+            with self._cond:
+                while len(self._buffer) >= self._buffer_size:
+                    if self._worker._stopping.is_set() or self._stopped.is_set():
+                        return
+                    self._cond.wait(timeout=0.1)
+                self._buffer.append(elem)
+                self._cond.notify_all()
+            self._worker.metrics.add(
+                batches_produced=1, busy_time=time.perf_counter() - t0
+            )
+            if self._trace is not None and tracer.should_sample(self._trace.sample):
+                # pipeline-execution span: production time of this
+                # element (iterator pull), excluding the buffer wait
+                dur = t0 - last
+                tracer.record(
+                    "worker.pipeline",
+                    self._trace.child(),
+                    time.time() - dur,
+                    dur,
+                    parent_id=self._trace.span_id,
+                    task_id=self._spec.get("task_id"),
+                )
+            last = time.perf_counter()
+            if self._stopped.is_set():
+                return
 
     def get(self, job_id: str, round_index: int, consumer_index: int):
         with self._cond:
@@ -268,8 +296,46 @@ class _DynamicRunner(_BufferedRunner):
     def __init__(self, worker: "Worker", spec: Dict[str, Any], buffer_size: int):
         # watermarks must exist before the base ctor starts the producer
         self._delivered: Dict[int, int] = {}  # shard_id -> delivered offset
-        self._active_shard: Optional[int] = None
+        # shards currently mid-production, one per pump thread (the pool
+        # executor runs several shard streams concurrently)
+        self._active_shards: Set[int] = set()
+        # serializes get_shard hand-out + _active_shards registration across
+        # pump threads: a concurrent get_shard whose `holding` snapshot
+        # misses a shard another pump just accepted would trick the
+        # dispatcher's reconciliation into re-queuing it (duplicates)
+        self._shard_lock = threading.Lock()
         super().__init__(worker, spec, buffer_size)
+
+    def _produce(self) -> None:
+        # With a process-pool engine the GIL no longer serializes pipeline
+        # work, so run one shard pump per executor lane: each pump pulls its
+        # own shards FCFS and pushes into the shared bounded buffer.  Width 1
+        # (in-thread engine) keeps the paper's single sequential stream.
+        width = max(1, int(getattr(self._worker._executor, "width", 1)))
+        if width <= 1:
+            super()._produce()
+            return
+        pumps = [
+            threading.Thread(
+                target=self._pump_guarded, daemon=True, name=f"dyn-pump-{i}"
+            )
+            for i in range(width)
+        ]
+        for t in pumps:
+            t.start()
+        for t in pumps:
+            t.join()
+        with self._cond:
+            self._done = True
+            self._cond.notify_all()
+
+    def _pump_guarded(self) -> None:
+        try:
+            self._pump(self._iterate())
+        except Exception as e:
+            self._worker._note_error(
+                f"task {self._spec.get('task_id')} pipeline", e
+            )
 
     def _iterate(self) -> Iterator[Element]:
         graph = Graph.from_bytes(self._spec["graph_bytes"])
@@ -277,17 +343,33 @@ class _DynamicRunner(_BufferedRunner):
         wid = self._worker.worker_id
         backoff = Backoff(base=0.05, cap=1.0)
         while not self._worker._stopping.is_set() and not self._stopped.is_set():
-            try:
-                resp = self._worker._dispatcher.call(
-                    "get_shard",
-                    job_id=job_id,
-                    worker_id=wid,
-                    # shard ids we journaled-but-unacked completions for: lets
-                    # a freshly promoted dispatcher re-queue assignments whose
-                    # response died with the old primary (we never got them)
-                    holding=self._held_shards(job_id),
-                )
-            except TransportError:
+            # the lock spans RPC -> _active_shards registration: the holding
+            # snapshot must be consistent with what the dispatcher journals,
+            # or a concurrent pump's snapshot re-queues this grant
+            with self._shard_lock:
+                try:
+                    # The lock is per-job, per-worker, and holding it across
+                    # the (timeout-bounded) RPC is the whole point: sibling
+                    # pumps must not snapshot `holding` mid-grant.
+                    # analysis: allow(D001, L003)
+                    resp = self._worker._dispatcher.call(
+                        "get_shard",
+                        job_id=job_id,
+                        worker_id=wid,
+                        # shard ids we hold: mid-production on any pump, plus
+                        # journaled-but-unacked completions — lets a freshly
+                        # promoted dispatcher re-queue ONLY assignments whose
+                        # response died with the old primary (never received)
+                        holding=self._held_shards(job_id),
+                    )
+                except TransportError:
+                    resp = None
+                else:
+                    if not resp.get("done") and not resp.get("wait"):
+                        sid = resp["shard_id"]
+                        self._delivered.setdefault(sid, resp.get("offset", 0))
+                        self._active_shards.add(sid)
+            if resp is None:
                 # dispatcher down: no NEW shards can be handed out, but we keep
                 # serving what we have (paper §3.4) — retry with jittered
                 # backoff so a worker fleet doesn't stampede the standby.
@@ -300,15 +382,20 @@ class _DynamicRunner(_BufferedRunner):
                 time.sleep(0.05)
                 continue
             sid, shard, offset = resp["shard_id"], resp["shard"], resp.get("offset", 0)
-            self._delivered.setdefault(sid, offset)
-            self._active_shard = sid
             g = graph.bind_shard(shard).bind_seed(self._spec["worker_seed"] + sid)
             produced = 0
-            for i, elem in enumerate(build_iterator(g, self._new_ctx())):
-                if i < offset:  # resume after checkpointed prefix
-                    continue
+            # shard affinity `{job}/{sid}` pins this shard's whole element
+            # stream to one executor lane: per-stream seed + resume offset
+            # behave exactly as in-thread.  The executor skips the resumed
+            # prefix at the source and yields the absolute offset (i+1).
+            for abs_off, elem in self._worker._executor.iterate(
+                g,
+                self._new_ctx(),
+                affinity=f"{job_id}/{sid}",
+                offset=offset,
+            ):
                 produced += 1
-                yield (elem, sid, i + 1)  # get()/get_many() strip the tag
+                yield (elem, sid, abs_off)  # get()/get_many() strip the tag
                 if (
                     self._spec.get("resume_offsets")
                     and produced % self.CHECKPOINT_EVERY == 0
@@ -323,10 +410,13 @@ class _DynamicRunner(_BufferedRunner):
                         worker_id=wid,
                         offset=self._delivered[sid],
                     )
-            self._active_shard = None
+            # complete BEFORE dropping from _active_shards: between the two,
+            # another pump's get_shard must still report this shard as held
+            # (a lost completion ack re-enters via _pending_control instead)
             self._try_call(
                 "complete_shard", job_id=job_id, shard_id=sid, worker_id=wid
             )
+            self._active_shards.discard(sid)
 
     def _unwrap(self, entry: Any) -> Element:
         elem, sid, off = entry
@@ -345,36 +435,39 @@ class _DynamicRunner(_BufferedRunner):
 
     def stop(self) -> None:
         super().stop()
-        sid = self._active_shard
-        if sid is not None and self._spec.get("resume_offsets"):
+        if self._spec.get("resume_offsets"):
             # Pruned mid-shard (task retirement): file one final offset
-            # truth-report through the redelivery queue.  It drains on the
-            # next heartbeat — before the dispatcher's second-heartbeat
-            # reclaim — so the re-queue resumes at exactly the delivered
-            # position even though checkpoints sent while the dispatcher
-            # was down were dropped.
-            self._worker._pending_control.append(
-                (
-                    "checkpoint_offset",
-                    {
-                        "job_id": self._spec["job_id"],
-                        "shard_id": sid,
-                        "worker_id": self._worker.worker_id,
-                        "offset": self._delivered.get(sid, 0),
-                    },
+            # truth-report per in-flight shard through the redelivery
+            # queue.  It drains on the next heartbeat — before the
+            # dispatcher's second-heartbeat reclaim — so the re-queue
+            # resumes at exactly the delivered position even though
+            # checkpoints sent while the dispatcher was down were dropped.
+            for sid in sorted(self._active_shards):
+                self._worker._pending_control.append(
+                    (
+                        "checkpoint_offset",
+                        {
+                            "job_id": self._spec["job_id"],
+                            "shard_id": sid,
+                            "worker_id": self._worker.worker_id,
+                            "offset": self._delivered.get(sid, 0),
+                        },
+                    )
                 )
-            )
 
     def _held_shards(self, job_id: str) -> List[int]:
-        """Shard ids this worker finished but has not had acknowledged yet
-        (queued ``complete_shard`` redeliveries).  At get_shard time there is
-        no in-process shard, so these ARE the shards the dispatcher may
-        still see as assigned to us that must NOT be re-queued."""
-        return [
+        """Shard ids the dispatcher may see as assigned to us that must NOT
+        be re-queued: shards mid-production on any pump thread
+        (``_active_shards`` — with a process-pool executor several run
+        concurrently) plus shards finished but not yet acknowledged (queued
+        ``complete_shard`` redeliveries)."""
+        held = set(self._active_shards)
+        held.update(
             kw["shard_id"]
             for (m, kw) in list(self._worker._pending_control)
             if m == "complete_shard" and kw.get("job_id") == job_id
-        ]
+        )
+        return sorted(held)
 
     def _try_call(self, method: str, **kw: Any) -> None:
         try:
@@ -596,7 +689,16 @@ class _SnapshotStreamRunner:
                 g = graph.bind_shard(shard).bind_seed(sp["seed"])
                 ctx = ExecContext()
                 self._ctxs.append(ctx)  # retained for op profiling
-                for elem in build_iterator(g, ctx):
+                # stream affinity: the whole stream (all its shards) runs on
+                # one executor lane — per-STREAM seeding stays intact, so a
+                # pooled worker re-produces the byte-identical sequence an
+                # in-thread one would.  The committed-prefix skip stays
+                # parent-side: `produced` must count EVERY element.
+                for _seq, elem in self._worker._executor.iterate(
+                    g,
+                    ctx,
+                    affinity=f"snap/{sp['snapshot_id']}/{sp['stream_id']}",
+                ):
                     if self._should_stop():
                         self.writer.abort()
                         self.status = "stopped"
@@ -648,11 +750,22 @@ class Worker:
         heartbeat_interval: float = 0.5,
         cache_capacity: int = 16,
         tags: Optional[Dict[str, Any]] = None,
+        worker_processes: int = 0,
+        host_key: Optional[str] = None,
     ):
         self.worker_id = worker_id or new_id("worker")
         self.registry = MetricsRegistry()
         self.metrics = WorkerMetrics(self.registry)
         self.tracer = Tracer(process=f"worker:{self.worker_id}")
+        # worker_processes=0 keeps the paper's in-thread engine; N>=1 runs
+        # pipelines in a pool of N forked children (data.executors)
+        self._executor = make_executor(worker_processes)
+        # host identity for client-side shm:// co-location detection;
+        # advertised in register_worker tags and the ping response
+        self._host_key = host_key or socket.gethostname()
+        # shm data-plane channels negotiated by co-located clients:
+        # channel_id -> owned ShmRing (created by rpc_shm_attach)
+        self._shm_channels: Dict[str, ShmRing] = {}
         self._cache_ctxs: Dict[str, ExecContext] = {}
         # rolling per-op rollup of pruned (finished) tasks, so the stall
         # report still names the bottleneck after a job completes; merged
@@ -663,7 +776,10 @@ class Worker:
         self._buffer_size = buffer_size
         self._hb_interval = heartbeat_interval
         self._cache_capacity = cache_capacity
-        self._tags = tags or {}
+        # host rides in tags (NOT journaled beyond worker_id/address — the
+        # dispatcher keeps tags in memory only) so list_workers/negotiation
+        # can see where each worker runs; explicit user tags win on clash
+        self._tags = {"host": self._host_key, **(tags or {})}
         self._tasks: Dict[str, _TaskRunner] = {}
         self._task_specs: Dict[str, Dict[str, Any]] = {}
         self._caches: Dict[str, SlidingWindowCache] = {}
@@ -718,6 +834,8 @@ class Worker:
             self._tcp.stop()
         elif self.address:
             INPROC.unbind(self.worker_id)
+        self._executor.stop()
+        self._release_shm_channels()
 
     def fail(self) -> None:
         """Simulate a crash: stop serving and heartbeating WITHOUT dispatcher
@@ -728,6 +846,21 @@ class Worker:
             self._tcp.stop()
         elif self.address:
             INPROC.unbind(self.worker_id)
+        # a real crash takes the executor children and /dev/shm segments
+        # with it (process death / OS reclaim); emulate that here so the
+        # simulated crash leaks neither
+        self._executor.stop()
+        self._release_shm_channels()
+
+    def _release_shm_channels(self) -> None:
+        """Close + unlink every owned shm ring (attached clients keep their
+        mappings alive until they release; the NAME disappears now)."""
+        with self._lock:
+            rings = list(self._shm_channels.values())
+            self._shm_channels.clear()
+        for ring in rings:
+            ring.close()
+            ring.unlink()
 
     # ------------------------------------------------------------------
     # Task management
@@ -935,11 +1068,119 @@ class Worker:
         return fn(**payload)
 
     def rpc_ping(self) -> Dict[str, Any]:
-        """Liveness + data-plane version probe (used at worker bring-up)."""
+        """Liveness + data-plane version probe (used at worker bring-up and
+        by clients negotiating the shm:// data plane: ``host`` is compared
+        against the client's own host key, ``shm`` says whether this worker
+        can serve ring descriptors at all)."""
         return {
             "worker_id": self.worker_id,
             "data_plane_version": DATA_PLANE_VERSION,
+            "host": self._host_key,
+            "shm": not self._transport.startswith("inproc"),
         }
+
+    # maximum rings one worker will own at a time: each co-located client
+    # session holds one per fetched task, so this bounds /dev/shm usage
+    # under a pathological client that attaches without detaching
+    MAX_SHM_CHANNELS = 64
+
+    def rpc_shm_attach(
+        self,
+        slots: int = DEFAULT_SLOTS,
+        slot_bytes: int = DEFAULT_SLOT_BYTES,
+    ) -> Dict[str, Any]:
+        """Create one shm ring for a co-located client (data plane v2+shm).
+
+        Returns ``{ok, channel, segment, slots, slot_bytes}``; the client
+        attaches to ``segment`` and passes ``channel`` on every
+        ``get_elements`` call that should answer with a ring descriptor.
+        Refusals (``ok=False``) mean "use the inline data plane": worker at
+        channel capacity, oversize geometry, or shm unavailable.
+        """
+        if self._stopping.is_set():
+            return {"ok": False, "error": "worker stopping"}
+        try:
+            with self._lock:
+                if len(self._shm_channels) >= self.MAX_SHM_CHANNELS:
+                    return {"ok": False, "error": "shm channel limit reached"}
+            ring = ShmRing.create(slots=int(slots), slot_bytes=int(slot_bytes))
+        except (ShmRingError, OSError, ValueError) as e:
+            return {"ok": False, "error": repr(e)}
+        channel = new_id("shmch")
+        with self._lock:
+            self._shm_channels[channel] = ring
+        return {
+            "ok": True,
+            "channel": channel,
+            "segment": ring.name,
+            "slots": ring.slots,
+            "slot_bytes": ring.slot_bytes,
+        }
+
+    def rpc_shm_detach(self, channel: str) -> Dict[str, Any]:
+        """Tear down a ring created by ``shm_attach`` (client session end).
+
+        Idempotent; unknown channels are fine (the worker may have released
+        them already at stop()).  Segments of channels never detached are
+        reclaimed when the worker stops — the client side only loses the
+        fast path, never data.
+        """
+        with self._lock:
+            ring = self._shm_channels.pop(channel, None)
+        if ring is not None:
+            ring.close()
+            ring.unlink()
+        return {"ok": True}
+
+    def _shm_serve(
+        self,
+        out: Dict[str, Any],
+        channel: str,
+        elems: List[Element],
+        compression: Optional[str],
+    ) -> bool:
+        """Try to answer a fetch via the shm ring; False means go inline.
+
+        Zero-copy path (no codec): the batch frame is encoded straight into
+        the leased slot (no intermediate ``bytes``).  Compressed path: the
+        frame is built and compressed in memory, then copied into the slot —
+        still one socket payload saved, but the client must copy out to
+        decompress, so ``shm_codec`` rides in the descriptor.
+        """
+        with self._lock:
+            ring = self._shm_channels.get(channel)
+        if ring is None:
+            return False
+        slot = ring.try_acquire()
+        if slot is None:  # ring full: consumer behind (or leases lost)
+            return False
+        try:
+            view = ring.slot_view(slot)
+            if compression:
+                try:
+                    frame = compress(encode_elements(elems), compression)
+                except ValueError:
+                    frame = compress(encode_elements(elems), None)
+                if len(frame) > ring.slot_bytes:
+                    raise FrameTooLarge(len(frame))
+                view[: len(frame)] = frame
+                length = len(frame)
+                out["shm_codec"] = True
+            else:
+                length = encode_elements_into(elems, view)
+        except FrameTooLarge:
+            ring.cancel(slot)
+            out.pop("shm_codec", None)
+            return False
+        except Exception as e:  # never poison the fetch path: go inline
+            ring.cancel(slot)
+            out.pop("shm_codec", None)
+            self._note_error("shm serve", e)
+            return False
+        out["shm_slot"] = slot
+        out["shm_len"] = length
+        out["shm_seq"] = ring.commit(slot, length)
+        return True
 
     def rpc_get_elements(
         self,
@@ -947,6 +1188,7 @@ class Worker:
         job_id: str = "",
         max_batch: int = DEFAULT_MAX_BATCH,
         timeout: float = 0.0,
+        shm_channel: str = "",
         trace: Optional[Dict[str, Any]] = None,
     ) -> Dict[str, Any]:
         """Batched fetch (data plane v2): drain up to ``max_batch`` elements.
@@ -955,6 +1197,14 @@ class Worker:
         for the FIRST element before answering PENDING, sparing the client a
         retry/backoff round trip.  With a negotiated codec the whole batch
         is one compressed frame (compressed once, worker-side).
+
+        ``shm_channel`` (from ``shm_attach``) asks for a ring descriptor:
+        when a slot is free and the frame fits, the batch is encoded
+        directly into shared memory and the response carries
+        ``shm_slot``/``shm_len``/``shm_seq`` (plus ``shm_codec`` when the
+        frame is compressed) instead of inline bytes.  Ring full, frame too
+        large, or unknown channel all degrade to the inline payload — the
+        caller never has to retry.
 
         ``trace`` is present only on SAMPLED fetches (client-minted span
         context): the unsampled hot path pays exactly one None check.
@@ -978,11 +1228,16 @@ class Worker:
             nbytes = sum(element_nbytes(e) for e in elems)
             self.metrics.add(batches_served=len(elems), bytes_served=nbytes)
             out["nbytes"] = nbytes
-            if spec and spec.get("compression"):
+            compression = spec.get("compression") if spec else None
+            if shm_channel and self._shm_serve(
+                out, shm_channel, elems, compression
+            ):
+                pass  # descriptor is in `out`; nothing travels inline
+            elif compression:
                 e0 = time.perf_counter()
                 encoded = encode_elements(elems)
                 try:
-                    frame = compress(encoded, spec["compression"])
+                    frame = compress(encoded, compression)
                 except ValueError:
                     # the negotiated codec is not in THIS worker's registry
                     # (heterogeneous pool): ship uncompressed rather than
@@ -998,7 +1253,7 @@ class Worker:
                         dur,
                         parent_id=sctx.span_id,
                         nbytes=nbytes,
-                        codec=spec["compression"],
+                        codec=compression,
                     )
                 out["batch_compressed"] = frame
             else:

@@ -10,6 +10,16 @@ Serialization uses a small self-describing binary format (length-prefixed
 msgpack with a raw-buffer extension for ndarrays) so that client/worker
 processes do not need to share a pickle codebase version.  Pickle remains
 available as a fallback codec for exotic payloads.
+
+Zero-copy framing (the ``shm://`` data plane): :func:`encode_elements_into`
+writes a frame *directly into a caller-provided buffer* (a shared-memory
+ring slot) with no intermediate ``bytes`` object — ndarray payloads are one
+``memoryview`` copy into the slot.  Such frames carry the ``R`` (raw
+structured) element tag; :func:`decode_elements` over a ``memoryview``
+decodes them into ndarray *views borrowing the underlying buffer* (readers
+hand out buffer views; see ``core.shm_ring`` for the lease protocol).  The
+``R`` tag never appears in persisted data (snapshots keep the ``M``/``P``
+encoders byte-for-byte unchanged).
 """
 from __future__ import annotations
 
@@ -34,8 +44,9 @@ _NDARRAY_EXT = 42
 
 def _pack_ndarray(arr: np.ndarray) -> bytes:
     """Header (dtype, shape) + raw bytes. C-contiguous copy if needed."""
+    shape = arr.shape  # before ascontiguousarray: it promotes 0-d to (1,)
     arr = np.ascontiguousarray(arr)
-    header = msgpack.packb((arr.dtype.str, arr.shape), use_bin_type=True)
+    header = msgpack.packb((arr.dtype.str, shape), use_bin_type=True)
     return struct.pack("<I", len(header)) + header + arr.tobytes()
 
 
@@ -73,13 +84,245 @@ def encode_element(elem: Element, codec: str = "msgpack") -> bytes:
     return b"P" + pickle.dumps(elem, protocol=pickle.HIGHEST_PROTOCOL)
 
 
-def decode_element(data: bytes) -> Element:
-    tag, body = data[:1], data[1:]
+def decode_element(data: Any) -> Element:
+    """Decode one element from any bytes-like buffer.
+
+    ``bytes``/``bytearray``/``memoryview`` are all accepted; ``R``-tagged
+    elements decoded from a ``memoryview`` yield ndarray views that BORROW
+    the buffer (zero copy) — callers owning a transient buffer (a shm ring
+    slot) must keep it alive until the views are dead or copy them out.
+    """
+    tag = bytes(data[:1])
+    body = data[1:]
     if tag == b"M":
         return msgpack.unpackb(body, ext_hook=_ext_hook, raw=False, strict_map_key=False)
     if tag == b"P":
         return pickle.loads(body)
+    if tag == b"R":
+        mv = body if isinstance(body, memoryview) else memoryview(bytes(body))
+        val, _ = _r_decode(mv, 0)
+        return val
     raise ValueError(f"unknown element codec tag {tag!r}")
+
+
+# ---------------------------------------------------------------------------
+# Raw structured encoding (tag ``R``): buffer-direct, zero-copy decodable
+# ---------------------------------------------------------------------------
+class FrameTooLarge(ValueError):
+    """A frame does not fit the destination buffer (fall back inline)."""
+
+
+class _NotRaw(Exception):
+    """Element not representable in the raw format (use msgpack/pickle)."""
+
+
+_R_NDARRAY, _R_DICT, _R_LIST, _R_TUPLE = 1, 2, 3, 4
+_R_BOOL, _R_INT, _R_FLOAT, _R_NONE, _R_STR, _R_BYTES = 5, 6, 7, 8, 9, 10
+
+
+def _need(buf: memoryview, off: int, n: int) -> None:
+    if off + n > len(buf):
+        raise FrameTooLarge(f"frame needs {off + n} bytes, slot has {len(buf)}")
+
+
+def _r_encode(elem: Any, buf: memoryview, off: int) -> int:
+    """Write ``elem`` into ``buf`` at ``off``; returns the end offset."""
+    if isinstance(elem, np.ndarray):
+        if elem.dtype.hasobject or elem.dtype.names:
+            raise _NotRaw
+        shape = elem.shape  # before ascontiguousarray: it promotes 0-d to (1,)
+        arr = np.ascontiguousarray(elem)
+        ds = arr.dtype.str.encode("ascii")
+        ndim = len(shape)
+        if len(ds) > 255 or ndim > 255:
+            raise _NotRaw
+        head = 1 + 1 + len(ds) + 1 + 4 * ndim
+        _need(buf, off, head + arr.nbytes)
+        struct.pack_into("<BB", buf, off, _R_NDARRAY, len(ds))
+        off += 2
+        buf[off : off + len(ds)] = ds
+        off += len(ds)
+        struct.pack_into("<B", buf, off, ndim)
+        off += 1
+        for d in shape:
+            struct.pack_into("<I", buf, off, d)
+            off += 4
+        if arr.nbytes:
+            buf[off : off + arr.nbytes] = arr.data.cast("B")
+        return off + arr.nbytes
+    if isinstance(elem, (bool, np.bool_)):  # before int: bool <: int
+        _need(buf, off, 2)
+        struct.pack_into("<BB", buf, off, _R_BOOL, 1 if elem else 0)
+        return off + 2
+    if isinstance(elem, (int, np.integer)):
+        v = int(elem)
+        if not -(2**63) <= v < 2**63:
+            raise _NotRaw
+        _need(buf, off, 9)
+        struct.pack_into("<Bq", buf, off, _R_INT, v)
+        return off + 9
+    if isinstance(elem, (float, np.floating)):
+        _need(buf, off, 9)
+        struct.pack_into("<Bd", buf, off, _R_FLOAT, float(elem))
+        return off + 9
+    if elem is None:
+        _need(buf, off, 1)
+        struct.pack_into("<B", buf, off, _R_NONE)
+        return off + 1
+    if isinstance(elem, str):
+        b = elem.encode("utf-8")
+        _need(buf, off, 5 + len(b))
+        struct.pack_into("<BI", buf, off, _R_STR, len(b))
+        buf[off + 5 : off + 5 + len(b)] = b
+        return off + 5 + len(b)
+    if isinstance(elem, (bytes, bytearray)):
+        _need(buf, off, 5 + len(elem))
+        struct.pack_into("<BI", buf, off, _R_BYTES, len(elem))
+        buf[off + 5 : off + 5 + len(elem)] = bytes(elem)
+        return off + 5 + len(elem)
+    if isinstance(elem, Mapping):
+        items = list(elem.items())
+        if not all(isinstance(k, str) for k, _ in items):
+            raise _NotRaw
+        _need(buf, off, 5)
+        struct.pack_into("<BI", buf, off, _R_DICT, len(items))
+        off += 5
+        for k, v in items:
+            kb = k.encode("utf-8")
+            if len(kb) > 0xFFFF:
+                raise _NotRaw
+            _need(buf, off, 2 + len(kb))
+            struct.pack_into("<H", buf, off, len(kb))
+            buf[off + 2 : off + 2 + len(kb)] = kb
+            off = _r_encode(v, buf, off + 2 + len(kb))
+        return off
+    if isinstance(elem, (list, tuple)):
+        _need(buf, off, 5)
+        struct.pack_into(
+            "<BI", buf, off, _R_LIST if isinstance(elem, list) else _R_TUPLE, len(elem)
+        )
+        off += 5
+        for v in elem:
+            off = _r_encode(v, buf, off)
+        return off
+    raise _NotRaw
+
+
+def _r_decode(buf: memoryview, off: int) -> Tuple[Any, int]:
+    (kind,) = struct.unpack_from("<B", buf, off)
+    off += 1
+    if kind == _R_NDARRAY:
+        (dslen,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        dt = np.dtype(bytes(buf[off : off + dslen]).decode("ascii"))
+        off += dslen
+        (ndim,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        shape = []
+        for _ in range(ndim):
+            (d,) = struct.unpack_from("<I", buf, off)
+            shape.append(d)
+            off += 4
+        nbytes = dt.itemsize * int(np.prod(shape, dtype=np.int64)) if shape else dt.itemsize
+        arr = np.frombuffer(buf[off : off + nbytes], dtype=dt).reshape(shape)
+        # the view may borrow writable (shared) memory; readers must not
+        # scribble on the producer's ring slot through it
+        arr.flags.writeable = False
+        return arr, off + nbytes
+    if kind == _R_BOOL:
+        (v,) = struct.unpack_from("<B", buf, off)
+        return bool(v), off + 1
+    if kind == _R_INT:
+        (v,) = struct.unpack_from("<q", buf, off)
+        return v, off + 8
+    if kind == _R_FLOAT:
+        (v,) = struct.unpack_from("<d", buf, off)
+        return v, off + 8
+    if kind == _R_NONE:
+        return None, off
+    if kind == _R_STR:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        return bytes(buf[off : off + n]).decode("utf-8"), off + n
+    if kind == _R_BYTES:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        return bytes(buf[off : off + n]), off + n
+    if kind == _R_DICT:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        d: Dict[str, Any] = {}
+        for _ in range(n):
+            (kl,) = struct.unpack_from("<H", buf, off)
+            off += 2
+            k = bytes(buf[off : off + kl]).decode("utf-8")
+            off += kl
+            d[k], off = _r_decode(buf, off)
+        return d, off
+    if kind in (_R_LIST, _R_TUPLE):
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        vals = []
+        for _ in range(n):
+            v, off = _r_decode(buf, off)
+            vals.append(v)
+        return (vals if kind == _R_LIST else tuple(vals)), off
+    raise ValueError(f"unknown raw element kind {kind}")
+
+
+def encode_element_into(elem: Element, buf: memoryview, off: int = 0) -> int:
+    """Encode one element directly into ``buf`` at ``off``; returns end.
+
+    Prefers the raw structured format (tag ``R``: one ``memoryview`` copy
+    per ndarray, zero-copy decodable); payloads it cannot represent fall
+    back to :func:`encode_element` bytes copied in.  Raises
+    :class:`FrameTooLarge` when the element does not fit.
+    """
+    try:
+        _need(buf, off, 1)
+        end = _r_encode(elem, buf, off + 1)
+        buf[off : off + 1] = b"R"
+        return end
+    except _NotRaw:
+        b = encode_element(elem)
+        _need(buf, off, len(b))
+        buf[off : off + len(b)] = b
+        return off + len(b)
+
+
+def encode_elements_into(elems: List[Element], buf: memoryview) -> int:
+    """Write an :func:`encode_elements`-layout frame directly into ``buf``.
+
+    Returns the frame length.  The layout is identical to
+    :func:`encode_elements` (``<u32 count> (<u32 len> <element>)*``) so
+    :func:`decode_elements` reads either; only the per-element tag differs
+    (``R`` where representable).  Raises :class:`FrameTooLarge` when the
+    frame overflows ``buf`` — callers fall back to the inline path.
+    """
+    _need(buf, 0, 4)
+    struct.pack_into("<I", buf, 0, len(elems))
+    off = 4
+    for e in elems:
+        _need(buf, off, 4)
+        end = encode_element_into(e, buf, off + 4)
+        struct.pack_into("<I", buf, off, end - off - 4)
+        off = end
+    return off
+
+
+def copy_element(elem: Element) -> Element:
+    """Deep-copy any buffer-borrowing ndarray views out of an element.
+
+    Used by consumers of zero-copy frames that need the element to outlive
+    the underlying ring slot lease.
+    """
+
+    def leaf(x: Any) -> Any:
+        if isinstance(x, np.ndarray) and not x.flags.owndata:
+            return np.array(x, copy=True)
+        return x
+
+    return map_structure(leaf, elem)
 
 
 def encode_elements(elems: List[Element], codec: str = "msgpack") -> bytes:
@@ -98,15 +341,20 @@ def encode_elements(elems: List[Element], codec: str = "msgpack") -> bytes:
     return b"".join(parts)
 
 
-def decode_elements(data: bytes) -> List[Element]:
-    """Inverse of :func:`encode_elements`."""
-    (count,) = struct.unpack_from("<I", data, 0)
+def decode_elements(data: Any) -> List[Element]:
+    """Inverse of :func:`encode_elements` / :func:`encode_elements_into`.
+
+    Accepts any bytes-like buffer.  Over a ``memoryview``, ``R``-tagged
+    elements decode into views that borrow the buffer (zero copy).
+    """
+    mv = data if isinstance(data, memoryview) else memoryview(data)
+    (count,) = struct.unpack_from("<I", mv, 0)
     off = 4
     out: List[Element] = []
     for _ in range(count):
-        (n,) = struct.unpack_from("<I", data, off)
+        (n,) = struct.unpack_from("<I", mv, off)
         off += 4
-        out.append(decode_element(data[off : off + n]))
+        out.append(decode_element(mv[off : off + n]))
         off += n
     return out
 

@@ -1,0 +1,77 @@
+"""Process/shm-lifecycle true negatives: daemon, joined, and unlinked."""
+import multiprocessing
+from multiprocessing import shared_memory
+
+
+class DaemonPool:
+    def __init__(self):
+        # daemon=True: terminated with the parent, no join required
+        self._child = multiprocessing.Process(target=self._run, daemon=True)
+
+    def start(self):
+        self._child.start()
+
+    def _run(self):
+        pass
+
+
+class JoinedPool:
+    def __init__(self):
+        self._child = multiprocessing.Process(target=self._run)
+
+    def start(self):
+        self._child.start()
+
+    def stop(self):
+        # the shutdown path joins the child: no T003
+        self._child.join()
+
+    def _run(self):
+        pass
+
+
+class LocalJoin:
+    def run_once(self):
+        # local child joined in the same function: no T003
+        p = multiprocessing.Process(target=self._run)
+        p.start()
+        p.join()
+
+    def _run(self):
+        pass
+
+
+class Ring:
+    def __init__(self, size):
+        self._shm = shared_memory.SharedMemory(create=True, size=size)
+
+    def stop(self):
+        # unlink on the shutdown path: no T004
+        self._shm.close()
+        self._shm.unlink()
+
+
+def make_segment(size):
+    # module-level creation, unlinked in the same function: no T004
+    seg = shared_memory.SharedMemory(create=True, size=size)
+    try:
+        return bytes(seg.buf[:8])
+    finally:
+        seg.close()
+        seg.unlink()
+
+
+class EscapingRing:
+    """The segment handle escapes the creating classmethod; the group's
+    ``unlink`` path (on the wrapped attribute) still counts: no T004."""
+
+    def __init__(self, shm):
+        self._shm = shm
+
+    @classmethod
+    def create(cls, size):
+        shm = shared_memory.SharedMemory(create=True, size=size)
+        return cls(shm)
+
+    def unlink(self):
+        self._shm.unlink()

@@ -1,0 +1,35 @@
+"""Process/shm-lifecycle true positives: T003 and T004."""
+import multiprocessing
+from multiprocessing import shared_memory
+
+
+class Pool:
+    def __init__(self):
+        # T003: neither daemon=True nor joined anywhere in the class —
+        # a non-daemon child blocks the parent's atexit join forever
+        self._child = multiprocessing.Process(target=self._run)
+
+    def start(self):
+        self._child.start()
+
+    def _run(self):
+        pass
+
+
+class InlineSpawner:
+    def kick(self):
+        # T003 (anonymous): inline spawn, never assigned, never joined
+        multiprocessing.Process(target=self._run).start()
+
+    def _run(self):
+        pass
+
+
+class Ring:
+    def __init__(self, size):
+        # T004: segment created but the class never unlinks anything —
+        # the /dev/shm name outlives the process
+        self._shm = shared_memory.SharedMemory(create=True, size=size)
+
+    def close(self):
+        self._shm.close()  # close drops the mapping, NOT the name

@@ -76,6 +76,12 @@ class ChaosRun:
 
 def chaos_orchestrator(crash_points: CrashPoints, **kw: Any) -> LocalOrchestrator:
     kw.setdefault("num_workers", 2)
+    # REPRO_CHAOS_WORKER_PROCESSES=N reruns every scenario with the
+    # process-pool pipeline executor (crash injection must hold there too)
+    kw.setdefault(
+        "worker_processes",
+        int(os.environ.get("REPRO_CHAOS_WORKER_PROCESSES", "0")),
+    )
     kw.setdefault("journal", True)
     kw.setdefault("heartbeat_timeout", 0.8)
     kw.setdefault("gc_interval", 0.1)

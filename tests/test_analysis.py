@@ -141,6 +141,26 @@ def test_thread_rules_true_negative():
     assert not {"T001", "T002"} & codes(run_on("thread_tn"))
 
 
+# -- process / shared-memory lifecycle ----------------------------------------
+def test_process_rules_true_positive():
+    found = run_on("process_tp")
+    assert {"T003", "T004"} <= codes(found)
+    t3 = [f for f in found if f.code == "T003"]
+    assert any("self._child" in f.message for f in t3)
+    assert any("<anonymous>" in f.message for f in t3)
+    assert any(
+        f.code == "T004" and "self._shm" in f.message for f in found
+    )
+    # a Process leak is T003, never misfiled as a thread T001
+    assert not any(f.code == "T001" for f in found)
+
+
+def test_process_rules_true_negative():
+    # daemon children, joined children, and unlinked segments (including a
+    # handle that escapes its creating classmethod) are all clean
+    assert not {"T001", "T002", "T003", "T004"} & codes(run_on("process_tn"))
+
+
 # -- suppressions + baseline -------------------------------------------------
 def test_inline_suppression_accepts_findings(tmp_path):
     new, accepted = analyze(
